@@ -1,0 +1,111 @@
+"""Ablations beyond the paper's headline figures.
+
+1. **DBSC criticality threshold theta** (paper §4.1 "single-head"):
+   sweep theta ∈ {0.3 … 0.9} — lower theta marks more experts critical
+   (more LSB traffic, higher precision); theta=1.0 degenerates to
+   uniform low-bit.
+2. **LSB keep fraction in PCW** (paper §4.3 ties it to the single-head
+   ratio): sweep lsb_keep_frac.
+3. **Slice-aware vs single-LRU cache** (paper §4.1's heterogeneous
+   management): same DBSC routing, cache with/without the LSB
+   low-priority segment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import CsvSink, report, train_or_load
+from repro.core.amat import MatConfig
+from repro.core.engine import EngineConfig, SliceMoEEngine
+from repro.models.moe import RoutingPolicy
+
+ARCH = "qwen15-moe-repro"
+STEPS = 20
+
+
+def run(cfg, params, toks, **over):
+    base = dict(mat=MatConfig(8, 4), cache_bytes=4e6,
+                policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc"),
+                miss_rate_target=0.05, warmup="pcw", max_seq=96)
+    base.update(over)
+    eng = SliceMoEEngine(cfg, params, EngineConfig(**base))
+    logits = eng.prefill(toks)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+    _, m = eng.decode(first, STEPS)
+    d = m["decode_totals"]
+    s = m["cache_stats"]
+    return {
+        "energy_mj": d["total_energy_j"] * 1e3,
+        "latency_ms": d["total_latency_s"] * 1e3,
+        "lsb_fetches": s["lsb_hits"] + s["lsb_misses"],
+        "miss_rate": s.miss_rate if hasattr(s, "miss_rate")
+        else (s["msb_misses"] + s["lsb_misses"])
+        / max(s["msb_hits"] + s["msb_misses"]
+              + s["lsb_hits"] + s["lsb_misses"], 1),
+    }
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.perf_counter()
+    cfg, params = train_or_load(ARCH)
+    toks = jax.random.randint(jax.random.PRNGKey(21), (1, 48), 0,
+                              cfg.vocab_size)
+    sink = CsvSink("ablations", ["ablation", "setting", "energy_mj",
+                                 "latency_ms", "lsb_fetches", "miss_rate"])
+
+    thetas = (0.3, 0.5, 0.7, 0.9) if not quick else (0.5,)
+    for th in thetas:
+        r = run(cfg, params, toks,
+                policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc",
+                                     theta=th))
+        sink.add("theta", th, round(r["energy_mj"], 4),
+                 round(r["latency_ms"], 4), r["lsb_fetches"],
+                 round(r["miss_rate"], 4))
+
+    fracs = (0.05, 0.125, 0.3) if not quick else (0.125,)
+    for fr in fracs:
+        r = run(cfg, params, toks, lsb_keep_frac=fr)
+        sink.add("lsb_keep_frac", fr, round(r["energy_mj"], 4),
+                 round(r["latency_ms"], 4), r["lsb_fetches"],
+                 round(r["miss_rate"], 4))
+
+    for fused in (False, True):
+        r = run(cfg, params, toks, fused_slices=fused)
+        sink.add("slice_aware_cache", not fused, round(r["energy_mj"], 4),
+                 round(r["latency_ms"], 4), r["lsb_fetches"],
+                 round(r["miss_rate"], 4))
+
+    # Prefetching baseline (paper §2.1): flash traffic vs cache-aware.
+    r_pf = run(cfg, params, toks,
+               policy=RoutingPolicy(kind="topk", slice_mode="highbit"),
+               fused_slices=True, warmup="empty", miss_rate_target=None,
+               prefetch_top_m=4)
+    sink.add("prefetch_topk", 4, round(r_pf["energy_mj"], 4),
+             round(r_pf["latency_ms"], 4), r_pf["lsb_fetches"],
+             round(r_pf["miss_rate"], 4))
+
+    # HOBBIT-style duplicated mixed precision vs AMAT Matryoshka storage
+    # (paper §2.2): bytes to support {high, low} expert precisions.
+    probe = SliceMoEEngine(cfg, params, EngineConfig(max_seq=96))
+    st = probe.store
+    matryoshka = st.highbit_expert_bytes()
+    duplicated = st.highbit_expert_bytes() + st.msb_bytes_per_expert
+    sink.add("storage_per_expert_bytes", "amat_matryoshka",
+             round(matryoshka), "", "", "")
+    sink.add("storage_per_expert_bytes", "hobbit_duplicated",
+             round(duplicated), "", "", "")
+
+    path = sink.flush()
+    us = (time.perf_counter() - t0) * 1e6
+    sliced = [r for r in sink.rows if r[0] == "slice_aware_cache"]
+    gain = sliced[1][2] / max(sliced[0][2], 1e-12) if len(sliced) == 2 else 0
+    report("ablations", us, f"fused/sliced_energy={gain:.2f}x;csv={path}")
+
+
+if __name__ == "__main__":
+    main()

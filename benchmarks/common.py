@@ -1,0 +1,108 @@
+"""Shared benchmark infrastructure: trained-model cache, CSV sink, timers."""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt as CKPT
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim import adamw as OPT
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+BENCH_DIR = os.path.join(RESULTS, "bench")
+TRAINED_DIR = os.path.join(RESULTS, "trained")
+
+
+def train_or_load(arch: str, *, steps: int = 80, seq: int = 64,
+                  batch: int = 8, lr: float = 2e-3, seed: int = 0):
+    """Briefly train the repro-scale model on synthetic data (cached).
+
+    The SliceMoE experiments need non-degenerate routing distributions;
+    a fresh-init router routes near-uniformly, a briefly-trained one
+    develops the skewed, input-dependent gating the paper exploits.
+    """
+    cfg = get_config(arch)
+    path = os.path.join(TRAINED_DIR, f"{arch}_s{steps}")
+    if os.path.exists(os.path.join(path, "manifest.msgpack")):
+        params = CKPT.restore(path)["params"]
+        return cfg, jax.tree_util.tree_map(jnp.asarray, params)
+
+    from repro.launch.train import train_loop
+    opt_cfg = OPT.AdamWConfig(lr=lr, total_steps=steps,
+                              warmup_steps=max(steps // 10, 1))
+    params, _, _ = train_loop(cfg, steps=steps, global_batch=batch,
+                              seq_len=seq, opt_cfg=opt_cfg,
+                              log_every=max(steps // 4, 1), seed=seed)
+    CKPT.save(path, {"params": params}, step=steps)
+    return cfg, params
+
+
+def eval_batches(cfg, *, n_batches: int = 4, batch: int = 4, seq: int = 64,
+                 seed: int = 1234):
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                  global_batch=batch, seed=seed))
+    return [data.sample_batch(10_000 + i, batch) for i in range(n_batches)]
+
+
+def synthetic_ppl(params, cfg, batches) -> float:
+    """Perplexity on held-out synthetic data."""
+    from repro.models.model import lm_loss
+
+    losses = []
+    for full in batches:
+        toks = jnp.asarray(full[:, :-1])
+        labels = jnp.asarray(full[:, 1:])
+        loss, _ = lm_loss(params, cfg, toks, labels, aux_weight=0.0)
+        losses.append(float(loss))
+    return float(np.exp(np.mean(losses)))
+
+
+class CsvSink:
+    def __init__(self, name: str, header: list[str]):
+        os.makedirs(BENCH_DIR, exist_ok=True)
+        self.path = os.path.join(BENCH_DIR, name + ".csv")
+        self.header = header
+        self.rows: list[list] = []
+
+    def add(self, *row) -> None:
+        assert len(row) == len(self.header)
+        self.rows.append(list(row))
+
+    def flush(self) -> str:
+        with open(self.path, "w") as f:
+            f.write(",".join(self.header) + "\n")
+            for r in self.rows:
+                f.write(",".join(str(x) for x in r) + "\n")
+        return self.path
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (blocks on jax arrays)."""
+    def run():
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready()
+            if hasattr(x, "block_until_ready") else x, out)
+        return out
+
+    for _ in range(warmup):
+        run()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def report(name: str, us_per_call: float, derived: str) -> None:
+    """The required ``name,us_per_call,derived`` CSV line to stdout."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,102 @@
+"""Paper Fig. 10 (+Fig. 3): cache warmup strategies at the prefill→decode
+transition, and the prefill-hotness → early-decode carryover that makes
+PCW work.
+
+Initial states compared: empty / last-layer-only / random / PCW(hot).
+Metrics: early-decode energy & latency (first 10 steps, where cold misses
+dominate) and whole-decode totals, plus the Spearman-style rank
+correlation between prefill expert hotness and early-decode expert usage
+(the Fig. 3 observation, reported as `hotness_corr`).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CsvSink, report, train_or_load
+from repro.core.amat import MatConfig
+from repro.core.engine import EngineConfig, SliceMoEEngine
+from repro.models.moe import RoutingPolicy
+
+ARCH = "deepseek-v2-lite-repro"
+DECODE_STEPS = 24
+EARLY = 10
+PROMPT = 48
+
+
+def run_init(cfg, params, toks, warmup: str, cache_bytes: float):
+    ecfg = EngineConfig(
+        mat=MatConfig(8, 4), cache_bytes=cache_bytes,
+        policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc"),
+        miss_rate_target=0.05, warmup=warmup, max_seq=96)
+    eng = SliceMoEEngine(cfg, params, ecfg)
+
+    logits = eng.prefill(toks)
+    prefill_hot = eng.tracker.hotness().copy()
+
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+    _, metrics = eng.decode(first, DECODE_STEPS)
+    steps = metrics["per_step"]
+    early_e = sum(s["total_energy_j"] for s in steps[:EARLY])
+    early_l = sum(s["total_latency_s"] for s in steps[:EARLY])
+    tot = metrics["decode_totals"]
+
+    decode_hot = eng.tracker.hotness()
+    corr = _rank_corr(prefill_hot.reshape(-1), decode_hot.reshape(-1))
+    return dict(early_energy=early_e, early_latency=early_l,
+                total_energy=tot["total_energy_j"],
+                total_latency=tot["total_latency_s"],
+                hotness_corr=corr,
+                misses=metrics["cache_stats"]["msb_misses"]
+                + metrics["cache_stats"]["lsb_misses"])
+
+
+def _rank_corr(a: np.ndarray, b: np.ndarray) -> float:
+    ra = np.argsort(np.argsort(a)).astype(np.float64)
+    rb = np.argsort(np.argsort(b)).astype(np.float64)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra * ra).sum() * (rb * rb).sum())
+    return float((ra * rb).sum() / max(denom, 1e-12))
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.perf_counter()
+    cfg, params = train_or_load(ARCH)
+    toks = jax.random.randint(jax.random.PRNGKey(11), (1, PROMPT), 0,
+                              cfg.vocab_size)
+    probe = SliceMoEEngine(cfg, params, EngineConfig(max_seq=96))
+    cache_bytes = 0.3 * probe.store.total_bytes()
+
+    sink = CsvSink("fig10_warmup",
+                   ["init_state", "early_energy_j", "early_latency_s",
+                    "total_energy_j", "total_latency_s", "misses",
+                    "hotness_corr"])
+    inits = ("empty", "last_layer", "random", "pcw") if not quick \
+        else ("empty", "pcw")
+    results = {}
+    for init in inits:
+        r = run_init(cfg, params, toks, init, cache_bytes)
+        results[init] = r
+        sink.add(init, f"{r['early_energy']:.5e}",
+                 f"{r['early_latency']:.5e}", f"{r['total_energy']:.5e}",
+                 f"{r['total_latency']:.5e}", r["misses"],
+                 round(r["hotness_corr"], 3))
+
+    path = sink.flush()
+    us = (time.perf_counter() - t0) * 1e6
+    gain = results["empty"]["early_energy"] / \
+        max(results["pcw"]["early_energy"], 1e-12)
+    speed = results["empty"]["early_latency"] / \
+        max(results["pcw"]["early_latency"], 1e-12)
+    report("fig10_warmup", us,
+           f"pcw_vs_empty:E{gain:.2f}x/S{speed:.2f}x;"
+           f"hotness_corr={results['pcw']['hotness_corr']:.2f};csv={path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Paper Fig. 9: decode-stage energy gain & speed-up across routing/caching
+schemes at three cache capacities, on both eval models.
+
+Schemes (matched to the paper's comparison):
+  cache_prior_highbit — SOTA baseline: Cache-Prior routing, whole high-bit
+                        experts in an LRU cache,
+  cumsum              — cumulative-threshold routing (accuracy-first,
+                        locality-blind; "prohibitively expensive"),
+  dbsc                — bit-sliced caching + AMAT, no warmup,
+  dbsc_pcw            — + predictive cache warmup.
+
+Reported: decode-stage energy (J) and latency (s) from the deterministic
+cost model (Fig. 7 constants), normalized per model to the best scheme.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CsvSink, report, train_or_load
+from repro.core.amat import MatConfig
+from repro.core.engine import EngineConfig, SliceMoEEngine
+from repro.models.moe import RoutingPolicy
+
+MODELS = ("deepseek-v2-lite-repro", "qwen15-moe-repro")
+DECODE_STEPS = 24
+PROMPT = 48
+
+SCHEMES = {
+    "cache_prior_highbit": dict(
+        policy=RoutingPolicy(kind="cache_prior", slice_mode="highbit"),
+        fused_slices=True, warmup="empty"),
+    "buddy_highbit": dict(
+        policy=RoutingPolicy(kind="buddy", slice_mode="highbit"),
+        fused_slices=True, warmup="empty"),
+    "prefetch_highbit": dict(
+        policy=RoutingPolicy(kind="topk", slice_mode="highbit"),
+        fused_slices=True, warmup="empty", prefetch_top_m=4),
+    "cumsum": dict(
+        policy=RoutingPolicy(kind="cumsum", slice_mode="highbit",
+                             cumsum_tau=0.9),
+        fused_slices=True, warmup="empty"),
+    "dbsc": dict(
+        policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc"),
+        fused_slices=False, warmup="empty"),
+    "dbsc_pcw": dict(
+        policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc"),
+        fused_slices=False, warmup="pcw"),
+}
+
+
+def run_one(cfg, params, toks, cache_bytes, scheme_kw):
+    ecfg = EngineConfig(mat=MatConfig(8, 4), cache_bytes=cache_bytes,
+                        miss_rate_target=0.05, max_seq=96, **scheme_kw)
+    eng = SliceMoEEngine(cfg, params, ecfg)
+    logits = eng.prefill(toks)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+    _, metrics = eng.decode(first, DECODE_STEPS)
+    d = metrics["decode_totals"]
+    return d["total_energy_j"], d["total_latency_s"], \
+        metrics["cache_stats"]["msb_misses"]
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.perf_counter()
+    sink = CsvSink("fig9_energy",
+                   ["model", "cache_frac", "scheme", "energy_j",
+                    "latency_s", "msb_misses", "energy_gain_vs_highbit",
+                    "speedup_vs_highbit"])
+    models = MODELS if not quick else MODELS[:1]
+    fracs = (0.15, 0.3, 0.6) if not quick else (0.3,)
+    headline = []
+
+    for arch in models:
+        cfg, params = train_or_load(arch)
+        toks = jax.random.randint(jax.random.PRNGKey(9), (1, PROMPT), 0,
+                                  cfg.vocab_size)
+        probe = SliceMoEEngine(cfg, params, EngineConfig(max_seq=96))
+        total = probe.store.total_bytes()
+        for frac in fracs:
+            results = {}
+            for name, kw in SCHEMES.items():
+                e, lat, miss = run_one(cfg, params, toks, frac * total, kw)
+                results[name] = (e, lat, miss)
+            e_ref, l_ref, _ = results["cache_prior_highbit"]
+            for name, (e, lat, miss) in results.items():
+                sink.add(arch, frac, name, f"{e:.5e}", f"{lat:.5e}", miss,
+                         round(e_ref / max(e, 1e-12), 3),
+                         round(l_ref / max(lat, 1e-12), 3))
+            e_d, l_d, _ = results["dbsc_pcw"]
+            headline.append((arch, e_ref / max(e_d, 1e-12),
+                             l_ref / max(l_d, 1e-12)))
+
+    path = sink.flush()
+    us = (time.perf_counter() - t0) * 1e6
+    h = ";".join(f"{a}:E{g:.2f}x/S{s:.2f}x" for a, g, s in headline[:2])
+    report("fig9_energy", us, h + f";csv={path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Micro-benchmarks of the Pallas kernels (interpret mode on CPU — the
+numbers gauge the *reference path*; real VMEM-tiled timings need a TPU)
+plus the pure-jnp oracle for comparison."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import CsvSink, report, time_call
+from repro.kernels.amat_matmul.ops import amat_matmul_qt
+from repro.kernels.amat_matmul.ref import amat_matmul_ref
+from repro.kernels.expert_matmul.ops import expert_matmul_qt
+from repro.kernels.expert_matmul.ref import expert_matmul_ref
+from repro.quant.groupquant import quantize
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.perf_counter()
+    sink = CsvSink("kernels_micro", ["kernel", "shape", "us_per_call"])
+    key = jax.random.PRNGKey(0)
+
+    M, K, N = (64, 256, 128) if quick else (128, 512, 256)
+    x = jax.random.normal(key, (M, K))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N)) * 0.1
+    qt = quantize(w, bits=8, group_size=32, asymmetric=True)
+
+    us_k = time_call(lambda: amat_matmul_qt(x, qt, shift=4, mode="low"))
+    us_r = time_call(lambda: jax.jit(
+        lambda: amat_matmul_ref(x, qt.codes, qt.scales, qt.zero_points,
+                                group_size=32, shift=4, mode="low"))())
+    sink.add("amat_matmul_pallas_interp", f"{M}x{K}x{N}", round(us_k, 1))
+    sink.add("amat_matmul_ref_jit", f"{M}x{K}x{N}", round(us_r, 1))
+
+    E, C = (4, 32) if quick else (8, 64)
+    xe = jax.random.normal(key, (E, C, K))
+    we = jax.random.normal(jax.random.fold_in(key, 2), (E, K, N)) * 0.1
+    qte = quantize(we, bits=8, group_size=32, asymmetric=True)
+    ul = jnp.arange(E) % 2 == 0
+    us_e = time_call(lambda: expert_matmul_qt(xe, qte, ul, shift=4))
+    us_er = time_call(lambda: jax.jit(
+        lambda: expert_matmul_ref(xe, qte.codes, qte.scales,
+                                  qte.zero_points, ul, group_size=32,
+                                  shift=4))())
+    sink.add("expert_matmul_pallas_interp", f"{E}x{C}x{K}x{N}",
+             round(us_e, 1))
+    sink.add("expert_matmul_ref_jit", f"{E}x{C}x{K}x{N}", round(us_er, 1))
+
+    path = sink.flush()
+    us = (time.perf_counter() - t0) * 1e6
+    report("kernels_micro", us,
+           f"amat={us_k:.0f}us;expert={us_e:.0f}us;csv={path}")
+
+
+if __name__ == "__main__":
+    main()

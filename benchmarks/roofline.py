@@ -1,0 +1,80 @@
+"""Roofline aggregation: read results/dryrun/*.json into the §Roofline table.
+
+Single-pod (16x16) numbers feed the table; multi-pod rows prove the pod
+axis shards.  For each (arch, shape): the three terms in seconds, the
+dominant term, MODEL_FLOPS/HLO_FLOPS usefulness ratio, and bytes/chip.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import CsvSink, report
+from repro.configs.base import ARCH_IDS, SHAPES
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def load_all(mesh: str = "single") -> dict:
+    out = {}
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            p = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{mesh}.json")
+            if os.path.exists(p):
+                with open(p) as f:
+                    out[(arch, shape)] = json.load(f)
+    return out
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.perf_counter()
+    sink = CsvSink("roofline",
+                   ["arch", "shape", "mesh", "status", "compute_s",
+                    "memory_s", "collective_s", "dominant",
+                    "useful_flops_ratio", "bytes_per_chip_gb",
+                    "compile_s"])
+    n_ok = n_skip = n_missing = 0
+    dominants = {}
+    for mesh in ("single", "multi"):
+        recs = load_all(mesh)
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                rec = recs.get((arch, shape))
+                if rec is None:
+                    n_missing += 1
+                    continue
+                if rec["status"] == "skipped":
+                    if mesh == "single":
+                        n_skip += 1
+                    sink.add(arch, shape, mesh, "skipped", "", "", "", "",
+                             "", "", "")
+                    continue
+                if rec["status"] != "ok":
+                    sink.add(arch, shape, mesh, rec["status"], "", "", "",
+                             "", "", "", "")
+                    continue
+                if mesh == "single":
+                    n_ok += 1
+                rl = rec["roofline"]
+                if mesh == "single":
+                    dominants[rl["dominant"]] = \
+                        dominants.get(rl["dominant"], 0) + 1
+                sink.add(arch, shape, mesh, "ok",
+                         f"{rl['compute_s']:.3e}", f"{rl['memory_s']:.3e}",
+                         f"{rl['collective_s']:.3e}",
+                         rl["dominant"].replace("_s", ""),
+                         round(rl["useful_flops_ratio"] or 0, 3),
+                         round(rl["bytes_per_chip"] / 2**30, 3),
+                         rec.get("compile_s", ""))
+    path = sink.flush()
+    us = (time.perf_counter() - t0) * 1e6
+    report("roofline", us,
+           f"ok={n_ok}/40;skipped={n_skip};missing={n_missing};"
+           f"dominant={dominants};csv={path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+
+``python -m benchmarks.run [--quick] [--only NAME] [--inline]``
+
+Each benchmark runs in its own subprocess (XLA's CPU JIT keeps every
+compiled executable resident; a single process running all benches
+exhausts memory on the 1-core container).  ``--only`` executes one
+benchmark inline.  Prints one ``name,us_per_call,derived`` CSV line per
+benchmark; detailed CSVs land in results/bench/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import traceback
+
+BENCH_NAMES = ["table1_amat", "fig8_accuracy", "fig9_energy",
+               "fig10_warmup", "ablations", "roofline", "kernels_micro"]
+
+
+def _run_inline(name: str, quick: bool) -> None:
+    import importlib
+
+    mod = importlib.import_module(f"benchmarks.{name}")
+    mod.main(quick=quick)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps for CI-speed runs")
+    ap.add_argument("--only", default=None, choices=BENCH_NAMES)
+    ap.add_argument("--inline", action="store_true",
+                    help="run all benches in this process (debug only)")
+    args = ap.parse_args()
+
+    if args.only:
+        print("name,us_per_call,derived")
+        _run_inline(args.only, args.quick)
+        return
+
+    print("name,us_per_call,derived", flush=True)
+    failures = []
+    for name in BENCH_NAMES:
+        if args.inline:
+            try:
+                _run_inline(name, args.quick)
+            except Exception as e:          # noqa: BLE001
+                failures.append(name)
+                print(f"{name},-1,ERROR:{e!r}", flush=True)
+                traceback.print_exc(file=sys.stderr)
+            continue
+        cmd = [sys.executable, "-m", "benchmarks.run", "--only", name]
+        if args.quick:
+            cmd.append("--quick")
+        r = subprocess.run(cmd, env={**os.environ},
+                           capture_output=True, text=True)
+        out = [ln for ln in r.stdout.splitlines()
+               if ln.startswith(name + ",")]
+        if r.returncode != 0 or not out:
+            failures.append(name)
+            print(f"{name},-1,ERROR(subprocess rc={r.returncode})",
+                  flush=True)
+            sys.stderr.write(r.stderr[-2000:])
+        else:
+            print(out[-1], flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

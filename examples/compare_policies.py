@@ -1,0 +1,87 @@
+"""Design-space tour: routing x precision x warmup on one model.
+
+Reproduces the paper's core comparison as a single table — how each
+SliceMoE component moves decode energy/latency/fidelity:
+
+  topk/highbit/empty        -> naive baseline
+  cache_prior/highbit/empty -> Cache-Prior (SOTA baseline)
+  cache_prior/lowbit/empty  -> uniform low-bit (accuracy ceiling)
+  cache_prior/dbsc/empty    -> + bit-sliced caching  (DBSC+AMAT)
+  cache_prior/dbsc/pcw      -> + predictive warmup  (full SliceMoE)
+
+Run:  PYTHONPATH=src python examples/compare_policies.py
+"""
+
+import os as _os
+import sys as _sys
+
+_root = _os.path.join(_os.path.dirname(_os.path.abspath(__file__)), "..")
+for _p in (_os.path.join(_root, "src"), _root):
+    if _p not in _sys.path:
+        _sys.path.insert(0, _p)
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import train_or_load  # noqa: E402
+from repro.core.amat import MatConfig
+from repro.core.engine import EngineConfig, SliceMoEEngine
+from repro.models.model import decode_step, prefill
+from repro.models.moe import RoutingPolicy
+
+STEPS = 24
+
+CONFIGS = [
+    ("topk/highbit/empty", "topk", "highbit", "empty", True),
+    ("cache_prior/highbit/empty", "cache_prior", "highbit", "empty", True),
+    ("cache_prior/lowbit/empty", "cache_prior", "lowbit", "empty", False),
+    ("cache_prior/dbsc/empty", "cache_prior", "dbsc", "empty", False),
+    ("cache_prior/dbsc/pcw", "cache_prior", "dbsc", "pcw", False),
+]
+
+
+def main():
+    cfg, params = train_or_load("deepseek-v2-lite-repro")
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 48), 0,
+                              cfg.vocab_size)
+
+    # float-model oracle trajectory for fidelity
+    logits, cache, _ = prefill(params, cfg, toks, max_seq=96)
+    token = jnp.argmax(logits, -1).astype(jnp.int32)
+    oracle = []
+    for _ in range(STEPS):
+        oracle.append(int(token[0]))
+        logits, cache, _ = decode_step(params, cfg, token, cache)
+        token = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    probe = SliceMoEEngine(cfg, params, EngineConfig(max_seq=96))
+    cache_bytes = 0.3 * probe.store.total_bytes()
+
+    print(f"{'config':32s} {'energy mJ':>10s} {'latency ms':>11s} "
+          f"{'miss%':>6s} {'top1':>5s}")
+    for name, kind, mode, warm, fused in CONFIGS:
+        eng = SliceMoEEngine(cfg, params, EngineConfig(
+            mat=MatConfig(8, 4), cache_bytes=cache_bytes,
+            policy=RoutingPolicy(kind=kind, slice_mode=mode),
+            miss_rate_target=0.05, warmup=warm, max_seq=96,
+            fused_slices=fused))
+        lg = eng.prefill(toks)
+        first = jnp.argmax(lg, -1).astype(jnp.int32)
+        out, metrics = eng.decode(first, STEPS)
+        d = metrics["decode_totals"]
+        s = metrics["cache_stats"]
+        miss = (s["msb_misses"] + s["lsb_misses"]) / max(s["msb_hits"]
+                + s["msb_misses"] + s["lsb_hits"] + s["lsb_misses"], 1)
+        agree = np.mean([a == b for a, b
+                         in zip(np.asarray(out[0]).tolist(), oracle)])
+        print(f"{name:32s} {d['total_energy_j'] * 1e3:10.3f} "
+              f"{d['total_latency_s'] * 1e3:11.3f} {miss * 100:6.1f} "
+              f"{agree:5.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Read the dry-run artifacts and print the roofline story per arch.
+
+For each architecture: the dominant bottleneck per input shape, the
+hillclimb variants available for it, and (when variant artifacts exist)
+the baseline -> optimized deltas.  A compact view of EXPERIMENTS.md
+§Roofline/§Perf straight from the JSONs.
+
+Run:  python examples/roofline_report.py [--mesh single]
+"""
+
+import os as _os
+import sys as _sys
+
+_root = _os.path.join(_os.path.dirname(_os.path.abspath(__file__)), "..")
+for _p in (_os.path.join(_root, "src"), _root):
+    if _p not in _sys.path:
+        _sys.path.insert(0, _p)
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs.base import ARCH_IDS, SHAPES
+
+DRYRUN = os.path.join(_root, "results", "dryrun")
+
+
+def load(arch, shape, mesh, variant=None):
+    suffix = f"__{variant}" if variant else ""
+    p = os.path.join(DRYRUN, f"{arch}__{shape}__{mesh}{suffix}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+
+    for arch in ARCH_IDS:
+        print(f"\n=== {arch} ===")
+        for shape in SHAPES:
+            rec = load(arch, shape, args.mesh)
+            if rec is None:
+                print(f"  {shape:12s} (no artifact — run dryrun --all)")
+                continue
+            if rec["status"] == "skipped":
+                print(f"  {shape:12s} SKIP: {rec['reason'][:60]}...")
+                continue
+            rl = rec["roofline"]
+            dom = rl["dominant"].replace("_s", "")
+            line = (f"  {shape:12s} {dom:10s} "
+                    f"c={rl['compute_s']:.1e} m={rl['memory_s']:.1e} "
+                    f"x={rl['collective_s']:.1e}")
+            # any variant artifacts?
+            pat = os.path.join(DRYRUN,
+                               f"{arch}__{shape}__{args.mesh}__*.json")
+            best = None
+            for vp in glob.glob(pat):
+                with open(vp) as f:
+                    v = json.load(f)
+                if v["status"] != "ok":
+                    continue
+                vd = max(v["roofline"][t] for t in
+                         ("compute_s", "memory_s", "collective_s"))
+                if best is None or vd < best[0]:
+                    best = (vd, v["variant"])
+            if best is not None:
+                base_dom = max(rl[t] for t in
+                               ("compute_s", "memory_s", "collective_s"))
+                gain = base_dom / max(best[0], 1e-15)
+                line += f"   [best variant: {best[1]} -> {gain:.1f}x]"
+            print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Calibration-Free Asymmetric Matryoshka Quantization (AMAT) — paper §4.2.
+
+One high-bit asymmetric group-quantized tensor stores *both* precisions.
+The low-bit representation is obtained by truncating the code **and** the
+zero-point by the same bit offset::
+
+    shift   = b_high - b_low
+    q_low   = floor(q_high / 2**shift)      # MSB slice
+    zp_low  = floor(zp_high / 2**shift)
+    s_low   = s_high * 2**shift             # implied by the bit offset
+
+so ``(q_low - zp_low) * s_low`` re-centers the low-bit range on the
+asymmetric weight distribution.  The LSB slice ``q_high & (2**shift - 1)``
+is the *upgrade* payload: caching it alongside the MSB slice losslessly
+reconstructs the high-bit code via ``(msb << shift) | lsb``.
+
+Baselines reproduced for Table 1:
+
+* ``base``   — independent low-bit quantization (the quality ceiling).
+* ``trunc``  — *naive* truncation: the code is shifted but the metadata
+  (scale, zero-point) is left at its high-bit values.  Under symmetric
+  quant this shrinks every weight by ``2**shift``; under asymmetric quant
+  the un-truncated zero-point wrecks the dequant entirely (paper: PPL
+  1e6-1e10 / nan).
+* ``amat``   — joint code+zp truncation (ours / the paper's).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.groupquant import QuantizedTensor, quantize, dequantize
+
+
+@dataclasses.dataclass(frozen=True)
+class MatConfig:
+    """A Matryoshka MAT(h, l) configuration, e.g. MAT84 = (8, 4)."""
+
+    high_bits: int
+    low_bits: int
+    group_size: int = 32
+
+    @property
+    def shift(self) -> int:
+        return self.high_bits - self.low_bits
+
+    @property
+    def name(self) -> str:
+        return f"MAT{self.high_bits}{self.low_bits}"
+
+
+MAT42 = MatConfig(4, 2)
+MAT63 = MatConfig(6, 3)
+MAT84 = MatConfig(8, 4)
+PAPER_CONFIGS = (MAT42, MAT63, MAT84)
+
+
+# --------------------------------------------------------------------------
+# AMAT construction
+# --------------------------------------------------------------------------
+def amat_quantize(w: jax.Array, cfg: MatConfig) -> QuantizedTensor:
+    """Quantize ``w`` at the *high* bit-width; the low-bit view is free."""
+    return quantize(w, bits=cfg.high_bits, group_size=cfg.group_size,
+                    asymmetric=True)
+
+
+@partial(jax.jit, static_argnames=("low_bits", "truncate_zp", "rescale"))
+def truncate(
+    qt: QuantizedTensor,
+    *,
+    low_bits: int,
+    truncate_zp: bool = True,
+    rescale: bool = True,
+) -> QuantizedTensor:
+    """Derive a low-bit QuantizedTensor from a high-bit one by truncation.
+
+    ``truncate_zp=True, rescale=True``  -> AMAT (the paper's scheme).
+    ``truncate_zp=False, rescale=False`` -> naive truncation baseline.
+    """
+    shift = qt.bits - low_bits
+    if shift < 0:
+        raise ValueError(f"cannot truncate {qt.bits}b -> {low_bits}b")
+    if shift == 0:
+        return qt
+    if qt.asymmetric:
+        codes = (qt.codes >> shift).astype(jnp.uint8)
+        zps = (qt.zero_points >> shift) if truncate_zp else qt.zero_points
+    else:
+        # arithmetic shift == floor division for int8
+        codes = (qt.codes.astype(jnp.int8) >> shift).astype(jnp.int8)
+        zps = qt.zero_points
+    scales = qt.scales * (2.0**shift) if rescale else qt.scales
+    return QuantizedTensor(codes, scales, zps, low_bits, qt.group_size,
+                           qt.asymmetric)
+
+
+# --------------------------------------------------------------------------
+# Bit-slice views (DBSC's storage primitive)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("shift",))
+def msb_slice(codes: jax.Array, shift: int) -> jax.Array:
+    """Top ``bits - shift`` bits of each code (the low-precision payload)."""
+    return (codes >> shift).astype(codes.dtype)
+
+
+@partial(jax.jit, static_argnames=("shift",))
+def lsb_slice(codes: jax.Array, shift: int) -> jax.Array:
+    """Bottom ``shift`` bits of each code (the precision-upgrade payload)."""
+    mask = (1 << shift) - 1
+    return (codes & mask).astype(codes.dtype)
+
+
+@partial(jax.jit, static_argnames=("shift",))
+def reconstruct(msb: jax.Array, lsb: jax.Array, shift: int) -> jax.Array:
+    """Lossless high-bit code from its two slices."""
+    return ((msb << shift) | lsb).astype(msb.dtype)
+
+
+# --------------------------------------------------------------------------
+# Dequantization paths
+# --------------------------------------------------------------------------
+def dequant_high(qt: QuantizedTensor) -> jax.Array:
+    """Full-precision path (MSB+LSB both resident)."""
+    return dequantize(qt)
+
+
+def dequant_low(qt: QuantizedTensor, cfg: MatConfig) -> jax.Array:
+    """MSB-only path (AMAT truncation)."""
+    return dequantize(truncate(qt, low_bits=cfg.low_bits))
+
+
+@partial(jax.jit, static_argnames=("shift",))
+def dequant_mixed(qt: QuantizedTensor, use_lsb: jax.Array, shift: int) -> jax.Array:
+    """Per-leading-index mixed dequantization.
+
+    ``use_lsb`` has shape ``qt.codes.shape[:use_lsb.ndim]`` (typically
+    ``(E,)`` for per-expert precision) and selects, per expert, the
+    high-bit (MSB+LSB) or the AMAT low-bit (MSB-only) dequantization.
+    This is the jittable compute path behind DBSC: a slice miss on the LSB
+    simply flips the corresponding ``use_lsb`` bit.
+    """
+    codes = qt.codes
+    *lead, K, N = codes.shape
+    G = K // qt.group_size
+    cg = codes.reshape(*lead, G, qt.group_size, N).astype(jnp.float32)
+    zp = qt.zero_points[..., :, None, :].astype(jnp.float32)
+    s = qt.scales[..., :, None, :]
+
+    w_hi = (cg - zp) * s
+    cl = jnp.floor(cg / (2.0**shift))
+    zl = jnp.floor(zp / (2.0**shift))
+    w_lo = (cl - zl) * (s * (2.0**shift))
+
+    sel = use_lsb.reshape(use_lsb.shape + (1,) * (w_hi.ndim - use_lsb.ndim))
+    w = jnp.where(sel, w_hi, w_lo)
+    return w.reshape(*lead, K, N)
+
+
+def slice_nbytes(shape, bits: int, group_size: int, *, which: str,
+                 shift: int) -> float:
+    """Storage cost of one slice of a quantized weight of ``shape``.
+
+    MSB slice carries the (bits - shift)-bit codes plus all group metadata
+    (scale fp16 + truncated zp); the LSB slice is codes-only (`shift` bits
+    per element) — its metadata is derived by shifting the MSB's.
+    """
+    import numpy as np
+
+    n = float(np.prod(shape))
+    n_groups = n / group_size
+    if which == "msb":
+        code_bits = bits - shift
+        return n * code_bits / 8 + n_groups * (2 + code_bits / 8)
+    if which == "lsb":
+        return n * shift / 8
+    raise ValueError(which)

@@ -1,0 +1,182 @@
+"""Slice-granular DRAM cache simulator (paper §4.1, §6.1-3).
+
+Deterministic model of the DRAM expert cache sitting between Flash and the
+XPU.  Keys are :class:`~repro.core.slices.SliceKey`; capacity is in bytes.
+
+Policy (DBSC heterogeneous management):
+  * **MSB slices** — standard LRU.
+  * **LSB slices** — lowest priority: they live in a separate segment that
+    is evicted *before* any MSB slice is touched ("aggressively evicted
+    after initial access").
+
+Setting ``slice_aware=False`` collapses both segments into one LRU — the
+paper's baseline cache (used with whole-expert keys for high-bit /
+uniform-low-bit baselines).
+
+Every miss/hit is charged to a :class:`~repro.hw.energy.CostLedger` by the
+caller (the engine), keeping the cache purely a state machine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.slices import SliceKey
+
+
+@dataclasses.dataclass
+class CacheStats:
+    msb_hits: int = 0
+    msb_misses: int = 0
+    lsb_hits: int = 0
+    lsb_misses: int = 0
+
+    def record(self, kind: str, hit: bool) -> None:
+        f = f"{kind}_{'hits' if hit else 'misses'}"
+        setattr(self, f, getattr(self, f) + 1)
+
+    @property
+    def accesses(self) -> int:
+        return self.msb_hits + self.msb_misses + self.lsb_hits + self.lsb_misses
+
+    @property
+    def misses(self) -> int:
+        return self.msb_misses + self.lsb_misses
+
+    @property
+    def miss_rate(self) -> float:
+        return self.misses / max(self.accesses, 1)
+
+    @property
+    def msb_miss_rate(self) -> float:
+        return self.msb_misses / max(self.msb_hits + self.msb_misses, 1)
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def reset(self) -> None:
+        self.msb_hits = self.msb_misses = 0
+        self.lsb_hits = self.lsb_misses = 0
+
+
+class SliceCache:
+    """Byte-capacity cache with the DBSC two-segment policy."""
+
+    def __init__(self, capacity_bytes: float, *, slice_aware: bool = True):
+        self.capacity = float(capacity_bytes)
+        self.slice_aware = slice_aware
+        self._msb: "OrderedDict[SliceKey, float]" = OrderedDict()
+        self._lsb: "OrderedDict[SliceKey, float]" = OrderedDict()
+        self.used = 0.0
+        self.stats = CacheStats()
+
+    # ----------------------------------------------------------- internals
+    def _segment(self, key: SliceKey) -> "OrderedDict[SliceKey, float]":
+        if not self.slice_aware:
+            return self._msb
+        return self._lsb if key.kind == "lsb" else self._msb
+
+    def _evict_one(self) -> Optional[Tuple[SliceKey, float]]:
+        """Evict the lowest-priority entry: LSB segment first, then MSB LRU."""
+        if self._lsb:
+            key, nb = self._lsb.popitem(last=False)
+        elif self._msb:
+            key, nb = self._msb.popitem(last=False)
+        else:
+            return None
+        self.used -= nb
+        return key, nb
+
+    def _make_room(self, nbytes: float) -> List[SliceKey]:
+        evicted = []
+        while self.used + nbytes > self.capacity:
+            e = self._evict_one()
+            if e is None:
+                break
+            evicted.append(e[0])
+        return evicted
+
+    # ----------------------------------------------------------------- api
+    def __contains__(self, key: SliceKey) -> bool:
+        return key in self._msb or key in self._lsb
+
+    def __len__(self) -> int:
+        return len(self._msb) + len(self._lsb)
+
+    def contains(self, key: SliceKey) -> bool:
+        return key in self
+
+    def access(self, key: SliceKey, nbytes: float,
+               *, fill_on_miss: bool = True) -> bool:
+        """Touch ``key``; returns True on hit.  Fills (with eviction) on miss."""
+        seg = self._segment(key)
+        hit = key in seg
+        self.stats.record(key.kind, hit)
+        if hit:
+            if key.kind == "msb" or not self.slice_aware:
+                seg.move_to_end(key)      # LRU bump; LSBs stay low priority
+            return True
+        if fill_on_miss:
+            self.insert(key, nbytes)
+        return False
+
+    def insert(self, key: SliceKey, nbytes: float) -> List[SliceKey]:
+        if nbytes > self.capacity:
+            return []
+        seg = self._segment(key)
+        if key in seg:
+            seg.move_to_end(key)
+            return []
+        evicted = self._make_room(nbytes)
+        seg[key] = nbytes
+        self.used += nbytes
+        return evicted
+
+    def evict(self, key: SliceKey) -> bool:
+        for seg in (self._msb, self._lsb):
+            if key in seg:
+                self.used -= seg.pop(key)
+                return True
+        return False
+
+    def resident_keys(self) -> List[SliceKey]:
+        return list(self._msb.keys()) + list(self._lsb.keys())
+
+    def residency(self, n_layers: int, n_experts: int):
+        """Dense bool arrays (msb[L,E], lsb[L,E]) for jit-input masks."""
+        import numpy as np
+
+        msb = np.zeros((n_layers, n_experts), bool)
+        lsb = np.zeros((n_layers, n_experts), bool)
+        for k in self._msb:
+            if k.kind == "msb":
+                msb[k.layer, k.expert] = True
+            else:  # slice_aware=False stores everything in _msb
+                lsb[k.layer, k.expert] = True
+        for k in self._lsb:
+            lsb[k.layer, k.expert] = True
+        return msb, lsb
+
+    # ------------------------------------------------------- PCW interface
+    def reorder_by(self, ranking: Dict[SliceKey, float]) -> None:
+        """Rebuild recency so higher-ranked keys are evicted last."""
+        for seg in (self._msb, self._lsb):
+            items = sorted(seg.items(), key=lambda kv: ranking.get(kv[0], 0.0))
+            seg.clear()
+            for k, v in items:
+                seg[k] = v
+
+    def evict_where(self, pred) -> List[SliceKey]:
+        out = []
+        for seg in (self._msb, self._lsb):
+            for k in [k for k in seg if pred(k)]:
+                self.used -= seg.pop(k)
+                out.append(k)
+        return out
+
+    def clear(self) -> None:
+        self._msb.clear()
+        self._lsb.clear()
+        self.used = 0.0

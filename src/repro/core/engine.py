@@ -1,0 +1,315 @@
+"""SliceMoE inference engine (paper §5-6): the orchestrator.
+
+Runs a *real* JAX MoE model token-by-token while simulating the
+DRAM/Flash offload hierarchy.  Per decode step:
+
+  1. the jitted ``decode_step`` runs with the current cache residency
+     masks, the static :class:`RoutingPolicy` and the Cache-Prior boost
+     ``alpha`` — it returns next-token logits plus per-layer traces
+     (selected experts, gates, criticality, slice demand);
+  2. the Python-side :class:`SliceCache` replays the slice demand
+     (MSB always; LSB per DBSC criticality), records hits/misses and
+     charges the :class:`CostLedger` (Flash fill on miss, DRAM read on
+     use, XPU matmul energy at the computed precision);
+  3. the :class:`MissRateController` updates ``alpha`` from the rolling
+     miss rate (activating after the paper's 10-step warmup window).
+
+Prefill runs once, layer-parallel, collecting the hotness statistics PCW
+needs; the prefill→decode transition applies the selected cache
+initialization (``pcw`` or one of the Fig. 10 baselines).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.amat import MatConfig
+from repro.core.cache import SliceCache
+from repro.core.routing import MissRateController
+from repro.core.slices import ExpertSliceStore, SliceKey, quantize_moe_params
+from repro.core.warmup import (HotnessTracker, INIT_STATES, pcw_reshape)
+from repro.hw.energy import CostLedger
+from repro.hw.specs import SYSTEM_PROFILES
+from repro.models.moe import RoutingPolicy
+from repro.models import model as MDL
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    mat: MatConfig = dataclasses.field(
+        default_factory=lambda: MatConfig(8, 4))
+    cache_bytes: float = 64e6
+    policy: RoutingPolicy = dataclasses.field(default_factory=RoutingPolicy)
+    miss_rate_target: Optional[float] = None      # e.g. 0.05
+    warmup: str = "pcw"        # 'pcw' | 'empty' | 'last_layer' | 'random'
+    lsb_keep_frac: float = 0.125
+    system: str = "mobile_soc"
+    max_seq: int = 256
+    # Whole-expert caching (high-bit baseline): both slices move together.
+    fused_slices: bool = False
+    # Layer-transition expert prefetching (the paper's §2.1 baseline):
+    # pull the top-m predicted next-layer experts into DRAM per layer.
+    # None disables.
+    prefetch_top_m: Optional[int] = None
+
+    def cache(self) -> SliceCache:
+        slice_aware = self.policy.slice_mode == "dbsc" and not self.fused_slices
+        return SliceCache(self.cache_bytes, slice_aware=slice_aware)
+
+
+class SliceMoEEngine:
+    def __init__(self, cfg: ModelConfig, params: dict, ecfg: EngineConfig):
+        if not cfg.has_moe:
+            raise ValueError(f"{cfg.name} has no MoE layers; SliceMoE "
+                             "expert caching is inapplicable (see DESIGN.md)")
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.qparams, self.store, self.layer_map = quantize_moe_params(
+            params, cfg, ecfg.mat)
+        self.float_params = params
+        self.n_moe_layers = len(self.layer_map)
+        self.n_experts = cfg.moe.n_experts
+
+        self.cache = ecfg.cache()
+        self.ledger = CostLedger(system=SYSTEM_PROFILES[ecfg.system])
+        self.tracker = HotnessTracker(self.n_moe_layers, self.n_experts)
+        self.controller = MissRateController(ecfg.miss_rate_target) \
+            if ecfg.miss_rate_target is not None else None
+        self.alpha = 0.0
+
+        # moe pattern positions in order (matches aux stacking order)
+        self.moe_positions = [i for i, s in enumerate(cfg.block_pattern)
+                              if s.ffn == "moe"]
+
+        self.prefetcher = None
+        if ecfg.prefetch_top_m:
+            from repro.core.prefetch import TransitionPrefetcher
+            self.prefetcher = TransitionPrefetcher(
+                self.n_moe_layers, self.n_experts,
+                top_m=ecfg.prefetch_top_m)
+
+        # BuddyMoE offline calibration (policy.kind == 'buddy'): nearest
+        # expert by weight cosine similarity, per (position, period).
+        self.buddies = None
+        if ecfg.policy.kind == "buddy":
+            from repro.core.routing import compute_buddies
+            self.buddies = {}
+            for i in self.moe_positions:
+                wi = params["blocks"][f"pos{i}"]["moe"]["experts"]["wi"]
+                P, E = wi.shape[0], wi.shape[1]
+                flat = wi.reshape(P, E, -1)
+                self.buddies[f"pos{i}"] = jnp.stack(
+                    [compute_buddies(flat[p]) for p in range(P)])
+
+        self._jit_prefill = jax.jit(partial(
+            MDL.prefill, cfg=cfg, max_seq=ecfg.max_seq, collect_trace=True,
+            mat=ecfg.mat))
+        self._jit_decode = jax.jit(partial(
+            MDL.decode_step, cfg=cfg, collect_trace=True,
+            policy=ecfg.policy, mat=ecfg.mat))
+
+        # Non-expert resident weight bytes touched per decode step (INT8
+        # per the paper's G128 non-expert quantization).
+        total = MDL.count_params(params)
+        import numpy as _np
+        expert_total = 0
+        for i in self.moe_positions:
+            e = params["blocks"][f"pos{i}"]["moe"]["experts"]
+            expert_total += sum(int(_np.prod(x.shape)) for x in e.values())
+        self.resident_bytes = float(total - expert_total)  # int8: 1 B/param
+
+        # per-expert matmul dims for cost accounting
+        m = cfg.moe
+        wi_cols = 2 * m.d_ff if m.mlp_type in ("swiglu", "geglu") else m.d_ff
+        self.expert_macs_per_token = cfg.d_model * wi_cols + m.d_ff * cfg.d_model
+
+    # ------------------------------------------------------------- prefill
+    def prefill(self, tokens: jax.Array, **model_kwargs):
+        """Run prefill; simulate layer-streaming cache fills; apply warmup."""
+        logits, kv_cache, aux = self._jit_prefill(
+            self.qparams, tokens=tokens, **model_kwargs)
+        self.kv_cache = kv_cache
+
+        ids = np.asarray(aux["moe"]["ids"])      # [n_periods, n_moe_pos, T, k]
+        gates = np.asarray(aux["moe"]["gates"]).astype(np.float64)
+
+        # Layer-order streaming: for each flat moe layer (in execution
+        # order), every expert selected by >=1 token is loaded high-bit.
+        for period in range(ids.shape[0]):
+            for pidx, pos in enumerate(self.moe_positions):
+                lidx = self.layer_map[(pos, period)]
+                l_ids, l_gates = ids[period, pidx], gates[period, pidx]
+                self.tracker.observe(lidx, l_ids, l_gates)
+                used = np.unique(l_ids.reshape(-1))
+                for e in used:
+                    for kind in ("msb", "lsb"):   # prefill is high-bit
+                        key = SliceKey(lidx, int(e), kind)
+                        nb = self.store.slice_bytes(key)
+                        hit = self.cache.access(key, nb)
+                        if not hit:
+                            self.ledger.miss_fill(nb)
+                        self.ledger.dram_read(nb)
+                # prefill compute: all routed tokens, high precision
+                t_routed = l_ids.size
+                self.ledger.matmul(t_routed, self.cfg.d_model,
+                                   self.expert_macs_per_token // self.cfg.d_model,
+                                   self.ecfg.mat.high_bits)
+
+        # Transition: PCW or a baseline init state.
+        if self.ecfg.warmup == "pcw":
+            self.warmup_summary = pcw_reshape(
+                self.cache, self.store, self.tracker,
+                lsb_keep_frac=self.ecfg.lsb_keep_frac)
+        else:
+            INIT_STATES[self.ecfg.warmup](self.cache, self.store)
+            self.warmup_summary = {"init": self.ecfg.warmup}
+        self.prefill_snapshot = self.ledger.snapshot()
+        self.cache.stats.reset()
+        return logits
+
+    # -------------------------------------------------------------- decode
+    def _policy_state(self):
+        msb, lsb = self.cache.residency(self.n_moe_layers, self.n_experts)
+        n_periods = self.cfg.n_periods
+        state = {}
+        for pos in self.moe_positions:
+            cm = np.zeros((n_periods, self.n_experts), bool)
+            cl = np.zeros((n_periods, self.n_experts), bool)
+            for period in range(n_periods):
+                lidx = self.layer_map[(pos, period)]
+                cm[period] = msb[lidx]
+                cl[period] = lsb[lidx]
+            state[f"pos{pos}"] = {
+                "cached_msb": jnp.asarray(cm),
+                "cached_lsb": jnp.asarray(cl),
+            }
+            if self.buddies is not None:
+                state[f"pos{pos}"]["buddies"] = self.buddies[f"pos{pos}"]
+        return state
+
+    def decode(self, first_token: jax.Array, n_steps: int,
+               **model_kwargs):
+        """Greedy decode ``n_steps`` tokens with full offload simulation.
+
+        Returns (tokens [B, n_steps], metrics dict).
+        """
+        token = first_token
+        tokens_out = []
+        step_metrics = []
+        base = self.ledger.snapshot()
+
+        for step in range(n_steps):
+            ps = self._policy_state()
+            logits, self.kv_cache, aux = self._jit_decode(
+                self.qparams, token=token, cache=self.kv_cache,
+                policy_state=ps, alpha=jnp.float32(self.alpha),
+                **model_kwargs)
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tokens_out.append(token)
+
+            step_miss = self._charge_step(aux)
+            if self.controller is not None:
+                self.alpha = self.controller.update(step_miss)
+            step_metrics.append({
+                "miss_rate": step_miss,
+                "alpha": self.alpha,
+                **self.ledger.delta_since(base),
+            })
+            base = self.ledger.snapshot()
+
+        metrics = {
+            "per_step": step_metrics,
+            "cache_stats": self.cache.stats.snapshot(),
+            "decode_totals": self.ledger.delta_since(self.prefill_snapshot),
+        }
+        return jnp.stack(tokens_out, axis=1), metrics
+
+    def _charge_step(self, aux) -> float:
+        """Replay one decode step's slice demand into cache + ledger."""
+        ids = np.asarray(aux["moe"]["ids"])            # [P, npos, T, k]
+        msb_needed = np.asarray(aux["moe"]["msb_needed"])  # [P, npos, E]
+        lsb_needed = np.asarray(aux["moe"]["lsb_needed"])
+        use_lsb = np.asarray(aux["moe"]["use_lsb"])
+        gates = np.asarray(aux["moe"]["gates"]).astype(np.float64)
+        active = np.asarray(aux["moe"]["active"])
+
+        accesses = misses = 0
+        mat = self.ecfg.mat
+        prev_used = None
+        for period in range(ids.shape[0]):
+            for pidx, pos in enumerate(self.moe_positions):
+                lidx = self.layer_map[(pos, period)]
+                # --- prefetch (paper §2.1 baseline): before this layer
+                # runs, the predictor has pulled its guesses into DRAM.
+                if self.prefetcher is not None and prev_used is not None:
+                    predicted = self.prefetcher.predict(lidx - 1, prev_used)
+                    self.prefetcher.mark_issued(len(predicted))
+                    for e in predicted:
+                        key = SliceKey(lidx, int(e), "msb")
+                        nb = self.store.slice_bytes(key)
+                        if self.ecfg.fused_slices:
+                            nb = self.store.highbit_expert_bytes()
+                        if key not in self.cache:
+                            self.ledger.miss_fill(nb)
+                            self.cache.insert(key, nb)
+                act = active[period, pidx].reshape(-1)
+                flat_ids = ids[period, pidx].reshape(-1)[act]
+                flat_gates = gates[period, pidx].reshape(-1)[act]
+                self.tracker.observe(lidx, flat_ids, flat_gates)
+                if self.prefetcher is not None:
+                    if prev_used is not None:
+                        self.prefetcher.observe(lidx, prev_used, flat_ids)
+                        hits = set(np.unique(flat_ids)) & set(
+                            int(e) for e in
+                            self.prefetcher.predict(lidx - 1, prev_used))
+                        self.prefetcher.mark_useful(len(hits))
+                    prev_used = flat_ids
+                # token count per expert (for compute cost)
+                tok_per_e = np.bincount(flat_ids, minlength=self.n_experts)
+                for e in np.nonzero(msb_needed[period, pidx])[0]:
+                    e = int(e)
+                    key = SliceKey(lidx, e, "msb")
+                    nb = self.store.slice_bytes(key)
+                    if self.ecfg.fused_slices:
+                        nb = self.store.highbit_expert_bytes()
+                    hit = self.cache.access(key, nb)
+                    accesses += 1
+                    if not hit:
+                        misses += 1
+                        self.ledger.miss_fill(nb)
+                    self.ledger.dram_read(nb)
+                    wants_lsb = bool(lsb_needed[period, pidx, e]) \
+                        and not self.ecfg.fused_slices
+                    if wants_lsb:
+                        lkey = SliceKey(lidx, e, "lsb")
+                        lnb = self.store.slice_bytes(lkey)
+                        lhit = self.cache.access(
+                            lkey, lnb,
+                            fill_on_miss=self.ecfg.policy.fetch_lsb_on_miss)
+                        accesses += 1
+                        if not lhit:
+                            misses += 1
+                            if self.ecfg.policy.fetch_lsb_on_miss:
+                                self.ledger.miss_fill(lnb)
+                        if lhit or self.ecfg.policy.fetch_lsb_on_miss:
+                            self.ledger.dram_read(lnb)
+                    bits = mat.high_bits if bool(use_lsb[period, pidx, e]) \
+                        else mat.low_bits
+                    if self.ecfg.fused_slices:
+                        bits = mat.high_bits
+                    self.ledger.matmul(
+                        int(tok_per_e[e]), self.cfg.d_model,
+                        self.expert_macs_per_token // self.cfg.d_model,
+                        bits)
+        # Non-expert resident weights: one pass per decode step.
+        self.ledger.dram_read(self.resident_bytes)
+        self.ledger.matmul(ids.shape[-2], self.cfg.d_model,
+                           int(self.resident_bytes / self.cfg.d_model) + 1, 8)
+        return misses / max(accesses, 1)

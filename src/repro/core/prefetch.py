@@ -1,0 +1,67 @@
+"""Predictive expert prefetching — the baseline the paper argues against.
+
+Paper §2.1: "Predictive schemes such as prefetching and speculative
+caching [17-20] improve locality but become increasingly unreliable in
+modern MoE … strong router regularization leads to stochastic routing
+patterns and frequent prefetch failures."
+
+We implement the standard layer-transition predictor (Pre-gated-MoE /
+ProMoE style): an online co-occurrence model
+``P(expert_j at layer l+1 | expert_i at layer l)`` trained on observed
+routing traces, used during decode to pull the top-m predicted experts
+of the next layer into DRAM before that layer executes.  Mispredictions
+cost real Flash reads (charged to the ledger) without saving future
+misses — exactly the failure mode the paper describes for
+diversity-regularized routers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TransitionPrefetcher:
+    n_layers: int
+    n_experts: int
+    top_m: int = 4
+    smoothing: float = 0.1
+
+    def __post_init__(self):
+        # counts[l, i, j]: expert i used at layer l, expert j at layer l+1
+        self.counts = np.full(
+            (max(self.n_layers - 1, 1), self.n_experts, self.n_experts),
+            self.smoothing)
+        self.issued = 0
+        self.useful = 0
+
+    # --------------------------------------------------------------- learn
+    def observe(self, layer: int, prev_experts: np.ndarray,
+                cur_experts: np.ndarray) -> None:
+        """Record a (layer-1 -> layer) transition from a routing trace."""
+        if layer <= 0 or layer > self.counts.shape[0]:
+            return
+        pe = np.unique(prev_experts.reshape(-1))
+        ce = np.unique(cur_experts.reshape(-1))
+        self.counts[layer - 1][np.ix_(pe, ce)] += 1.0
+
+    # -------------------------------------------------------------- predict
+    def predict(self, layer: int, cur_experts: np.ndarray) -> np.ndarray:
+        """Top-m predicted experts for ``layer + 1``."""
+        if layer >= self.counts.shape[0]:
+            return np.empty(0, np.int64)
+        ce = np.unique(cur_experts.reshape(-1))
+        scores = self.counts[layer][ce].sum(axis=0)
+        return np.argsort(-scores)[: self.top_m]
+
+    def mark_issued(self, n: int = 1) -> None:
+        self.issued += n
+
+    def mark_useful(self, n: int = 1) -> None:
+        self.useful += n
+
+    @property
+    def accuracy(self) -> float:
+        return self.useful / max(self.issued, 1)

@@ -1,0 +1,163 @@
+"""Cache-aware routing policies (paper §2.1, §4.1) — all jittable.
+
+* ``topk_routing``        — vanilla top-k (locality-insensitive baseline).
+* ``cumsum_routing``      — cumulative-threshold expert selection [14]:
+  take experts in descending probability until the cumulative mass exceeds
+  ``tau`` (capped at ``k_max``).  Strong accuracy, terrible locality.
+* ``cache_prior_routing`` — Cache-Prior [14]: boost the gating scores of
+  DRAM-resident experts by ``alpha`` before top-k, pulling selection
+  toward the cache.  ``alpha`` is the knob the miss-rate-constraint
+  controller actuates.
+* ``criticality``         — DBSC's dynamic single-head test (paper §4.1,
+  citing [31]): an expert is *critical* for a token iff its renormalized
+  gate exceeds ``theta``.  Critical experts want MSB+LSB (high-bit);
+  the rest run MSB-only.  Token-wise this yields 0..k critical experts,
+  matching the paper's Fig. 4 observation.
+
+All functions take ``probs`` — the router softmax output ``[T, E]`` — and
+return ``(gates [T, k], ids [T, k])`` plus policy-specific extras.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("k",))
+def topk_routing(probs: jax.Array, k: int):
+    gates, ids = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return gates, ids
+
+
+@partial(jax.jit, static_argnames=("k_max",))
+def cumsum_routing(probs: jax.Array, tau: float, k_max: int):
+    """Select experts until cumulative prob >= tau (at most k_max).
+
+    Returns (gates [T, k_max], ids [T, k_max], active [T, k_max] bool).
+    Inactive slots have zero gates.
+    """
+    p_sorted, ids = jax.lax.top_k(probs, k_max)
+    csum = jnp.cumsum(p_sorted, axis=-1)
+    # slot j is active if the mass *before* it hasn't reached tau yet
+    active = jnp.concatenate(
+        [jnp.ones_like(csum[:, :1], bool), csum[:, :-1] < tau], axis=-1)
+    gates = p_sorted * active
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return gates, ids, active
+
+
+@partial(jax.jit, static_argnames=("k",))
+def cache_prior_routing(probs: jax.Array, cached: jax.Array, alpha,
+                        k: int):
+    """Boost cached experts' scores: p' ∝ p * (1 + alpha * cached).
+
+    ``cached``: [E] (or [T, E]) bool/0-1 mask of DRAM-resident experts.
+    ``alpha >= 0``; alpha=0 recovers vanilla top-k.
+    """
+    boost = 1.0 + alpha * cached.astype(probs.dtype)
+    boosted = probs * boost
+    gates_b, ids = jax.lax.top_k(boosted, k)
+    # Gate values come from the *original* probabilities (the boost only
+    # reorders selection, it must not change mixture weights).
+    gates = jnp.take_along_axis(probs, ids, axis=-1)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return gates, ids
+
+
+@partial(jax.jit, static_argnames=("k",))
+def buddy_routing(probs: jax.Array, cached: jax.Array,
+                  buddies: jax.Array, k: int):
+    """BuddyMoE [15]: substitute a missed expert with its cached "buddy".
+
+    ``buddies``: [E] int — the offline-calibrated most-interchangeable
+    expert for each expert (here: nearest neighbour in expert-weight
+    cosine similarity; BuddyMoE calibrates on routing overlap).
+    Selection is vanilla top-k; each selected-but-uncached expert is
+    replaced by its buddy iff the buddy IS cached (otherwise the miss
+    stands).  Gates keep the original expert's probability — the buddy
+    is acting as its stand-in.
+    """
+    gates, ids = topk_routing(probs, k)
+    buddy_ids = buddies[ids]
+    use_buddy = (~cached[ids]) & cached[buddy_ids]
+    new_ids = jnp.where(use_buddy, buddy_ids, ids)
+    return gates, new_ids
+
+
+def compute_buddies(flat_weights: jax.Array) -> jax.Array:
+    """Offline buddy calibration: nearest expert by weight cosine sim.
+
+    flat_weights: [E, D_flat] — per-expert flattened weights.
+    """
+    w = flat_weights.astype(jnp.float32)
+    w = w / (jnp.linalg.norm(w, axis=-1, keepdims=True) + 1e-9)
+    sim = w @ w.T
+    sim = sim - 2.0 * jnp.eye(sim.shape[0])   # exclude self
+    return jnp.argmax(sim, axis=-1).astype(jnp.int32)
+
+
+def criticality(gates: jax.Array, theta: float = 0.5):
+    """DBSC single-head test on renormalized top-k gates [T, k].
+
+    Returns bool [T, k]: slot needs high-bit (MSB+LSB) precision.
+    ``theta=0.5`` means an expert is critical when it carries at least
+    half of the routed mass — the "single head" of the distribution.
+    """
+    return gates >= theta
+
+
+def expert_demand(ids: jax.Array, critical: jax.Array, n_experts: int):
+    """Aggregate per-token selections into per-expert slice demand.
+
+    Returns (msb_needed [E] bool, lsb_needed [E] bool): MSB is needed by
+    any selection; LSB only by critical selections.
+    """
+    sel = jax.nn.one_hot(ids, n_experts, dtype=jnp.bool_)      # [T, k, E]
+    msb = jnp.any(sel, axis=(0, 1))
+    lsb = jnp.any(sel & critical[..., None], axis=(0, 1))
+    return msb, lsb
+
+
+class MissRateController:
+    """Proportional-integral controller on the Cache-Prior boost ``alpha``.
+
+    Enforces the paper's miss-rate constraint (Fig. 1b): measure the rolling
+    slice miss rate over recent decode steps; if above the target, increase
+    alpha (pull routing toward the cache), else relax toward zero so
+    accuracy recovers.  Activates after ``warmup_steps`` (paper: 10).
+    """
+
+    def __init__(self, target_miss_rate: float, *, kp: float = 40.0,
+                 ki: float = 4.0, alpha_max: float = 50.0,
+                 warmup_steps: int = 10, window: int = 16):
+        self.target = target_miss_rate
+        self.kp, self.ki = kp, ki
+        self.alpha_max = alpha_max
+        self.warmup_steps = warmup_steps
+        self.window = window
+        self.alpha = 0.0
+        self._integral = 0.0
+        self._history: list[float] = []
+        self._step = 0
+
+    def update(self, step_miss_rate: float) -> float:
+        self._step += 1
+        self._history.append(step_miss_rate)
+        if len(self._history) > self.window:
+            self._history.pop(0)
+        if self._step <= self.warmup_steps:
+            return self.alpha
+        rolling = sum(self._history) / len(self._history)
+        err = rolling - self.target
+        self._integral = max(0.0, self._integral + err)
+        self.alpha = float(min(self.alpha_max,
+                               max(0.0, self.kp * err + self.ki * self._integral)))
+        return self.alpha
+
+    @property
+    def active(self) -> bool:
+        return self._step > self.warmup_steps

@@ -1,0 +1,170 @@
+"""Bit-sliced expert weight store (DBSC's storage layer, paper §4.1).
+
+One AMAT high-bit code buffer per (layer, expert) weight matrix; the MSB
+and LSB *slices* are views of that buffer (shift / mask), so supporting
+mixed precision costs **zero** extra weight memory — the point of AMAT.
+
+The store serves two consumers:
+
+* the **cache simulator** asks for slice byte sizes and identities
+  (:class:`SliceKey`) to manage the DRAM budget, and
+* the **jitted model** receives stacked ``QuantizedTensor`` expert weights
+  plus a per-expert ``use_lsb`` mask assembled from cache state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.amat import MatConfig, amat_quantize, slice_nbytes
+from repro.quant.groupquant import QuantizedTensor
+
+
+class SliceKey(NamedTuple):
+    layer: int
+    expert: int
+    kind: str          # 'msb' | 'lsb'
+
+
+@dataclasses.dataclass
+class LayerExperts:
+    """Stacked AMAT-quantized expert weights for one MoE layer."""
+
+    wi_q: QuantizedTensor          # codes [E, d, F(|2F)]
+    wo_q: QuantizedTensor          # codes [E, F, d]
+
+    @property
+    def n_experts(self) -> int:
+        return self.wi_q.codes.shape[0]
+
+
+@dataclasses.dataclass
+class ExpertSliceStore:
+    """All MoE layers' expert weights in AMAT form + slice-size metadata."""
+
+    mat: MatConfig
+    layers: Dict[int, LayerExperts]
+    msb_bytes_per_expert: float = 0.0
+    lsb_bytes_per_expert: float = 0.0
+
+    @classmethod
+    def from_float(cls, expert_weights: Dict[int, dict],
+                   mat: MatConfig) -> "ExpertSliceStore":
+        """expert_weights: {layer: {'wi': [E,d,F], 'wo': [E,F,d]}} floats."""
+        layers = {}
+        msb_b = lsb_b = 0.0
+        for lidx, w in expert_weights.items():
+            le = LayerExperts(
+                wi_q=amat_quantize(w["wi"], mat),
+                wo_q=amat_quantize(w["wo"], mat),
+            )
+            layers[lidx] = le
+            msb_b = sum(
+                slice_nbytes(q.codes.shape[1:], mat.high_bits,
+                             mat.group_size, which="msb", shift=mat.shift)
+                for q in (le.wi_q, le.wo_q))
+            lsb_b = sum(
+                slice_nbytes(q.codes.shape[1:], mat.high_bits,
+                             mat.group_size, which="lsb", shift=mat.shift)
+                for q in (le.wi_q, le.wo_q))
+        return cls(mat=mat, layers=layers,
+                   msb_bytes_per_expert=msb_b, lsb_bytes_per_expert=lsb_b)
+
+    # ------------------------------------------------------------ metadata
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def n_experts(self) -> int:
+        return next(iter(self.layers.values())).n_experts
+
+    def slice_bytes(self, key: SliceKey) -> float:
+        return (self.msb_bytes_per_expert if key.kind == "msb"
+                else self.lsb_bytes_per_expert)
+
+    def highbit_expert_bytes(self) -> float:
+        return self.msb_bytes_per_expert + self.lsb_bytes_per_expert
+
+    def total_bytes(self) -> float:
+        return self.highbit_expert_bytes() * self.n_layers * self.n_experts
+
+    def all_keys(self):
+        for lidx in self.layers:
+            for e in range(self.n_experts):
+                yield SliceKey(lidx, e, "msb")
+                yield SliceKey(lidx, e, "lsb")
+
+    # ------------------------------------------------------- compute views
+    def layer_weights(self, layer: int) -> LayerExperts:
+        return self.layers[layer]
+
+    def use_lsb_mask(self, layer: int, resident_lsb: np.ndarray) -> jax.Array:
+        """Build the jit-input mask from the cache's LSB residency row."""
+        return jnp.asarray(resident_lsb, bool)
+
+
+def quantize_moe_params(params: dict, cfg, mat: MatConfig):
+    """Replace float expert weights in a model param tree by AMAT tensors.
+
+    Returns (new_params, store).  The param tree keeps QuantizedTensor
+    leaves (a registered pytree) under ``experts/{wi_q,wo_q}``; the store
+    indexes the same tensors by *flat layer index* for the cache sim.
+    """
+    pattern = cfg.block_pattern
+    new_blocks = dict(params["blocks"])
+    expert_weights: Dict[int, dict] = {}
+    store_layers: Dict[int, LayerExperts] = {}
+
+    flat_idx = 0
+    layer_map = {}   # (pos, period) -> flat moe layer index
+    for period in range(cfg.n_periods):
+        for i, spec in enumerate(pattern):
+            if spec.ffn == "moe":
+                layer_map[(i, period)] = flat_idx
+                flat_idx += 1
+
+    msb_b = lsb_b = 0.0
+    for i, spec in enumerate(pattern):
+        if spec.ffn != "moe":
+            continue
+        blk = dict(new_blocks[f"pos{i}"])
+        experts = blk["moe"]["experts"]
+        wi = experts["wi"].astype(jnp.float32)   # [n_periods, E, d, F]
+        wo = experts["wo"].astype(jnp.float32)
+        wi_q = amat_quantize(wi, mat)
+        wo_q = amat_quantize(wo, mat)
+        moe_p = dict(blk["moe"])
+        moe_p["experts"] = {"wi_q": wi_q, "wo_q": wo_q}
+        blk["moe"] = moe_p
+        new_blocks[f"pos{i}"] = blk
+        for period in range(cfg.n_periods):
+            lidx = layer_map[(i, period)]
+            le = LayerExperts(
+                wi_q=_index_qt(wi_q, period), wo_q=_index_qt(wo_q, period))
+            store_layers[lidx] = le
+            msb_b = sum(
+                slice_nbytes(q.codes.shape[1:], mat.high_bits,
+                             mat.group_size, which="msb", shift=mat.shift)
+                for q in (le.wi_q, le.wo_q))
+            lsb_b = sum(
+                slice_nbytes(q.codes.shape[1:], mat.high_bits,
+                             mat.group_size, which="lsb", shift=mat.shift)
+                for q in (le.wi_q, le.wo_q))
+
+    new_params = dict(params)
+    new_params["blocks"] = new_blocks
+    store = ExpertSliceStore(
+        mat=mat, layers=store_layers,
+        msb_bytes_per_expert=msb_b, lsb_bytes_per_expert=lsb_b)
+    return new_params, store, layer_map
+
+
+def _index_qt(qt: QuantizedTensor, i: int) -> QuantizedTensor:
+    return QuantizedTensor(qt.codes[i], qt.scales[i], qt.zero_points[i],
+                           qt.bits, qt.group_size, qt.asymmetric)

@@ -1,0 +1,150 @@
+"""Predictive Cache Warmup — PCW (paper §4.3).
+
+During prefill the engine accumulates per-(layer, expert) access frequency
+("prefill hotness").  At the prefill→decode transition PCW reshapes the
+unified cache into a hotness-aligned state:
+
+  1. evict LSB slices of experts whose hotness is below the critical
+     quantile (they contribute least to accuracy — paper: "starting from
+     LSB slices"),
+  2. evict MSB slices with low prefill access frequency next,
+  3. re-order the LRU recency of what remains by hotness, so the first
+     decode evictions hit the coldest slices,
+  4. (optionally) pre-install hot MSB slices that prefill's layer-by-layer
+     streaming already paid to load — the "reshape, don't refill" step.
+
+The ratio of experts retaining their LSB (i.e. staying high-bit) is tied to
+the DBSC single-head threshold: on average fewer than one expert per token
+is critical, so only the hottest ``lsb_keep_frac`` keep their LSBs.
+
+Baseline initial states for Fig. 10: ``empty``, ``last_layer``, ``random``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.core.cache import SliceCache
+from repro.core.slices import ExpertSliceStore, SliceKey
+
+
+@dataclasses.dataclass
+class HotnessTracker:
+    """Per-(layer, expert) EMA of selection frequency, gate-mass weighted."""
+
+    n_layers: int
+    n_experts: int
+    decay: float = 0.95
+
+    def __post_init__(self):
+        self.counts = np.zeros((self.n_layers, self.n_experts))
+        self.gate_mass = np.zeros((self.n_layers, self.n_experts))
+
+    def observe(self, layer: int, expert_ids: np.ndarray,
+                gates: np.ndarray) -> None:
+        """expert_ids/gates: [T, k] for the tokens routed this call."""
+        np.add.at(self.counts[layer], expert_ids.reshape(-1), 1.0)
+        np.add.at(self.gate_mass[layer], expert_ids.reshape(-1),
+                  gates.reshape(-1))
+
+    def step_decay(self) -> None:
+        self.counts *= self.decay
+        self.gate_mass *= self.decay
+
+    def hotness(self) -> np.ndarray:
+        """[L, E] combined score: frequency + gate mass."""
+        c = self.counts / max(self.counts.max(), 1e-9)
+        g = self.gate_mass / max(self.gate_mass.max(), 1e-9)
+        return 0.5 * c + 0.5 * g
+
+
+def pcw_reshape(cache: SliceCache, store: ExpertSliceStore,
+                tracker: HotnessTracker, *,
+                lsb_keep_frac: float = 0.125,
+                msb_keep_frac: float = 1.0) -> dict:
+    """Apply the PCW transition reshape.  Returns an action summary."""
+    hot = tracker.hotness()
+    L, E = hot.shape
+
+    flat = hot.reshape(-1)
+    lsb_thresh = float(np.quantile(flat, 1.0 - lsb_keep_frac)) \
+        if lsb_keep_frac < 1.0 else -1.0
+    msb_thresh = float(np.quantile(flat, 1.0 - msb_keep_frac)) \
+        if msb_keep_frac < 1.0 else -1.0
+
+    # 1) drop cold LSBs, 2) drop cold MSBs.
+    evicted_lsb = cache.evict_where(
+        lambda k: k.kind == "lsb" and hot[k.layer, k.expert] < lsb_thresh)
+    evicted_msb = cache.evict_where(
+        lambda k: k.kind == "msb" and hot[k.layer, k.expert] < msb_thresh)
+
+    # 3) hotness-aligned recency for the survivors.
+    ranking: Dict[SliceKey, float] = {
+        k: float(hot[k.layer, k.expert]) for k in cache.resident_keys()}
+    cache.reorder_by(ranking)
+
+    # 4) fill freed space with the hottest missing MSB slices (these bytes
+    # were already streamed through DRAM during prefill; reshaping keeps
+    # them instead of dropping them — no extra Flash traffic is charged).
+    order = np.argsort(-flat)
+    installed = 0
+    for idx in order:
+        lidx, e = divmod(int(idx), E)
+        key = SliceKey(lidx, e, "msb")
+        nb = store.slice_bytes(key)
+        if key in cache or cache.used + nb > cache.capacity:
+            continue
+        cache.insert(key, nb)
+        installed += 1
+        if cache.used + store.msb_bytes_per_expert > cache.capacity:
+            break
+
+    return {
+        "evicted_lsb": len(evicted_lsb),
+        "evicted_msb": len(evicted_msb),
+        "installed_msb": installed,
+        "resident": len(cache),
+    }
+
+
+# --------------------------------------------------------------------------
+# Baseline initial states (paper Fig. 10)
+# --------------------------------------------------------------------------
+def init_empty(cache: SliceCache, *_args, **_kw) -> None:
+    cache.clear()
+
+
+def init_last_layer(cache: SliceCache, store: ExpertSliceStore,
+                    *_args, **_kw) -> None:
+    """Keep only the last prefill layer's experts (naive leftover state)."""
+    cache.clear()
+    last = max(store.layers.keys())
+    for e in range(store.n_experts):
+        for kind in ("msb", "lsb"):
+            key = SliceKey(last, e, kind)
+            nb = store.slice_bytes(key)
+            if cache.used + nb <= cache.capacity:
+                cache.insert(key, nb)
+
+
+def init_random(cache: SliceCache, store: ExpertSliceStore, *,
+                seed: int = 0, **_kw) -> None:
+    cache.clear()
+    rng = np.random.default_rng(seed)
+    keys = list(store.all_keys())
+    rng.shuffle(keys)
+    for key in keys:
+        nb = store.slice_bytes(key)
+        if cache.used + nb > cache.capacity:
+            break
+        cache.insert(key, nb)
+
+
+INIT_STATES = {
+    "empty": init_empty,
+    "last_layer": init_last_layer,
+    "random": init_random,
+}

@@ -1,0 +1,127 @@
+"""Deterministic latency / energy accounting for the offload hierarchy.
+
+This is the cost model behind the paper's Figs. 9-10: every expert-slice
+transfer (Flash→DRAM on a miss, DRAM→XPU on use) and every expert matmul is
+accounted against the active :class:`~repro.hw.specs.SystemSpec`.
+
+The model is intentionally simple and auditable:
+
+* a *miss* on a slice of ``nbytes`` costs one Flash read (latency + energy)
+  plus one DRAM write,
+* a *hit* (or post-fill use) costs one DRAM read into the XPU,
+* expert compute costs ``2 * tokens * d_in * d_out`` MAC-ops per matmul at
+  the XPU's int8 throughput; low-bit (MSB-only) compute gets a throughput
+  multiplier ``8 / bits`` reflecting the bit-serial/sliced PE design of the
+  paper's XPU,
+* DRAM and Flash transfers overlap compute only when
+  ``overlap_io_compute`` is set (the paper's decode phase is
+  bandwidth-bound, i.e. serialized on misses; prefill overlaps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.hw.specs import SystemSpec, MOBILE_SOC
+
+
+@dataclasses.dataclass
+class CostLedger:
+    """Accumulates latency and energy over a simulated inference run."""
+
+    system: SystemSpec = dataclasses.field(default_factory=lambda: MOBILE_SOC)
+    overlap_io_compute: bool = False
+
+    # accumulators
+    flash_bytes: float = 0.0
+    dram_bytes: float = 0.0
+    compute_ops: float = 0.0
+    flash_latency_s: float = 0.0
+    dram_latency_s: float = 0.0
+    compute_latency_s: float = 0.0
+    flash_energy_j: float = 0.0
+    dram_energy_j: float = 0.0
+    compute_energy_j: float = 0.0
+    n_flash_transfers: int = 0
+    n_dram_transfers: int = 0
+
+    # ---------------------------------------------------------------- events
+    def miss_fill(self, nbytes: float) -> None:
+        """Flash -> DRAM fill caused by a slice miss."""
+        sysspec = self.system
+        self.flash_bytes += nbytes
+        self.n_flash_transfers += 1
+        self.flash_latency_s += sysspec.flash.transfer_latency_s(nbytes)
+        # Flash read + DRAM write energy.
+        self.flash_energy_j += sysspec.flash.transfer_energy_j(nbytes)
+        self.dram_energy_j += sysspec.dram.transfer_energy_j(nbytes)
+
+    def dram_read(self, nbytes: float) -> None:
+        """DRAM -> XPU weight fetch (hit path or post-fill use)."""
+        sysspec = self.system
+        self.dram_bytes += nbytes
+        self.n_dram_transfers += 1
+        self.dram_latency_s += sysspec.dram.transfer_latency_s(nbytes)
+        self.dram_energy_j += sysspec.dram.transfer_energy_j(nbytes)
+
+    def matmul(self, tokens: int, d_in: int, d_out: int, bits: int) -> None:
+        """Expert (or dense) matmul at the given weight precision."""
+        sysspec = self.system
+        ops = 2.0 * tokens * d_in * d_out
+        native = sysspec.compute.native_precision_bits
+        speedup = max(1.0, native / max(bits, 1))
+        self.compute_ops += ops
+        self.compute_latency_s += ops / (sysspec.compute.peak_ops_per_s * speedup)
+        # Energy scales with switched bit-width on a bit-sliced PE array.
+        self.compute_energy_j += (
+            sysspec.compute.energy_j_per_op * ops * (min(bits, native) / native)
+        )
+
+    # -------------------------------------------------------------- summary
+    @property
+    def io_latency_s(self) -> float:
+        return self.flash_latency_s + self.dram_latency_s
+
+    @property
+    def total_latency_s(self) -> float:
+        if self.overlap_io_compute:
+            return max(self.io_latency_s, self.compute_latency_s)
+        return self.io_latency_s + self.compute_latency_s
+
+    @property
+    def total_energy_j(self) -> float:
+        return self.flash_energy_j + self.dram_energy_j + self.compute_energy_j
+
+    def snapshot(self) -> dict:
+        return {
+            "flash_bytes": self.flash_bytes,
+            "dram_bytes": self.dram_bytes,
+            "compute_ops": self.compute_ops,
+            "flash_latency_s": self.flash_latency_s,
+            "dram_latency_s": self.dram_latency_s,
+            "compute_latency_s": self.compute_latency_s,
+            "total_latency_s": self.total_latency_s,
+            "flash_energy_j": self.flash_energy_j,
+            "dram_energy_j": self.dram_energy_j,
+            "compute_energy_j": self.compute_energy_j,
+            "total_energy_j": self.total_energy_j,
+            "n_flash_transfers": self.n_flash_transfers,
+            "n_dram_transfers": self.n_dram_transfers,
+        }
+
+    def delta_since(self, prev: Optional[dict]) -> dict:
+        cur = self.snapshot()
+        if prev is None:
+            return cur
+        return {k: cur[k] - prev[k] for k in cur}
+
+    def reset(self) -> None:
+        for f in (
+            "flash_bytes", "dram_bytes", "compute_ops",
+            "flash_latency_s", "dram_latency_s", "compute_latency_s",
+            "flash_energy_j", "dram_energy_j", "compute_energy_j",
+        ):
+            setattr(self, f, 0.0)
+        self.n_flash_transfers = 0
+        self.n_dram_transfers = 0

@@ -1,0 +1,161 @@
+"""Hardware specifications.
+
+Two profiles:
+
+* ``MOBILE_SOC`` — the paper's Fig. 7 system (systolic XPU + LPDDR4 DRAM +
+  UFS 3.1 Flash).  Used by the faithful cost-model reproduction of the
+  paper's energy / latency figures (Figs. 9-10).
+* ``TPU_V5E`` — the target deployment hardware for the JAX framework.  Used
+  by the roofline analysis of the compiled dry-runs (EXPERIMENTS.md
+  §Roofline).  The DBSC hierarchy maps onto (local HBM ← remote HBM via ICI
+  ← host DRAM) as described in DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryTier:
+    """One tier of the offload hierarchy."""
+
+    name: str
+    bandwidth_bytes_per_s: float
+    energy_pj_per_bit: float
+    capacity_bytes: float
+
+    @property
+    def energy_j_per_byte(self) -> float:
+        return self.energy_pj_per_bit * 8 * 1e-12
+
+    def transfer_latency_s(self, nbytes: float) -> float:
+        return nbytes / self.bandwidth_bytes_per_s
+
+    def transfer_energy_j(self, nbytes: float) -> float:
+        return nbytes * self.energy_j_per_byte
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeSpec:
+    """Compute engine spec (the XPU in the paper, a TPU chip for us)."""
+
+    name: str
+    peak_ops_per_s: float          # at the native precision below
+    ops_per_watt: float            # energy efficiency (paper: 3.18 TOPS/W)
+    native_precision_bits: int
+
+    @property
+    def energy_j_per_op(self) -> float:
+        return 1.0 / self.ops_per_watt
+
+    def compute_latency_s(self, ops: float, utilization: float = 1.0) -> float:
+        return ops / (self.peak_ops_per_s * max(utilization, 1e-9))
+
+    def compute_energy_j(self, ops: float) -> float:
+        return ops * self.energy_j_per_op
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemSpec:
+    """A full offload system: compute + fast tier (cache) + slow tier."""
+
+    name: str
+    compute: ComputeSpec
+    dram: MemoryTier        # the expert-cache tier
+    flash: MemoryTier       # the backing store (miss target)
+
+    @property
+    def miss_penalty_ratio_bw(self) -> float:
+        return self.dram.bandwidth_bytes_per_s / self.flash.bandwidth_bytes_per_s
+
+    @property
+    def miss_penalty_ratio_energy(self) -> float:
+        return self.flash.energy_pj_per_bit / self.dram.energy_pj_per_bit
+
+
+# --- Paper Fig. 7: mobile SoC profile --------------------------------------
+# XPU: 1 GHz systolic array, 8192 8-bit PEs -> 16.4 TOPS, 3.18 TOPS/W.
+# DRAM: LPDDR4, ~104 Gbps, 8 GB, 1.5 pJ/bit.
+# Flash: UFS 3.1, 10 Gbps, 128 GB, 103 pJ/bit.
+MOBILE_SOC = SystemSpec(
+    name="mobile_soc",
+    compute=ComputeSpec(
+        name="xpu_systolic_8192pe",
+        peak_ops_per_s=16.4e12,
+        ops_per_watt=3.18e12,
+        native_precision_bits=8,
+    ),
+    dram=MemoryTier(
+        name="lpddr4",
+        bandwidth_bytes_per_s=104e9 / 8,   # 104 Gbps -> 13 GB/s
+        energy_pj_per_bit=1.5,
+        capacity_bytes=8 * 2**30,
+    ),
+    flash=MemoryTier(
+        name="ufs3.1",
+        bandwidth_bytes_per_s=10e9 / 8,    # 10 Gbps -> 1.25 GB/s
+        energy_pj_per_bit=103.0,
+        capacity_bytes=128 * 2**30,
+    ),
+)
+
+
+# --- TPU v5e profile (roofline constants; see system prompt) ---------------
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    name: str
+    peak_flops_bf16: float
+    hbm_bytes_per_s: float
+    ici_bytes_per_s_per_link: float
+    hbm_capacity_bytes: float
+    vmem_bytes: float
+
+    def compute_term_s(self, flops: float, chips: int) -> float:
+        return flops / (chips * self.peak_flops_bf16)
+
+    def memory_term_s(self, hbm_bytes: float, chips: int) -> float:
+        return hbm_bytes / (chips * self.hbm_bytes_per_s)
+
+    def collective_term_s(self, coll_bytes: float, chips: int) -> float:
+        return coll_bytes / (chips * self.ici_bytes_per_s_per_link)
+
+
+TPU_V5E = TPUSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bytes_per_s=819e9,
+    ici_bytes_per_s_per_link=50e9,
+    hbm_capacity_bytes=16 * 2**30,
+    vmem_bytes=128 * 2**20,
+)
+
+# The TPU-native interpretation of the paper's (DRAM, Flash) pair:
+# local HBM as the expert cache, host DRAM over PCIe-DMA as the backing
+# store.  Used by the "tpu_offload" cost-model profile.
+TPU_OFFLOAD = SystemSpec(
+    name="tpu_offload",
+    compute=ComputeSpec(
+        name="tpu_v5e_chip",
+        peak_ops_per_s=197e12 * 2,  # int8 ~= 2x bf16 on the MXU
+        ops_per_watt=197e12 / 170,  # ~170 W TDP per v5e chip
+        native_precision_bits=8,
+    ),
+    dram=MemoryTier(
+        name="hbm",
+        bandwidth_bytes_per_s=819e9,
+        energy_pj_per_bit=0.5,
+        capacity_bytes=16 * 2**30,
+    ),
+    flash=MemoryTier(
+        name="host_dram_dma",
+        bandwidth_bytes_per_s=32e9,   # PCIe gen4 x16-ish effective
+        energy_pj_per_bit=15.0,
+        capacity_bytes=512 * 2**30,
+    ),
+)
+
+SYSTEM_PROFILES = {
+    "mobile_soc": MOBILE_SOC,
+    "tpu_offload": TPU_OFFLOAD,
+}

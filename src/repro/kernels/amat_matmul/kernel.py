@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused AMAT group-dequant + matmul.
+
+The paper's XPU dequantizes bit-sliced experts in fixed-function hardware
+in front of the systolic array.  The TPU-native equivalent fuses the
+G32 asymmetric dequant into the matmul's K-loop at VMEM-tile granularity:
+a ``(bk, bn)`` uint8 code tile is dequantized in VREGs (subtract zp,
+scale — and for the MSB-only path, a right-shift on code and zp first)
+and immediately fed to the MXU, so the f32 weight tile never exists in
+HBM.  Grid: ``(M/bm, N/bn, K/bk)`` with K innermost, accumulating into
+the output tile (revisited across the K dimension).
+
+Tiling constraints: ``bk % group_size == 0`` so each K-tile covers whole
+quantization groups; bm/bn multiples of (8, 128) keep the MXU aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _amat_matmul_kernel(x_ref, c_ref, s_ref, z_ref, o_ref, acc_ref, *,
+                        group_size: int, shift: int, low: bool,
+                        n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)              # [bm, bk]
+    codes = c_ref[...]                              # [bk, bn] uint8
+    s = s_ref[...].astype(jnp.float32)              # [bk//G, bn]
+    z = z_ref[...].astype(jnp.float32)              # [bk//G, bn]
+
+    bk, bn = codes.shape
+    g = bk // group_size
+    c = codes.reshape(g, group_size, bn).astype(jnp.float32)
+    zb = z.reshape(g, 1, bn)
+    sb = s.reshape(g, 1, bn)
+    if low and shift > 0:
+        c = jnp.floor(c * (0.5 ** shift))
+        zb = jnp.floor(zb * (0.5 ** shift))
+        sb = sb * (2.0 ** shift)
+    w = ((c - zb) * sb).reshape(bk, bn)             # dequant in VREGs
+
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def amat_matmul_pallas(x, codes, scales, zps, *, group_size: int = 32,
+                       shift: int = 0, mode: str = "high",
+                       bm: int = 128, bn: int = 128, bk: int = 128,
+                       interpret: bool = False):
+    """x: [M, K]; codes: [K, N] uint8; scales/zps: [K//G, N] -> [M, N] f32."""
+    M, K = x.shape
+    K2, N = codes.shape
+    assert K == K2 and K % group_size == 0
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert bk % group_size == 0, "K tile must cover whole groups"
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        f"pad inputs to block multiples: {(M, N, K)} vs {(bm, bn, bk)}"
+    n_k = K // bk
+    gs_per_bk = bk // group_size
+
+    kernel = functools.partial(
+        _amat_matmul_kernel, group_size=group_size, shift=shift,
+        low=(mode == "low"), n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((gs_per_bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((gs_per_bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        # f32 accumulator tile in VMEM, revisited across the K grid dim
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, scales, zps)

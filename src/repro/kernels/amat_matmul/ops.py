@@ -1,0 +1,58 @@
+"""Jit'd public wrapper for the fused AMAT dequant-matmul kernel.
+
+Handles padding to block multiples, backend detection (interpret=True on
+CPU — executes the kernel body in Python for correctness validation; on
+TPU the same BlockSpecs drive real VMEM tiling) and the QuantizedTensor
+calling convention.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.amat_matmul.kernel import amat_matmul_pallas
+from repro.quant.groupquant import QuantizedTensor
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("group_size", "shift", "mode",
+                                   "bm", "bn", "bk", "interpret"))
+def amat_matmul(x, codes, scales, zps, *, group_size: int = 32,
+                shift: int = 0, mode: str = "high",
+                bm: int = 128, bn: int = 128, bk: int = 128,
+                interpret: bool | None = None):
+    """x [M, K] @ dequant(codes [K, N]) -> [M, N] f32."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    M, K = x.shape
+    N = codes.shape[1]
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    bk_ = max(group_size, bk_ - bk_ % group_size)
+    # pad to block multiples
+    xp = _pad_to(_pad_to(x, bm_, 0), bk_, 1)
+    cp = _pad_to(_pad_to(codes, bk_, 0), bn_, 1)
+    sp = _pad_to(_pad_to(scales, bk_ // group_size, 0), bn_, 1)
+    zp_ = _pad_to(_pad_to(zps, bk_ // group_size, 0), bn_, 1)
+    out = amat_matmul_pallas(
+        xp, cp, sp, zp_, group_size=group_size, shift=shift, mode=mode,
+        bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    return out[:M, :N]
+
+
+def amat_matmul_qt(x, qt: QuantizedTensor, *, shift: int = 0,
+                   mode: str = "high", **kw):
+    assert qt.asymmetric, "AMAT kernel expects asymmetric group quant"
+    return amat_matmul(x, qt.codes, qt.scales,
+                       qt.zero_points, group_size=qt.group_size,
+                       shift=shift, mode=mode, **kw)

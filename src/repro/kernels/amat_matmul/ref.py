@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused AMAT dequant-matmul kernel.
+
+Computes ``x @ dequant(w_q)`` where ``w_q`` is a G-group asymmetric
+AMAT-quantized weight.  ``mode`` selects the precision path:
+  'high' — full-precision codes:       (q - zp) * s
+  'low'  — AMAT truncated (MSB-only):  (q>>shift - zp>>shift) * s * 2^shift
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def amat_matmul_ref(x, codes, scales, zps, *, group_size: int = 32,
+                    shift: int = 0, mode: str = "high"):
+    """x: [M, K] float; codes: [K, N] uint8; scales/zps: [K//G, N]."""
+    K, N = codes.shape
+    G = K // group_size
+    c = codes.reshape(G, group_size, N).astype(jnp.float32)
+    z = zps.reshape(G, 1, N).astype(jnp.float32)
+    s = scales.reshape(G, 1, N).astype(jnp.float32)
+    if mode == "low" and shift > 0:
+        c = jnp.floor(c / (2.0 ** shift))
+        z = jnp.floor(z / (2.0 ** shift))
+        s = s * (2.0 ** shift)
+    w = ((c - z) * s).reshape(K, N)
+    return x.astype(jnp.float32) @ w

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: batched per-expert sliced dequant matmul (DBSC).
+
+Computes the expert FFN matmul for the ``[E, C, d]`` dispatch buffer with
+**per-expert precision selection**: expert ``e`` dequantizes its AMAT
+codes at high precision (MSB+LSB) iff ``use_lsb[e]``, else at the
+truncated MSB-only precision — all in VMEM, branch-free (the select is a
+VREG ``where`` on the dequant constants, so both paths cost one FMA).
+
+Grid: ``(E, C/bm, N/bn, K/bk)``; the per-expert flag rides along as a
+``(1, 1)`` VMEM block indexed by the expert grid axis.  On a real v5e
+the E axis is sharded over the `model` mesh axis *outside* the kernel
+(shard_map/GSPMD) — the kernel sees its local expert shard.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _expert_matmul_kernel(u_ref, x_ref, c_ref, s_ref, z_ref, o_ref,
+                          acc_ref, *, group_size: int, shift: int,
+                          n_k: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)                # [bm, bk]
+    codes = c_ref[0]                                # [bk, bn] uint8
+    s = s_ref[0].astype(jnp.float32)                # [bk//G, bn]
+    z = z_ref[0].astype(jnp.float32)
+    hi = u_ref[0, 0] > 0                            # per-expert flag
+
+    bk, bn = codes.shape
+    g = bk // group_size
+    c = codes.reshape(g, group_size, bn).astype(jnp.float32)
+    zb = z.reshape(g, 1, bn)
+    sb = s.reshape(g, 1, bn)
+
+    inv = 0.5 ** shift
+    c_lo = jnp.floor(c * inv)
+    z_lo = jnp.floor(zb * inv)
+    # branch-free select between the two dequant paths
+    c_sel = jnp.where(hi, c, c_lo)
+    z_sel = jnp.where(hi, zb, z_lo)
+    s_sel = jnp.where(hi, sb, sb * (2.0 ** shift))
+    w = ((c_sel - z_sel) * s_sel).reshape(bk, bn)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def expert_matmul_pallas(x, codes, scales, zps, use_lsb, *,
+                         group_size: int = 32, shift: int = 4,
+                         bm: int = 128, bn: int = 128, bk: int = 128,
+                         interpret: bool = False):
+    """x: [E, C, K]; codes: [E, K, N]; use_lsb: [E] -> [E, C, N] f32."""
+    E, C, K = x.shape
+    N = codes.shape[2]
+    bm, bn, bk = min(bm, C), min(bn, N), min(bk, K)
+    assert bk % group_size == 0
+    assert C % bm == 0 and N % bn == 0 and K % bk == 0
+    n_k = K // bk
+    g_bk = bk // group_size
+    u = use_lsb.astype(jnp.int32).reshape(E, 1)
+
+    kernel = functools.partial(
+        _expert_matmul_kernel, group_size=group_size, shift=shift, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(E, C // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda e, i, j, k: (e, 0)),
+            pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, g_bk, bn), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, g_bk, bn), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(u, x, codes, scales, zps)

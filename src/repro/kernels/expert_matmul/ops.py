@@ -1,0 +1,49 @@
+"""Jit'd wrapper for the batched sliced expert matmul kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.expert_matmul.kernel import expert_matmul_pallas
+from repro.quant.groupquant import QuantizedTensor
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("group_size", "shift",
+                                   "bm", "bn", "bk", "interpret"))
+def expert_matmul(x, codes, scales, zps, use_lsb, *, group_size: int = 32,
+                  shift: int = 4, bm: int = 128, bn: int = 128,
+                  bk: int = 128, interpret: bool | None = None):
+    """[E, C, K] x [E, K, N] (AMAT codes, per-expert precision) -> [E, C, N]."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    E, C, K = x.shape
+    N = codes.shape[2]
+    bm_, bn_, bk_ = min(bm, C), min(bn, N), min(bk, K)
+    bk_ = max(group_size, bk_ - bk_ % group_size)
+    xp = _pad_to(_pad_to(x, bm_, 1), bk_, 2)
+    cp = _pad_to(_pad_to(codes, bk_, 1), bn_, 2)
+    sp = _pad_to(_pad_to(scales, bk_ // group_size, 1), bn_, 2)
+    zp_ = _pad_to(_pad_to(zps, bk_ // group_size, 1), bn_, 2)
+    out = expert_matmul_pallas(
+        xp, cp, sp, zp_, use_lsb, group_size=group_size, shift=shift,
+        bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    return out[:, :C, :N]
+
+
+def expert_matmul_qt(x, qt: QuantizedTensor, use_lsb, *, shift: int,
+                     **kw):
+    assert qt.asymmetric
+    return expert_matmul(x, qt.codes, qt.scales, qt.zero_points, use_lsb,
+                         group_size=qt.group_size, shift=shift, **kw)

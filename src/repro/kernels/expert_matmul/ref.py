@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the per-expert sliced dequant matmul.
+
+Batched over experts: ``y[e] = x[e] @ dequant_e(codes[e])`` where expert e
+dequantizes at high precision (MSB+LSB) iff ``use_lsb[e]`` — exactly the
+DBSC mixed-precision expert FFN (paper §4.1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def expert_matmul_ref(x, codes, scales, zps, use_lsb, *,
+                      group_size: int = 32, shift: int = 4):
+    """x: [E, C, K]; codes: [E, K, N]; scales/zps: [E, K//G, N];
+    use_lsb: [E] bool.  Returns [E, C, N] f32."""
+    E, K, N = codes.shape
+    G = K // group_size
+    c = codes.reshape(E, G, group_size, N).astype(jnp.float32)
+    z = zps.reshape(E, G, 1, N).astype(jnp.float32)
+    s = scales.reshape(E, G, 1, N).astype(jnp.float32)
+
+    w_hi = (c - z) * s
+    c_lo = jnp.floor(c / (2.0 ** shift))
+    z_lo = jnp.floor(z / (2.0 ** shift))
+    w_lo = (c_lo - z_lo) * (s * (2.0 ** shift))
+
+    sel = use_lsb.reshape(E, 1, 1, 1)
+    w = jnp.where(sel, w_hi, w_lo).reshape(E, K, N)
+    return jnp.einsum("eck,ekn->ecn", x.astype(jnp.float32), w)

@@ -1,0 +1,137 @@
+"""Pallas TPU flash attention (causal, GQA, optional sliding window).
+
+Online-softmax over KV tiles with (m, l, acc) carried in VMEM scratch.
+Grid: ``(B*Hkv, rep, Sq/bq, Sk/bk)`` — the KV axis is innermost so the
+(bq, d) accumulator tile is revisited across KV tiles; one GQA KV head
+serves ``rep`` query heads without re-streaming K/V from HBM for each
+(the kernel-level reuse a naive per-head loop can't get).
+
+Causality is exploited structurally: a KV tile entirely above the
+diagonal contributes nothing, so its work is skipped under ``pl.when``
+(on TPU the MXU still schedules the grid step, but no VMEM writes
+happen; with a Mosaic grid-skipping hint this becomes a true 2x).
+
+Tiles: ``bq x d`` and ``bk x d`` in VMEM; softmax stats f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, sq: int, sk: int, causal: bool,
+                  window, n_k: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # skip KV tiles fully above the causal diagonal
+    if causal:
+        needed = k_start <= q_start + bq - 1
+    else:
+        needed = jnp.bool_(True)
+
+    @pl.when(needed)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32)              # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                 # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < sk
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           sliding_window=None, bq: int = 128,
+                           bk: int = 128, interpret: bool = False):
+    """q: [B, Sq, H, D]; k/v: [B, Sk, Hkv, D] -> [B, Sq, H, D] f32.
+
+    H must be a multiple of Hkv (GQA).  Sq/Sk padded to tile multiples.
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    bq_, bk_ = min(bq, sq), min(bk, sk)
+    pq = (-sq) % bq_
+    pk = (-sk) % bk_
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    sq_p, sk_p = sq + pq, sk + pk
+    n_q, n_k = sq_p // bq_, sk_p // bk_
+
+    # [B, S, H, D] -> [B*Hkv, rep, S, D] so one KV head serves rep q-heads
+    qr = jnp.moveaxis(q.reshape(b, sq_p, hkv, rep, d), 1, 3) \
+        .reshape(b * hkv, rep, sq_p, d)
+    kr = jnp.moveaxis(k, 1, 2).reshape(b * hkv, sk_p, d)
+    vr = jnp.moveaxis(v, 1, 2).reshape(b * hkv, sk_p, d)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq_, bk=bk_, sq=sq, sk=sk, causal=causal,
+        window=sliding_window, n_k=n_k, scale=d ** -0.5)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hkv, rep, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, d), lambda g, r, i, j: (g, r, i, 0)),
+            pl.BlockSpec((1, bk_, d), lambda g, r, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bk_, d), lambda g, r, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, d),
+                               lambda g, r, i, j: (g, r, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, rep, sq_p, d),
+                                       jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq_,), jnp.float32),      # m
+            pltpu.VMEM((bq_,), jnp.float32),      # l
+            pltpu.VMEM((bq_, d), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+
+    out = out.reshape(b, hkv, rep, sq_p, d)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq_p, h, d)
+    return out[:, :sq]

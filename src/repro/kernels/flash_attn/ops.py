@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the Pallas flash-attention kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "sliding_window", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, sliding_window=None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return flash_attention_pallas(
+        q, k, v, causal=causal, sliding_window=sliding_window,
+        bq=bq, bk=bk, interpret=interpret)

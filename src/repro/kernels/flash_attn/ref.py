@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel (causal, GQA,
+optional sliding window)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        sliding_window=None):
+    """q: [B, Sq, H, D]; k/v: [B, Sk, Hkv, D] -> [B, Sq, H, D] f32."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf) \
+        * (d ** -0.5)
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if sliding_window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < sliding_window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf)

@@ -1,0 +1,398 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) pair.
+
+MUST be executed as its own process (``python -m repro.launch.dryrun``) —
+the device-count flag above is set before any jax import and jax locks
+device count at first init.  Smoke tests and benchmarks never import this
+module, so they see the real single CPU device.
+
+Per pair it records into ``results/dryrun/<arch>__<shape>__<mesh>.json``:
+  * compiled memory analysis (per-device argument/output/temp bytes),
+  * cost analysis (HLO FLOPs, bytes accessed),
+  * collective-op byte totals parsed from the post-SPMD optimized HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), and
+  * the three roofline terms for TPU v5e (see EXPERIMENTS.md §Roofline).
+
+``--all`` fans out over every supported pair in subprocesses (one compile
+per process keeps peak RSS bounded on the 1-core container).
+"""
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.hw.specs import TPU_V5E
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import mesh_context
+from repro.launch.specs import input_specs
+from repro.launch.steps import shape_supported, step_for_shape
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../results/dryrun")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_COMP_HEADER = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?\)\s*,\s*condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(text: str):
+    """HLO module text -> {computation_name: [instruction lines]}."""
+    comps = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        s = line.strip()
+        m = _COMP_HEADER.match(s)
+        if m and s.endswith("{"):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps, entry
+
+
+def _line_collective(rhs: str):
+    for c in _COLLECTIVES:
+        if re.search(rf"\b{c}(-start)?\(", rhs):
+            return c
+        if f"{c}-done(" in rhs:
+            return None  # counted at -start
+    return None
+
+
+def _collective_bytes_of_line(rhs: str) -> float:
+    call = rhs.split("(", 1)
+    operand_shapes = _SHAPE_RE.findall(call[1]) if len(call) > 1 else []
+    if not operand_shapes:
+        operand_shapes = _SHAPE_RE.findall(call[0])[:1]
+    return float(sum(_shape_bytes(dt, dims) for dt, dims in operand_shapes))
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op, scaled by while trip
+    counts.
+
+    XLA HLO text lists a scan/while body computation once; a collective
+    inside it executes trip-count times.  We build the computation call
+    graph (while bodies/conditions, fusions, custom calls), extract each
+    while's trip count from the s32 constant in its condition
+    computation, and multiply collective bytes by the product of
+    enclosing trip counts.
+    """
+    comps, entry = _split_computations(hlo_text)
+
+    # Per-computation: local collectives, while edges, plain call edges.
+    local = {}      # comp -> list[(op, bytes)]
+    whiles = {}     # comp -> list[(cond, body)]
+    calls = {}      # comp -> set[callee]
+    for name, lines in comps.items():
+        loc, wh, cl = [], [], set()
+        for s in lines:
+            m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)$", s)
+            if not m:
+                continue
+            rhs = m.group(1)
+            wm = _WHILE_RE.search(rhs)
+            if wm:
+                wh.append((wm.group(1), wm.group(2)))
+                continue
+            for cm in _CALL_RE.finditer(rhs):
+                cl.add(cm.group(1))
+            op = _line_collective(rhs)
+            if op is not None:
+                loc.append((op, _collective_bytes_of_line(rhs)))
+        local[name] = loc
+        whiles[name] = wh
+        calls[name] = cl
+
+    def trip_count(cond: str) -> int:
+        consts = [int(x) for x in _CONST_S32.findall(
+            "\n".join(comps.get(cond, [])))]
+        return max(consts) if consts else 1
+
+    totals = {c: 0.0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    unscaled_whiles = 0
+
+    seen = set()
+
+    def walk(comp: str, factor: float):
+        nonlocal unscaled_whiles
+        key = (comp, factor)
+        if key in seen or comp not in comps:
+            return
+        seen.add(key)
+        for op, nb in local.get(comp, []):
+            totals[op] += nb * factor
+            counts[op] += int(round(factor))
+        for callee in calls.get(comp, ()):
+            walk(callee, factor)
+        for cond, body in whiles.get(comp, ()):
+            t = trip_count(cond)
+            if t == 1:
+                unscaled_whiles += 1
+            walk(body, factor * t)
+            walk(cond, factor * t)
+
+    if entry is not None:
+        walk(entry, 1.0)
+    else:  # fallback: flat scan, unscaled
+        for name in comps:
+            for op, nb in local.get(name, []):
+                totals[op] += nb
+                counts[op] += 1
+
+    return {"bytes": totals, "counts": counts,
+            "total_bytes": sum(totals.values()),
+            "total_count": sum(counts.values()),
+            "unscaled_whiles": unscaled_whiles}
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference) reference FLOPs."""
+    from repro.launch.costs import model_flops_reference
+
+    return model_flops_reference(cfg, shape)
+
+
+VARIANTS = {
+    "baseline": {},
+    "seqpar": {"seq_parallel": True},
+    "onehot": {"onehot_embed": True},
+    "seqpar_onehot": {"seq_parallel": True, "onehot_embed": True},
+    "int8kv": {"kv_dtype": "int8"},
+    "qserve": {"quantized_serve": True},
+    "qserve_int8kv": {"quantized_serve": True, "kv_dtype": "int8"},
+    "ringkv": {"ring_kv": True},
+    "ringkv_qserve": {"ring_kv": True, "quantized_serve": True},
+    "seqpar_dots": {"seq_parallel": True, "remat_policy": "dots"},
+    "seqpar_dots_padvocab": {"seq_parallel": True, "remat_policy": "dots",
+                             "pad_vocab_to": 256},
+}
+
+
+def run_pair(arch: str, shape_name: str, mesh_kind: str,
+             save: bool = True, variant: str = "baseline") -> dict:
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if variant != "baseline":
+        cfg = _dc.replace(cfg, **VARIANTS[variant])
+    shape = SHAPES[shape_name]
+    ok, reason = shape_supported(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant,
+        "timestamp": time.time(),
+    }
+    if not ok:
+        rec.update({"status": "skipped", "reason": reason})
+        if save:
+            _save(rec)
+        return rec
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    step, donate = step_for_shape(cfg, shape)
+    specs = input_specs(cfg, shape, mesh)
+
+    t0 = time.time()
+    try:
+        with mesh_context(mesh):
+            lowered = jax.jit(step, donate_argnums=donate).lower(*specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = {}
+            try:
+                ma = compiled.memory_analysis()
+                for attr in ("argument_size_in_bytes",
+                             "output_size_in_bytes",
+                             "temp_size_in_bytes",
+                             "alias_size_in_bytes",
+                             "generated_code_size_in_bytes"):
+                    if hasattr(ma, attr):
+                        mem[attr] = int(getattr(ma, attr))
+            except Exception as e:          # noqa: BLE001
+                mem["error"] = str(e)
+
+            cost = {}
+            try:
+                ca = compiled.cost_analysis()
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0]
+                cost = {k: float(v) for k, v in ca.items()
+                        if isinstance(v, (int, float))}
+            except Exception as e:          # noqa: BLE001
+                cost["error"] = str(e)
+
+            hlo = compiled.as_text()
+            coll = parse_collectives(hlo)
+    except Exception as e:                   # noqa: BLE001
+        rec.update({"status": "error", "error": repr(e),
+                    "traceback": traceback.format_exc()[-4000:]})
+        if save:
+            _save(rec)
+        return rec
+
+    from repro.launch.costs import analytic_costs
+
+    ac = analytic_costs(cfg, shape)
+    coll_bytes = coll["total_bytes"]
+
+    # Analytic flops/bytes for the compute & memory terms: XLA CPU
+    # cost_analysis counts while bodies once (verified), so HLO-reported
+    # numbers understate scanned-layer cost by ~n_layers.  Raw HLO values
+    # are kept below as diagnostics.  Collective bytes come from the HLO,
+    # scaled by while trip counts.
+    terms = {
+        "compute_s": ac.flops / (n_chips * TPU_V5E.peak_flops_bf16),
+        "memory_s": ac.hbm_bytes / (n_chips * TPU_V5E.hbm_bytes_per_s),
+        "collective_s": coll_bytes / (n_chips *
+                                      TPU_V5E.ici_bytes_per_s_per_link),
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+
+    rec.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "cost": cost,
+        "collectives": coll,
+        "analytic": {"flops": ac.flops, "hbm_bytes": ac.hbm_bytes,
+                     **ac.detail},
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "model_flops": mf,
+            "analytic_flops": ac.flops,
+            "hlo_flops_raw": cost.get("flops", 0.0),
+            "hlo_bytes_raw": cost.get("bytes accessed", 0.0),
+            "useful_flops_ratio": mf / ac.flops if ac.flops else None,
+            "bytes_per_chip": (mem.get("argument_size_in_bytes", 0)
+                               + mem.get("temp_size_in_bytes", 0)) / max(n_chips, 1),
+        },
+    })
+    if save:
+        _save(rec)
+    return rec
+
+
+def _save(rec: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = "" if rec.get("variant", "baseline") == "baseline" \
+        else f"__{rec['variant']}"
+    fname = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json"
+    with open(os.path.join(RESULTS_DIR, fname), "w") as f:
+        json.dump(rec, f, indent=2)
+
+
+def _already_done(arch, shape, mesh_kind) -> bool:
+    fname = os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_kind}.json")
+    if not os.path.exists(fname):
+        return False
+    with open(fname) as f:
+        return json.load(f).get("status") in ("ok", "skipped")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variant", default="baseline",
+                    choices=list(VARIANTS))
+    ap.add_argument("--all", action="store_true",
+                    help="run every pair in subprocesses (resumable)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        pairs = [(a, s, m) for a in ARCH_IDS for s in SHAPES
+                 for m in ("single", "multi")]
+        failed = []
+        for a, s, m in pairs:
+            if not args.force and _already_done(a, s, m):
+                print(f"[skip-cached] {a} {s} {m}")
+                continue
+            print(f"[run] {a} {s} {m}", flush=True)
+            r = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", a, "--shape", s, "--mesh", m],
+                env={**os.environ},
+            )
+            if r.returncode != 0:
+                failed.append((a, s, m))
+        print(f"done; {len(failed)} failures: {failed}")
+        return 1 if failed else 0
+
+    assert args.arch and args.shape
+    rec = run_pair(args.arch, args.shape, args.mesh, variant=args.variant)
+    status = rec["status"]
+    if status == "ok":
+        rl = rec["roofline"]
+        print(f"OK {args.arch} {args.shape} {args.mesh}: "
+              f"compute={rl['compute_s']:.3e}s memory={rl['memory_s']:.3e}s "
+              f"collective={rl['collective_s']:.3e}s "
+              f"dominant={rl['dominant']} "
+              f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s)")
+        return 0
+    if status == "skipped":
+        print(f"SKIPPED {args.arch} {args.shape}: {rec['reason']}")
+        return 0
+    print(f"ERROR {args.arch} {args.shape} {args.mesh}: {rec['error']}")
+    print(rec.get("traceback", ""))
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,193 @@
+"""Sharding rules: param-tree path -> PartitionSpec, + in-graph hints.
+
+Divisibility-safe: every rule is filtered against the actual dimension
+sizes — an axis that doesn't divide the dim is dropped (GSPMD would
+otherwise reject the sharding).  This is what lets one rule set serve
+head counts from 14 (internvl2) to 48 (nemotron) on a 16-way model axis.
+
+``shard_hint`` is the in-graph constraint hook used by the model code;
+it resolves against a module-level "current mesh" so the model never
+depends on launch wiring (and is a no-op in single-device tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisSpec = Union[None, str, Tuple[str, ...]]
+
+_CURRENT_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _CURRENT_MESH
+    _CURRENT_MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CURRENT_MESH
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def _axis_size(mesh: Mesh, axis: AxisSpec) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis] if axis in mesh.axis_names else 0
+    return int(np.prod([_axis_size(mesh, a) for a in axis]))
+
+
+def sanitize_spec(mesh: Mesh, shape: Sequence[int],
+                  spec: Sequence[AxisSpec]) -> P:
+    """Drop axes that are absent from the mesh or don't divide the dim."""
+    clean = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            clean.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if axes and size > 0 and dim % size == 0:
+            clean.append(axes[0] if len(axes) == 1 else axes)
+        else:
+            # try prefixes (e.g. ('pod','data') -> ('pod',))
+            ok = None
+            for i in range(len(axes) - 1, 0, -1):
+                sub = axes[:i]
+                size = int(np.prod([mesh.shape[a] for a in sub]))
+                if dim % size == 0:
+                    ok = sub[0] if len(sub) == 1 else sub
+                    break
+            clean.append(ok)
+    return P(*clean)
+
+
+def shard_hint(x: jax.Array, *spec: AxisSpec) -> jax.Array:
+    """with_sharding_constraint against the current mesh (no-op if unset)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    if len(spec) < x.ndim:
+        spec = tuple(spec) + (None,) * (x.ndim - len(spec))
+    pspec = sanitize_spec(mesh, x.shape, spec)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+
+
+# --------------------------------------------------------------------------
+# Parameter sharding rules
+# --------------------------------------------------------------------------
+# (path regex, spec-from-ndim) — first match wins.  Specs are given for the
+# *unstacked* shape; a leading period/layer-stack dim is auto-prepended.
+_RULES = [
+    # embeddings: vocab -> model, d_model -> data
+    (r"embed$", ("model", "data")),
+    (r"unembed$", ("data", "model")),
+    # attention projections
+    (r"(wq|wk|wv|c_wq|c_wk|c_wv)$", ("data", "model")),
+    (r"(wo|c_wo)$", ("model", "data")),
+    (r"(bq|bk|bv)$", ("model",)),
+    # dense mlp
+    (r"mlp/wi$", ("data", "model")),
+    (r"mlp/wo$", ("model", "data")),
+    # shared experts
+    (r"shared/wi$", ("data", "model")),
+    (r"shared/wo$", ("model", "data")),
+    # moe
+    (r"w_router$", ("data", None)),
+    (r"experts/wi$", ("model", "data", None)),
+    (r"experts/wo$", ("model", None, "data")),
+    # AMAT-quantized serve-form experts (EXPERIMENTS.md §Perf hillclimb 1,
+    # iterations 2-3).  wi codes shard on the OUTPUT dim (N): dequant is
+    # local and the first einsum emits an N-sharded activation.  wo codes
+    # shard on the CONTRACTION dim (F), aligned with that activation, so
+    # the second einsum is a local partial dot + a small all-reduce of
+    # [E,C,d] — instead of GSPMD replicating the dequantized f32 wo tile
+    # (a measured 66 GB/step all-gather on maverick decode).
+    (r"experts/wi_(codes|scales|zps)$", ("model", None, "data")),
+    (r"experts/wo_(codes|scales|zps)$", ("model", "data", None)),
+    # ssm
+    (r"ssm/in_proj$", ("data", "model")),
+    (r"ssm/out_proj$", ("model", "data")),
+    (r"ssm/conv_w$", (None, "model")),
+    (r"ssm/conv_b$", ("model",)),
+    (r"ssm/(A_log|D|dt_bias)$", (None,)),
+    # norms / everything 1-D: replicated
+    (r".*", (None,)),
+]
+
+_STACKED_PREFIX = re.compile(r"blocks/pos\d+/|encoder/blocks/")
+
+
+def param_spec(path: str, shape: Tuple[int, ...]) -> Tuple[AxisSpec, ...]:
+    """Raw (unsanitized) axis spec for a param path."""
+    stacked = bool(_STACKED_PREFIX.search(path))
+    core_ndim = len(shape) - (1 if stacked else 0)
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            spec = tuple(spec)[:core_ndim]
+            spec = spec + (None,) * (core_ndim - len(spec))
+            return ((None,) + spec) if stacked else spec
+    return (None,) * len(shape)
+
+
+def tree_paths(tree) -> list:
+    """Flatten a pytree into ('a/b/c', leaf) pairs.
+
+    Int-tuples (shape tuples) count as leaves, matching the ``is_leaf``
+    used when flattening shape trees.
+    """
+    def is_shape(x):
+        return isinstance(x, tuple) and all(isinstance(i, int) for i in x)
+
+    out = []
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(node[k], path + (str(k),))
+        elif isinstance(node, (list, tuple)) and not is_shape(node):
+            for i, v in enumerate(node):
+                rec(v, path + (str(i),))
+        else:
+            out.append(("/".join(path), node))
+    rec(tree, ())
+    return out
+
+
+def param_shardings(mesh: Mesh, shapes_tree) -> "dict":
+    """Map a param-shapes tree to a NamedSharding tree (same structure)."""
+    def is_shape(x):
+        return isinstance(x, tuple) and all(isinstance(i, int) for i in x)
+
+    flat = tree_paths(shapes_tree)
+    path_for_id = {}
+    leaves, treedef = jax.tree_util.tree_flatten(
+        shapes_tree, is_leaf=is_shape)
+    # tree_paths and tree_flatten both use sorted-dict order; align by index
+    assert len(flat) == len(leaves)
+    out = []
+    for (path, shape) in flat:
+        spec = param_spec(path, shape)
+        out.append(NamedSharding(mesh, sanitize_spec(mesh, shape, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

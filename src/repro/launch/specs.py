@@ -1,0 +1,169 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape, mesh)`` returns the full argument pytree for the
+step function selected by the shape kind (train / prefill / decode), with
+NamedShardings attached so ``jax.jit(step).lower(*specs)`` both shapes and
+shards the computation — the multi-pod dry-run path.
+
+Modality stubs (the one allowed carve-out): VLM prefix patch-embeddings
+and whisper encoder frame-embeddings enter here as ready-made
+``[B, P, d_model]`` float tensors.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.sharding import (param_shardings, param_spec,
+                                   sanitize_spec, tree_paths)
+from repro.models import model as MDL
+from repro.optim.adamw import AdamWConfig
+
+_F32_PARAM = re.compile(r"ssm/(A_log|D|dt_bias)$|_scales$")
+_U8_PARAM = re.compile(r"_(codes|zps)$")
+
+
+def _param_dtype(path: str, cfg) -> "jnp.dtype":
+    if _U8_PARAM.search(path):
+        return jnp.dtype(jnp.uint8)
+    if _F32_PARAM.search(path):
+        return jnp.dtype(jnp.float32)
+    return jnp.dtype(cfg.dtype)
+
+
+def _sds(shape, dtype, mesh: Optional[Mesh], spec) -> jax.ShapeDtypeStruct:
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    ns = NamedSharding(mesh, sanitize_spec(mesh, shape, spec))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=ns)
+
+
+def param_specs(cfg: ModelConfig, mesh: Optional[Mesh]):
+    """SDS tree matching init_params (dtypes included)."""
+    shapes = MDL.param_shapes(cfg)
+
+    def is_shape(x):
+        return isinstance(x, tuple) and all(isinstance(i, int) for i in x)
+
+    flat = tree_paths(shapes)
+    leaves, treedef = jax.tree_util.tree_flatten(shapes, is_leaf=is_shape)
+    out = []
+    for path, shape in flat:
+        spec = param_spec(path, shape)
+        out.append(_sds(shape, _param_dtype(path, cfg), mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Optional[Mesh],
+              opt_cfg: AdamWConfig):
+    """AdamWState SDS tree (f32 moments/master shard like their params)."""
+    from repro.optim.adamw import AdamWState
+
+    p = param_specs(cfg, mesh)
+
+    def as_f32(s):
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                    sharding=getattr(s, "sharding", None))
+    mu = jax.tree_util.tree_map(as_f32, p)
+    nu = jax.tree_util.tree_map(as_f32, p)
+    master = jax.tree_util.tree_map(as_f32, p) if opt_cfg.master_f32 else None
+    step = _sds((), jnp.int32, mesh, ())
+    return AdamWState(step=step, mu=mu, nu=nu, master=master)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                mesh: Optional[Mesh]) -> dict:
+    """Training / prefill batch inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    bspec = ("pod", "data")
+    out = {}
+    s_text = S - cfg.prefix_len if cfg.prefix_len else S
+    out["tokens"] = _sds((B, s_text), jnp.int32, mesh, (bspec, None))
+    if shape.kind == "train":
+        out["labels"] = _sds((B, s_text), jnp.int32, mesh, (bspec, None))
+    if cfg.prefix_len:
+        out["prefix_embeds"] = _sds((B, cfg.prefix_len, cfg.d_model),
+                                    jnp.dtype(cfg.dtype), mesh,
+                                    (bspec, None, None))
+    if cfg.is_encdec:
+        out["encoder_frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                     jnp.dtype(cfg.dtype), mesh,
+                                     (bspec, None, None))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                mesh: Optional[Mesh]) -> dict:
+    """Decode-state SDS tree.  KV: batch->data, seq->model (flash-decoding
+    style partial-softmax sharding); SSM state: batch->data, heads->model."""
+    shapes = jax.eval_shape(
+        lambda: MDL.init_cache(cfg, batch, max_seq))
+
+    def attach(path, sds):
+        if path.endswith("pos"):
+            return _sds(sds.shape, sds.dtype, mesh, ())
+        if re.search(r"/(k|v)$", path):
+            spec = (None, "data", "model", None, None)
+        elif re.search(r"/(k_scale|v_scale)$", path):
+            spec = (None, "data", "model", None)
+        elif re.search(r"/(ck|cv)$", path):
+            spec = (None, "data", None, "model", None)
+        elif path.endswith("state"):
+            spec = (None, "data", "model", None, None)
+        elif path.endswith("conv"):
+            spec = (None, "data", None, "model")
+        else:
+            spec = (None,) * len(sds.shape)
+        return _sds(sds.shape, sds.dtype, mesh, spec)
+
+    flat = tree_paths(shapes)
+    leaves, treedef = jax.tree_util.tree_flatten(shapes)
+    out = [attach(path, sds) for path, sds in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def decode_token_specs(cfg: ModelConfig, batch: int,
+                       mesh: Optional[Mesh]):
+    return _sds((batch,), jnp.int32, mesh, ("data",))
+
+
+def decode_extra_specs(cfg: ModelConfig, batch: int,
+                       mesh: Optional[Mesh]) -> dict:
+    out = {}
+    if cfg.is_encdec:
+        out["encoder_frames"] = _sds(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype),
+            mesh, ("data", None, None))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                mesh: Optional[Mesh], opt_cfg: Optional[AdamWConfig] = None):
+    """Full argument pytree for the shape's step function.
+
+    train   -> (params, opt_state, batch)
+    prefill -> (params, batch)
+    decode  -> (params, cache, token[, extras])
+    """
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        return (param_specs(cfg, mesh), opt_specs(cfg, mesh, opt_cfg),
+                batch_specs(cfg, shape, mesh))
+    if shape.kind == "prefill":
+        return (param_specs(cfg, mesh), batch_specs(cfg, shape, mesh))
+    if shape.kind == "decode":
+        max_seq = shape.seq_len
+        if cfg.ring_kv and cfg.sliding_window:
+            max_seq = min(max_seq, cfg.sliding_window)
+        return (param_specs(cfg, mesh),
+                cache_specs(cfg, shape.global_batch, max_seq, mesh),
+                decode_token_specs(cfg, shape.global_batch, mesh),
+                decode_extra_specs(cfg, shape.global_batch, mesh))
+    raise ValueError(shape.kind)

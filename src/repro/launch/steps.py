@@ -1,0 +1,96 @@
+"""Step functions lowered by the dry-run / executed by the drivers.
+
+One factory per shape kind.  All are pure jit-able functions of
+(params, state..., batch) with the paper-relevant features wired in:
+MoE aux-loss in training, sliding-window attention for long-context
+decode on dense archs, AMAT-quantized expert decode as an option.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as MDL
+from repro.optim import adamw as OPT
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OPT.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, aux = MDL.lm_loss(
+                p, cfg, batch["tokens"], batch["labels"],
+                prefix_embeds=batch.get("prefix_embeds"),
+                encoder_frames=batch.get("encoder_frames"))
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, opt_metrics = OPT.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "aux_loss": aux["aux_loss"], **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                      use_window: bool = False):
+    max_seq = shape.seq_len
+
+    def prefill_step(params, batch):
+        logits, cache, _ = MDL.prefill(
+            params, cfg, batch["tokens"], max_seq,
+            prefix_embeds=batch.get("prefix_embeds"),
+            encoder_frames=batch.get("encoder_frames"),
+            use_window=use_window)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, use_window: bool = False):
+    mat = None
+    if cfg.quantized_serve:
+        from repro.core.amat import MatConfig
+        mat = MatConfig(8, 4)
+
+    def serve_step(params, cache, token, extras):
+        logits, cache, _ = MDL.decode_step(
+            params, cfg, token, cache,
+            encoder_frames=extras.get("encoder_frames"),
+            use_window=use_window, mat=mat)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, cache
+
+    return serve_step
+
+
+def step_for_shape(cfg: ModelConfig, shape: ShapeConfig,
+                   opt_cfg: Optional[OPT.AdamWConfig] = None):
+    """(fn, donate_argnums) for the shape kind.
+
+    long_500k on dense archs uses the sliding-window attention variant
+    (DESIGN.md §4); SSM/hybrid archs run their native sub-quadratic path.
+    """
+    use_window = (shape.name == "long_500k"
+                  and cfg.sliding_window is not None
+                  and cfg.arch_type not in ("ssm",))
+    if shape.kind == "train":
+        return make_train_step(cfg, opt_cfg or OPT.AdamWConfig()), (0, 1)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape, use_window), ()
+    if shape.kind == "decode":
+        return make_decode_step(cfg, use_window), (1,)
+    raise ValueError(shape.kind)
+
+
+def shape_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple:
+    """(supported, reason).  The documented skips from DESIGN.md §4."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch without sliding-window variant "
+                       "— long_500k skipped per DESIGN.md §4")
+    return True, ""

@@ -1,0 +1,134 @@
+"""Training driver: ``python -m repro.launch.train --arch smollm-360m ...``
+
+Runs real training steps on whatever devices exist (the CPU container for
+the examples/tests; the production mesh when launched on a pod).  The
+--mesh flag selects the sharded path: params/opt-state are device_put
+against the same sharding rules the dry-run lowers with, so this driver
+IS the production launcher — the container just has a 1x1 mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ShapeConfig, get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.specs import param_specs
+from repro.launch.steps import make_train_step
+from repro.models import model as MDL
+from repro.optim import adamw as OPT
+from repro.checkpoint import ckpt as CKPT
+
+
+def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
+               opt_cfg=None, mesh=None, log_every: int = 10,
+               ckpt_dir: str | None = None, seed: int = 0,
+               collect_history: bool = False):
+    """Returns final (params, opt_state, history)."""
+    opt_cfg = opt_cfg or OPT.AdamWConfig(total_steps=steps,
+                                         warmup_steps=max(steps // 10, 1))
+    mesh = mesh or make_host_mesh()
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=seq_len,
+                                  global_batch=global_batch, seed=seed))
+    step_fn = make_train_step(cfg, opt_cfg)
+
+    with SH.mesh_context(mesh):
+        params = init_sharded_params(cfg, mesh, seed)
+        opt_state = OPT.init_state(params, opt_cfg)
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        history = []
+        t0 = time.perf_counter()
+        for step, batch in enumerate(data.batches()):
+            if step >= steps:
+                break
+            inputs = {
+                "tokens": jnp.asarray(batch["tokens"]),
+                "labels": jnp.asarray(batch["labels"]),
+            }
+            if cfg.prefix_len:
+                inputs["tokens"] = inputs["tokens"][:, :-cfg.prefix_len]
+                inputs["labels"] = inputs["labels"][:, :-cfg.prefix_len]
+                inputs["prefix_embeds"] = _stub_prefix(
+                    cfg, global_batch, batch["step"])
+            if cfg.is_encdec:
+                inputs["encoder_frames"] = _stub_frames(
+                    cfg, global_batch, batch["step"])
+            params, opt_state, metrics = jit_step(params, opt_state, inputs)
+            if collect_history or step % log_every == 0 or step == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["wall_s"] = time.perf_counter() - t0
+                history.append(m)
+                if step % log_every == 0 or step == steps - 1:
+                    print(f"step {step:5d}  loss {m['loss']:.4f}  "
+                          f"lr {m['lr']:.2e}  gnorm {m['grad_norm']:.2f}",
+                          flush=True)
+        if ckpt_dir:
+            CKPT.save(ckpt_dir, {"params": params}, step=steps)
+    return params, opt_state, history
+
+
+def init_sharded_params(cfg, mesh, seed: int):
+    """init_params with per-leaf device placement matching the rules."""
+    params = MDL.init_params(cfg, jax.random.PRNGKey(seed))
+    specs = param_specs(cfg, mesh)
+    return jax.tree_util.tree_map(
+        lambda p, s: jax.device_put(p, s.sharding), params, specs)
+
+
+def _stub_prefix(cfg, batch, step):
+    rng = np.random.default_rng((step, 0xF00D))
+    return jnp.asarray(rng.standard_normal(
+        (batch, cfg.prefix_len, cfg.d_model), np.float32) * 0.02,
+        jnp.dtype(cfg.dtype))
+
+
+def _stub_frames(cfg, batch, step):
+    rng = np.random.default_rng((step, 0xFEED))
+    return jnp.asarray(rng.standard_normal(
+        (batch, cfg.encoder_seq, cfg.d_model), np.float32) * 0.02,
+        jnp.dtype(cfg.dtype))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant of the arch")
+    ap.add_argument("--mesh", choices=["host", "pod", "multipod"],
+                    default="host")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = {"host": make_host_mesh,
+            "pod": lambda: make_production_mesh(multi_pod=False),
+            "multipod": lambda: make_production_mesh(multi_pod=True)}[
+        args.mesh]()
+    opt_cfg = OPT.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                              warmup_steps=max(args.steps // 10, 1))
+    _, _, history = train_loop(
+        cfg, steps=args.steps, global_batch=args.batch, seq_len=args.seq,
+        opt_cfg=opt_cfg, mesh=mesh, ckpt_dir=args.ckpt)
+    print(json.dumps(history[-1]))
+
+
+if __name__ == "__main__":
+    main()

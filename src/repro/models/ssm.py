@@ -1,0 +1,242 @@
+"""Mamba2 (SSD — state-space duality) mixer, pure JAX.
+
+Implements the chunked SSD algorithm [arXiv:2405.21060] for train/prefill
+and the O(1)-per-token recurrent update for decode.  Used by
+``mamba2-2.7b`` (pure SSM stack) and ``jamba-v0.1-52b`` (1:7
+attention:mamba hybrid — Jamba ships Mamba-1; we adapt it to the SSD form
+with its published state size, see DESIGN.md §3 hardware-adaptation notes).
+
+Shapes (single group g=1 for B/C, broadcast over heads):
+  u        [B, L, d_model]
+  x        [B, L, H, P]      P = head_dim
+  dt       [B, L, H]
+  B_, C_   [B, L, N]         N = d_state
+  state    [B, H, P, N]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+    def conv_channels(self, d_model: int) -> int:
+        return self.d_inner(d_model) + 2 * self.d_state
+
+    def in_proj_cols(self, d_model: int) -> int:
+        # z, x, B, C, dt
+        return (2 * self.d_inner(d_model) + 2 * self.d_state
+                + self.n_heads(d_model))
+
+
+def ssm_param_shapes(d_model: int, cfg: SSMCfg) -> dict:
+    di = cfg.d_inner(d_model)
+    return {
+        "in_proj": (d_model, cfg.in_proj_cols(d_model)),
+        "conv_w": (cfg.d_conv, cfg.conv_channels(d_model)),
+        "conv_b": (cfg.conv_channels(d_model),),
+        "A_log": (cfg.n_heads(d_model),),
+        "D": (cfg.n_heads(d_model),),
+        "dt_bias": (cfg.n_heads(d_model),),
+        "norm_scale": (di,),
+        "out_proj": (di, d_model),
+    }
+
+
+def _split_proj(proj: jax.Array, d_model: int, cfg: SSMCfg):
+    di = cfg.d_inner(d_model)
+    n = cfg.d_state
+    z, x, B_, C_, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, x, B_, C_, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: [B, L, C]; w: [K, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return (out + b).astype(x.dtype)
+
+
+def _segsum(t: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < s <= i} t[..., s]."""
+    L = t.shape[-1]
+    c = jnp.cumsum(t, axis=-1)
+    out = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B_: jax.Array,
+                C_: jax.Array, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x [b,l,h,p], dt [b,l,h] (post-softplus), A [h] (negative), B_/C_ [b,l,n].
+    Returns (y [b,l,h,p], final_state [b,h,p,n]).
+    """
+    b, l, h, p = x.shape
+    n = B_.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    L = x.shape[1]
+    nc = L // chunk
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    Bf = B_.astype(jnp.float32).reshape(b, nc, chunk, n)
+    Cf = C_.astype(jnp.float32).reshape(b, nc, chunk, n)
+
+    dA = dtf * A[None, None, None, :]                     # [b,c,q,h]
+    dA_cum = jnp.cumsum(dA, axis=2)                       # [b,c,q,h]
+
+    # --- intra-chunk (the "attention-like" quadratic term) -----------------
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, 2, 3)))       # [b,c,h,q,q]
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cf, Bf)            # [b,c,q,q]
+    gate = Lmat * CB[:, :, None]                          # [b,c,h,q,k]
+    xdt = xf * dtf[..., None]                             # [b,c,q,h,p]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", gate, xdt)
+
+    # --- chunk boundary states ---------------------------------------------
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # [b,c,q,h]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bf,
+                        decay_states * dtf, xf)            # [b,c,h,p,n]
+
+    # --- inter-chunk recurrence over chunk states ---------------------------
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # [b,c,h]
+
+    def scan_fn(carry, xs):
+        st_prev = carry                                     # [b,h,p,n]
+        st_c, dec_c = xs                                    # [b,h,p,n], [b,h]
+        st_new = st_prev * dec_c[..., None, None] + st_c
+        return st_new, st_prev
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    states_t = jnp.moveaxis(states, 1, 0)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init_state.astype(jnp.float32), (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # [b,c,h,p,n]
+
+    # --- contribution of previous-chunk states -----------------------------
+    state_decay = jnp.exp(dA_cum)                          # [b,c,q,h]
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cf, prev_states,
+                       state_decay)
+
+    y = (y_diag + y_off).reshape(b, L, h, p)[:, :l]
+    return y.astype(x.dtype), final_state
+
+
+def ssm_forward(params: dict, u: jax.Array, cfg: SSMCfg,
+                init_state=None, init_conv=None, return_state=False):
+    """Full Mamba2 mixer forward over a sequence.  u: [B, L, d_model]."""
+    b, l, d_model = u.shape
+    di = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+
+    proj = u @ params["in_proj"]
+    z, xc, Bc, Cc, dt = _split_proj(proj, d_model, cfg)
+
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    if init_conv is not None:
+        conv_in = jnp.concatenate([init_conv.astype(conv_in.dtype), conv_in],
+                                  axis=1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    if init_conv is not None:
+        conv_out = conv_out[:, init_conv.shape[1]:]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(u.dtype)
+    xc, Bc, Cc = jnp.split(conv_out, [di, di + cfg.d_state], axis=-1)
+
+    x = xc.reshape(b, l, h, cfg.head_dim)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    y, state = ssd_chunked(x, dt, A, Bc, Cc, cfg.chunk, init_state)
+    y = y + x * params["D"].astype(u.dtype)[None, None, :, None]
+    y = y.reshape(b, l, di)
+
+    # gated RMSNorm then out-projection
+    g = jax.nn.silu(z.astype(jnp.float32))
+    yf = y.astype(jnp.float32) * g
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(var + 1e-5) * (1.0 + params["norm_scale"])
+    out = yn.astype(u.dtype) @ params["out_proj"]
+
+    if return_state:
+        # final conv window for decode continuation
+        tail = conv_in[:, -(cfg.d_conv - 1):, :] if l >= cfg.d_conv - 1 else \
+            jnp.pad(conv_in, ((0, 0), (cfg.d_conv - 1 - l, 0), (0, 0)))
+        return out, (state, tail)
+    return out
+
+
+def ssm_decode_step(params: dict, u: jax.Array, state: jax.Array,
+                    conv_buf: jax.Array, cfg: SSMCfg):
+    """One-token recurrent update.
+
+    u: [B, d_model]; state: [B, H, P, N] (f32);
+    conv_buf: [B, d_conv-1, conv_channels] — trailing conv window.
+    Returns (y [B, d_model], new_state, new_conv_buf).
+    """
+    b, d_model = u.shape
+    di = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+
+    proj = u @ params["in_proj"]
+    z, xc, Bc, Cc, dt = _split_proj(proj, d_model, cfg)
+
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)       # [B, convch]
+    window = jnp.concatenate([conv_buf, conv_in[:, None, :]], axis=1)
+    conv = jnp.sum(window.astype(jnp.float32)
+                   * params["conv_w"].astype(jnp.float32)[None], axis=1) \
+        + params["conv_b"]
+    conv = jax.nn.silu(conv).astype(u.dtype)
+    xc, Bc, Cc = jnp.split(conv, [di, di + cfg.d_state], axis=-1)
+
+    x = xc.reshape(b, h, cfg.head_dim).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B, H]
+    da = jnp.exp(dt * A[None, :])                                  # [B, H]
+
+    Bf = Bc.astype(jnp.float32)                                    # [B, N]
+    Cf = Cc.astype(jnp.float32)
+    state = state * da[..., None, None] \
+        + jnp.einsum("bh,bhp,bn->bhpn", dt, x, Bf)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cf) \
+        + x * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, di)
+
+    g = jax.nn.silu(z.astype(jnp.float32))
+    yf = y * g
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(var + 1e-5) * (1.0 + params["norm_scale"])
+    out = yn.astype(u.dtype) @ params["out_proj"]
+
+    new_buf = window[:, 1:, :]
+    return out, state, new_buf

@@ -1,0 +1,124 @@
+"""AdamW optimizer + schedules, pure JAX (no optax dependency).
+
+Mixed-precision convention: model params may be bf16; the optimizer keeps
+f32 first/second moments and (optionally) an f32 master copy, applying
+updates in f32 and casting back to the param dtype.  States shard exactly
+like their parameters (the sharding rules treat the optimizer pytree as
+three more copies of the param tree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"        # 'cosine' | 'linear' | 'constant'
+    master_f32: bool = True
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+    master: Optional[dict]
+
+
+def init_state(params: dict, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # NB: force a copy — for leaves already in f32, ``astype`` aliases the
+    # param buffer, which breaks donation (same buffer donated twice).
+    master = jax.tree_util.tree_map(
+        lambda p: jnp.array(p, jnp.float32, copy=True), params) \
+        if cfg.master_f32 else None
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=zeros,
+                      nu=jax.tree_util.tree_map(jnp.copy, zeros),
+                      master=master)
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 1.0 - 0.9 * frac
+    else:  # cosine
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def _is_matrix(path: tuple) -> bool:
+    """Weight decay applies to matrices only (not norms/bias vectors)."""
+    return True   # resolved per-leaf by ndim below
+
+
+def apply_updates(params: dict, grads: dict, state: AdamWState,
+                  cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    lr = schedule_lr(cfg, state.step)
+    t = state.step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v, pm):
+        g = g.astype(jnp.float32) * clip
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        base = pm if pm is not None else p.astype(jnp.float32)
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:
+            step = step + cfg.weight_decay * base
+        new_master = base - lr * step
+        return new_master.astype(p.dtype), m_new, v_new, new_master
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.mu)
+    flat_v = jax.tree_util.tree_leaves(state.nu)
+    flat_pm = jax.tree_util.tree_leaves(state.master) \
+        if state.master is not None else [None] * len(flat_p)
+
+    outs = [upd(p, g, m, v, pm) for p, g, m, v, pm
+            in zip(flat_p, flat_g, flat_m, flat_v, flat_pm)]
+    new_p = tdef.unflatten([o[0] for o in outs])
+    new_m = tdef.unflatten([o[1] for o in outs])
+    new_v = tdef.unflatten([o[2] for o in outs])
+    new_master = tdef.unflatten([o[3] for o in outs]) \
+        if state.master is not None else None
+
+    new_state = AdamWState(step=state.step + 1, mu=new_m, nu=new_v,
+                           master=new_master)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, new_state, metrics

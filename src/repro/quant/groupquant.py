@@ -1,0 +1,148 @@
+"""Group quantization primitives (pure jnp).
+
+The paper quantizes expert weights with **G32 asymmetric** integer
+quantization and all non-expert weights with **G128 symmetric** INT8.
+Groups run along the *input* (contraction) dimension of each weight matrix,
+matching per-group dequantization inside the matmul's K loop.
+
+Conventions
+-----------
+* ``w`` has shape ``(..., K, N)``; groups tile K: ``K = G * group_size``.
+* Asymmetric: ``q = clip(round(w / s) + zp, 0, 2^b - 1)``;
+  ``dequant = (q - zp) * s`` with integer zero-point ``zp`` (uint domain).
+* Symmetric:  ``q = clip(round(w / s), -2^(b-1), 2^(b-1) - 1)``;
+  ``dequant = q * s``.
+* Codes are stored in ``uint8``/``int8`` regardless of bit-width b <= 8;
+  the *logical* width lives in the metadata.  This is exactly what the
+  bit-sliced store needs: an 8-bit AMAT code whose MSB slice is a shift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantMeta:
+    bits: int
+    group_size: int
+    asymmetric: bool
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Group-quantized tensor.
+
+    Attributes:
+      codes:  integer codes, ``uint8`` (asym) or ``int8`` (sym), shape
+              ``(..., K, N)``.
+      scales: per-group scales, shape ``(..., K // group_size, N)``.
+      zero_points: per-group integer zero-points (uint domain), same shape
+              as ``scales``; all-zero for symmetric quantization.
+      bits / group_size / asymmetric: static metadata.
+    """
+
+    codes: jax.Array
+    scales: jax.Array
+    zero_points: jax.Array
+    bits: int
+    group_size: int
+    asymmetric: bool
+
+    # pytree protocol -------------------------------------------------------
+    def tree_flatten(self):
+        children = (self.codes, self.scales, self.zero_points)
+        aux = (self.bits, self.group_size, self.asymmetric)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scales, zps = children
+        bits, group_size, asymmetric = aux
+        return cls(codes, scales, zps, bits, group_size, asymmetric)
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def nbytes_weights(self) -> float:
+        """Logical storage in bytes at the *logical* bit-width."""
+        import numpy as np
+
+        n_codes = float(np.prod(self.codes.shape))
+        n_groups = float(np.prod(self.scales.shape))
+        # fp16 scale + b-bit zero point per group
+        return n_codes * self.bits / 8 + n_groups * (2 + self.bits / 8)
+
+    def dequantize(self) -> jax.Array:
+        return dequantize(self)
+
+
+def _group_reshape(w: jax.Array, group_size: int) -> jax.Array:
+    *lead, K, N = w.shape
+    if K % group_size != 0:
+        raise ValueError(f"K={K} not divisible by group_size={group_size}")
+    return w.reshape(*lead, K // group_size, group_size, N)
+
+
+@partial(jax.jit, static_argnames=("bits", "group_size", "asymmetric"))
+def quantize(
+    w: jax.Array,
+    *,
+    bits: int = 8,
+    group_size: int = 32,
+    asymmetric: bool = True,
+) -> QuantizedTensor:
+    """Group-quantize ``w`` along its second-to-last dimension."""
+    wg = _group_reshape(w.astype(jnp.float32), group_size)
+    if asymmetric:
+        # Range always includes zero (standard affine-quant convention):
+        # keeps the integer zero-point in range, bounding the roundtrip
+        # error by one quantization step even for one-sided distributions.
+        wmin = jnp.minimum(jnp.min(wg, axis=-2, keepdims=True), 0.0)
+        wmax = jnp.maximum(jnp.max(wg, axis=-2, keepdims=True), 0.0)
+        qmax = 2**bits - 1
+        scale = (wmax - wmin) / qmax
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        zp = jnp.clip(jnp.round(-wmin / scale), 0, qmax)
+        q = jnp.clip(jnp.round(wg / scale) + zp, 0, qmax)
+        codes = q.reshape(w.shape).astype(jnp.uint8)
+        scales = jnp.squeeze(scale, axis=-2).astype(jnp.float32)
+        zps = jnp.squeeze(zp, axis=-2).astype(jnp.uint8)
+    else:
+        amax = jnp.max(jnp.abs(wg), axis=-2, keepdims=True)
+        qmax = 2 ** (bits - 1) - 1
+        scale = amax / qmax
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        q = jnp.clip(jnp.round(wg / scale), -(qmax + 1), qmax)
+        codes = q.reshape(w.shape).astype(jnp.int8)
+        scales = jnp.squeeze(scale, axis=-2).astype(jnp.float32)
+        zps = jnp.zeros(scales.shape, jnp.uint8)
+    return QuantizedTensor(codes, scales, zps, bits, group_size, asymmetric)
+
+
+@jax.jit
+def dequantize(qt: QuantizedTensor) -> jax.Array:
+    codes = qt.codes
+    *lead, K, N = codes.shape
+    G = K // qt.group_size
+    cg = codes.reshape(*lead, G, qt.group_size, N)
+    scales = qt.scales[..., :, None, :]
+    if qt.asymmetric:
+        zps = qt.zero_points[..., :, None, :].astype(jnp.float32)
+        w = (cg.astype(jnp.float32) - zps) * scales
+    else:
+        w = cg.astype(jnp.float32) * scales
+    return w.reshape(*lead, K, N)
+
+
+def quantization_error(w: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """Relative RMS error of a quantized tensor vs the original."""
+    d = dequantize(qt) - w.astype(jnp.float32)
+    return jnp.sqrt(jnp.mean(d * d)) / (jnp.sqrt(jnp.mean(w * w)) + 1e-12)

@@ -1,0 +1,122 @@
+"""Single-batch serving loop (the paper's deployment scenario, Fig. 1a).
+
+On-device MoE serving processes one request at a time: prefill the prompt
+(layer-parallel, streams experts from Flash), then decode token-by-token
+under the miss-rate constraint.  This server wraps
+:class:`~repro.core.engine.SliceMoEEngine` with a request queue, per-request
+metrics and an end-of-sequence check, and is the driver behind
+``examples/serve_slicemoe.py``.
+
+For *non-MoE* architectures (dense/ssm/vlm/audio) a plain engine runs the
+same prefill/decode without the expert cache simulation — SliceMoE's
+technique is inapplicable there (DESIGN.md §4) but the serving path still
+works, so every assigned arch is servable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import EngineConfig, SliceMoEEngine
+from repro.models import model as MDL
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 32
+    eos_token: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    request_id: int
+    tokens: np.ndarray
+    prefill_s: float
+    decode_s: float
+    metrics: Optional[dict] = None
+
+
+class PlainEngine:
+    """Prefill+decode without offload simulation (non-MoE archs)."""
+
+    def __init__(self, cfg: ModelConfig, params: dict, max_seq: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self._prefill = jax.jit(partial(MDL.prefill, cfg=cfg,
+                                        max_seq=max_seq))
+        self._decode = jax.jit(partial(MDL.decode_step, cfg=cfg))
+
+    def generate(self, prompt: np.ndarray, n_steps: int,
+                 eos: Optional[int] = None, **kw):
+        logits, cache, _ = self._prefill(
+            self.params, tokens=jnp.asarray(prompt)[None], **kw)
+        token = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = []
+        for _ in range(n_steps):
+            out.append(int(token[0]))
+            if eos is not None and out[-1] == eos:
+                break
+            logits, cache, _ = self._decode(self.params, token=token,
+                                            cache=cache)
+            token = jnp.argmax(logits, -1).astype(jnp.int32)
+        return np.asarray(out, np.int32), None
+
+
+class SliceMoEServer:
+    def __init__(self, cfg: ModelConfig, params: dict,
+                 engine_cfg: Optional[EngineConfig] = None,
+                 max_seq: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.engine_cfg = engine_cfg
+        self.queue: List[Request] = []
+        self.completions: List[Completion] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fresh_engine(self):
+        if self.cfg.has_moe and self.engine_cfg is not None:
+            ecfg = dataclasses.replace(self.engine_cfg,
+                                       max_seq=self.max_seq)
+            return SliceMoEEngine(self.cfg, self.params, ecfg)
+        return PlainEngine(self.cfg, self.params, self.max_seq)
+
+    def run(self) -> List[Completion]:
+        """Drain the queue, one request at a time (single-batch)."""
+        while self.queue:
+            req = self.queue.pop(0)
+            engine = self._fresh_engine()
+            t0 = time.perf_counter()
+            if isinstance(engine, SliceMoEEngine):
+                logits = engine.prefill(jnp.asarray(req.prompt)[None])
+                t1 = time.perf_counter()
+                first = jnp.argmax(logits, -1).astype(jnp.int32)
+                toks, metrics = engine.decode(first, req.max_new_tokens)
+                toks = np.asarray(toks[0])
+                if req.eos_token is not None:
+                    stop = np.nonzero(toks == req.eos_token)[0]
+                    if stop.size:
+                        toks = toks[:stop[0] + 1]
+                t2 = time.perf_counter()
+            else:
+                t1 = time.perf_counter()
+                toks, metrics = engine.generate(
+                    req.prompt, req.max_new_tokens, eos=req.eos_token)
+                t2 = time.perf_counter()
+            self.completions.append(Completion(
+                request_id=req.request_id, tokens=toks,
+                prefill_s=t1 - t0, decode_s=t2 - t1, metrics=metrics))
+        return self.completions

@@ -1,0 +1,14 @@
+"""Shared fixtures.  NOTE: no XLA device-count flags here — tests must see
+the real single CPU device (the 512-device flag is dryrun.py-only)."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,136 @@
+"""AMAT quantization: Table-1 orderings + algebraic invariants (paper §4.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.amat import (MAT42, MAT63, MAT84, PAPER_CONFIGS, MatConfig,
+                             amat_quantize, dequant_high, dequant_low,
+                             dequant_mixed, lsb_slice, msb_slice,
+                             reconstruct, truncate)
+from repro.quant.groupquant import (dequantize, quantization_error, quantize)
+
+
+def _weights(key, shape=(64, 128), scale=0.05, bias=0.01):
+    return jax.random.normal(key, shape) * scale + bias
+
+
+class TestSliceAlgebra:
+    def test_reconstruct_lossless(self, rng):
+        """MSB/LSB slices must reassemble the exact high-bit code."""
+        for cfg in PAPER_CONFIGS:
+            qt = amat_quantize(_weights(rng), cfg)
+            m = msb_slice(qt.codes, cfg.shift)
+            l = lsb_slice(qt.codes, cfg.shift)
+            assert jnp.array_equal(reconstruct(m, l, cfg.shift), qt.codes)
+
+    def test_msb_slice_is_truncated_code(self, rng):
+        qt = amat_quantize(_weights(rng), MAT84)
+        lo = truncate(qt, low_bits=4)
+        assert jnp.array_equal(lo.codes, msb_slice(qt.codes, 4))
+
+    def test_msb_range(self, rng):
+        for cfg in PAPER_CONFIGS:
+            qt = amat_quantize(_weights(rng), cfg)
+            m = msb_slice(qt.codes, cfg.shift)
+            assert int(jnp.max(m)) < 2 ** cfg.low_bits
+
+    def test_zp_truncated_with_code(self, rng):
+        qt = amat_quantize(_weights(rng), MAT84)
+        lo = truncate(qt, low_bits=4)
+        assert jnp.array_equal(lo.zero_points, qt.zero_points >> 4)
+        assert jnp.allclose(lo.scales, qt.scales * 16.0)
+
+
+class TestTable1Orderings:
+    """The paper's qualitative claims, asserted as orderings."""
+
+    @pytest.mark.parametrize("cfg", PAPER_CONFIGS, ids=lambda c: c.name)
+    def test_amat_close_to_base_lowbit(self, rng, cfg):
+        w = _weights(rng)
+        qt = amat_quantize(w, cfg)
+        amat_err = float(quantization_error(w, truncate(qt, low_bits=cfg.low_bits)))
+        base_err = float(quantization_error(
+            w, quantize(w, bits=cfg.low_bits, group_size=cfg.group_size,
+                        asymmetric=True)))
+        # AMAT low-bit within 2x of independently-quantized low-bit
+        assert amat_err < 2.0 * base_err + 1e-6
+
+    @pytest.mark.parametrize("cfg", PAPER_CONFIGS, ids=lambda c: c.name)
+    def test_naive_trunc_catastrophic(self, rng, cfg):
+        """Naive truncation (no zp/scale adjustment) must be far worse."""
+        w = _weights(rng)
+        qt = amat_quantize(w, cfg)
+        amat_err = float(quantization_error(w, truncate(qt, low_bits=cfg.low_bits)))
+        naive_err = float(quantization_error(
+            w, truncate(qt, low_bits=cfg.low_bits, truncate_zp=False,
+                        rescale=False)))
+        # at 2-bit the AMAT error is itself large, compressing the ratio —
+        # the paper's PPL blow-up (1e6-1e10) is the *model-level* effect
+        assert naive_err > 2.5 * amat_err
+
+    def test_high_bit_path_unchanged(self, rng):
+        """AMAT must not degrade the high-bit path at all."""
+        w = _weights(rng)
+        for cfg in PAPER_CONFIGS:
+            qt = amat_quantize(w, cfg)
+            base = quantize(w, bits=cfg.high_bits,
+                            group_size=cfg.group_size, asymmetric=True)
+            assert jnp.allclose(dequant_high(qt), dequantize(base))
+
+
+class TestMixedDequant:
+    def test_mixed_matches_pure_paths(self, rng):
+        w = jax.random.normal(rng, (6, 64, 32)) * 0.1
+        qt = amat_quantize(w, MAT84)
+        use_lsb = jnp.array([True, False, True, False, True, False])
+        mixed = dequant_mixed(qt, use_lsb, 4)
+        hi = dequant_high(qt)
+        lo = dequant_low(qt, MAT84)
+        for e in range(6):
+            expected = hi[e] if bool(use_lsb[e]) else lo[e]
+            np.testing.assert_allclose(mixed[e], expected, rtol=1e-6)
+
+    def test_all_high_equals_dequant(self, rng):
+        w = jax.random.normal(rng, (4, 32, 16)) * 0.1
+        qt = amat_quantize(w, MAT84)
+        mixed = dequant_mixed(qt, jnp.ones(4, bool), 4)
+        np.testing.assert_allclose(mixed, dequant_high(qt), rtol=1e-6)
+
+
+class TestPropertyBased:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        high=st.sampled_from([4, 6, 8]),
+        shift_frac=st.integers(1, 3),
+        seed=st.integers(0, 2**16),
+        scale=st.floats(1e-3, 10.0),
+        bias=st.floats(-1.0, 1.0),
+    )
+    def test_roundtrip_error_bounded(self, high, shift_frac, seed, scale,
+                                     bias):
+        """Dequant error bounded by half a quantization step, any dist."""
+        low = max(high - shift_frac * 2, 2)
+        if low >= high:
+            low = high - 1
+        cfg = MatConfig(high, low)
+        w = jax.random.normal(jax.random.PRNGKey(seed), (32, 64)) \
+            * scale + bias
+        qt = amat_quantize(w, cfg)
+        err = jnp.max(jnp.abs(dequant_high(qt) - w))
+        max_step = jnp.max(qt.scales)
+        # value rounding (0.5 step) + integer zero-point rounding (0.5 step)
+        assert float(err) <= float(max_step) * 1.01 + 1e-6
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_slices_partition_bits(self, seed):
+        """Every code bit lands in exactly one slice (MAT84)."""
+        w = jax.random.normal(jax.random.PRNGKey(seed), (32, 32))
+        qt = amat_quantize(w, MAT84)
+        m = msb_slice(qt.codes, 4).astype(jnp.uint32)
+        l = lsb_slice(qt.codes, 4).astype(jnp.uint32)
+        assert int(jnp.max(l)) < 16
+        assert jnp.array_equal((m << 4) + l, qt.codes.astype(jnp.uint32))

@@ -1,0 +1,111 @@
+"""SliceCache: LRU semantics, DBSC LSB-first eviction, capacity invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import SliceCache
+from repro.core.slices import SliceKey
+
+
+MSB = lambda l, e: SliceKey(l, e, "msb")       # noqa: E731
+LSB = lambda l, e: SliceKey(l, e, "lsb")       # noqa: E731
+
+
+class TestBasics:
+    def test_hit_miss(self):
+        c = SliceCache(100)
+        assert not c.access(MSB(0, 0), 10)     # cold miss, fills
+        assert c.access(MSB(0, 0), 10)         # hit
+        assert c.stats.msb_misses == 1 and c.stats.msb_hits == 1
+
+    def test_capacity_never_exceeded(self):
+        c = SliceCache(35)
+        for e in range(10):
+            c.access(MSB(0, e), 10)
+            assert c.used <= 35
+        assert len(c) == 3
+
+    def test_lru_order(self):
+        c = SliceCache(30)
+        for e in range(3):
+            c.access(MSB(0, e), 10)
+        c.access(MSB(0, 0), 10)        # bump 0 to MRU
+        c.access(MSB(0, 3), 10)        # evicts 1 (LRU)
+        assert MSB(0, 0) in c and MSB(0, 1) not in c
+
+    def test_oversized_item_rejected(self):
+        c = SliceCache(5)
+        c.insert(MSB(0, 0), 10)
+        assert MSB(0, 0) not in c and c.used == 0
+
+
+class TestDBSCPolicy:
+    def test_lsb_evicted_before_msb(self):
+        c = SliceCache(30, slice_aware=True)
+        c.access(MSB(0, 0), 10)
+        c.access(LSB(0, 0), 10)
+        c.access(MSB(0, 1), 10)
+        # full; next fill must evict the LSB even though it's younger
+        c.access(MSB(0, 2), 10)
+        assert LSB(0, 0) not in c
+        assert MSB(0, 0) in c and MSB(0, 1) in c and MSB(0, 2) in c
+
+    def test_lsb_hits_do_not_gain_priority(self):
+        c = SliceCache(30, slice_aware=True)
+        c.access(LSB(0, 0), 10)
+        c.access(LSB(0, 1), 10)
+        c.access(LSB(0, 0), 10)        # hit — but stays low priority
+        c.access(MSB(0, 0), 10)
+        c.access(MSB(0, 1), 10)        # evicts LSB(0,0) first (FIFO in seg)
+        assert LSB(0, 0) not in c
+
+    def test_slice_unaware_single_lru(self):
+        c = SliceCache(30, slice_aware=False)
+        c.access(LSB(0, 0), 10)
+        c.access(MSB(0, 0), 10)
+        c.access(LSB(0, 0), 10)        # bump (single LRU treats all equal)
+        c.access(MSB(0, 1), 10)
+        c.access(MSB(0, 2), 10)        # evicts MSB(0,0), not the LSB
+        assert LSB(0, 0) in c and MSB(0, 0) not in c
+
+
+class TestResidency:
+    def test_residency_masks(self):
+        c = SliceCache(1000)
+        c.access(MSB(0, 1), 10)
+        c.access(LSB(2, 3), 10)
+        msb, lsb = c.residency(4, 8)
+        assert msb[0, 1] and not msb[0, 2]
+        assert lsb[2, 3] and not lsb[0, 1]
+
+    def test_reorder_by_ranking(self):
+        c = SliceCache(30)
+        for e in range(3):
+            c.access(MSB(0, e), 10)
+        # rank 1 highest -> evicted last
+        c.reorder_by({MSB(0, 0): 0.5, MSB(0, 1): 0.9, MSB(0, 2): 0.1})
+        c.access(MSB(0, 3), 10)        # evicts rank-0.1 (expert 2)
+        assert MSB(0, 2) not in c and MSB(0, 1) in c
+
+
+class TestPropertyBased:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        capacity=st.integers(10, 200),
+        ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7),
+                               st.booleans(), st.integers(5, 25)),
+                     min_size=1, max_size=120),
+    )
+    def test_invariants_hold_under_any_trace(self, capacity, ops):
+        c = SliceCache(capacity)
+        for layer, expert, is_lsb, nbytes in ops:
+            key = SliceKey(layer, expert, "lsb" if is_lsb else "msb")
+            c.access(key, nbytes)
+            # invariant 1: capacity respected
+            assert c.used <= capacity
+            # invariant 2: used == sum of resident sizes
+            total = sum(c._msb.values()) + sum(c._lsb.values())
+            assert abs(c.used - total) < 1e-9
+        # invariant 3: stats add up
+        assert c.stats.accesses == len(ops)

@@ -1,0 +1,159 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.amat_matmul.ops import amat_matmul, amat_matmul_qt
+from repro.kernels.amat_matmul.ref import amat_matmul_ref
+from repro.kernels.expert_matmul.ops import expert_matmul, expert_matmul_qt
+from repro.kernels.expert_matmul.ref import expert_matmul_ref
+from repro.quant.groupquant import quantize
+
+SHAPES_MKN = [
+    (8, 32, 16),        # minimal
+    (16, 64, 48),       # non-128 N
+    (128, 256, 128),    # MXU-aligned
+    (7, 96, 33),        # ragged M/N (padding path)
+    (1, 32, 128),       # decode-like single token
+]
+
+
+class TestAmatMatmul:
+    @pytest.mark.parametrize("mkn", SHAPES_MKN, ids=str)
+    @pytest.mark.parametrize("mode,shift", [("high", 0), ("low", 4),
+                                            ("low", 2)])
+    @pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, rng, mkn, mode, shift, xdtype):
+        M, K, N = mkn
+        x = jax.random.normal(rng, (M, K)).astype(xdtype)
+        w = jax.random.normal(jax.random.fold_in(rng, 1), (K, N)) * 0.1
+        qt = quantize(w, bits=8, group_size=32, asymmetric=True)
+        out = amat_matmul_qt(x, qt, shift=shift, mode=mode)
+        ref = amat_matmul_ref(x, qt.codes, qt.scales, qt.zero_points,
+                              group_size=32, shift=shift, mode=mode)
+        tol = 1e-4 if xdtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=tol * max(1.0, float(jnp.max(jnp.abs(ref)))))
+
+    def test_block_size_invariance(self, rng):
+        M, K, N = 64, 128, 64
+        x = jax.random.normal(rng, (M, K))
+        w = jax.random.normal(jax.random.fold_in(rng, 1), (K, N)) * 0.1
+        qt = quantize(w, bits=8, group_size=32, asymmetric=True)
+        outs = [
+            amat_matmul(x, qt.codes, qt.scales, qt.zero_points,
+                        bm=bm, bn=bn, bk=bk)
+            for bm, bn, bk in [(16, 16, 32), (64, 64, 64), (32, 64, 128)]
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                       atol=1e-4)
+
+    def test_approximates_float_matmul(self, rng):
+        """High path should track the unquantized matmul closely."""
+        x = jax.random.normal(rng, (32, 128))
+        w = jax.random.normal(jax.random.fold_in(rng, 1), (128, 64)) * 0.1
+        qt = quantize(w, bits=8, group_size=32, asymmetric=True)
+        out = amat_matmul_qt(x, qt)
+        exact = x @ w
+        rel = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
+        assert rel < 0.01
+
+
+class TestExpertMatmul:
+    @pytest.mark.parametrize("eckn", [(4, 16, 64, 32), (8, 33, 96, 128),
+                                      (2, 128, 128, 128), (3, 1, 32, 16)],
+                             ids=str)
+    def test_matches_ref(self, rng, eckn):
+        E, C, K, N = eckn
+        x = jax.random.normal(rng, (E, C, K))
+        w = jax.random.normal(jax.random.fold_in(rng, 1), (E, K, N)) * 0.1
+        qt = quantize(w, bits=8, group_size=32, asymmetric=True)
+        ul = jnp.arange(E) % 2 == 0
+        out = expert_matmul_qt(x, qt, ul, shift=4)
+        ref = expert_matmul_ref(x, qt.codes, qt.scales, qt.zero_points, ul,
+                                group_size=32, shift=4)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)
+
+    def test_use_lsb_flag_changes_result(self, rng):
+        E, C, K, N = 2, 8, 64, 32
+        x = jax.random.normal(rng, (E, C, K))
+        w = jax.random.normal(jax.random.fold_in(rng, 1), (E, K, N)) * 0.1
+        qt = quantize(w, bits=8, group_size=32, asymmetric=True)
+        hi = expert_matmul_qt(x, qt, jnp.ones(E, bool), shift=4)
+        lo = expert_matmul_qt(x, qt, jnp.zeros(E, bool), shift=4)
+        assert float(jnp.linalg.norm(hi - lo)) > 1e-3
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 999), E=st.integers(1, 6))
+    def test_property_random_flags(self, seed, E):
+        key = jax.random.PRNGKey(seed)
+        C, K, N = 8, 32, 16
+        x = jax.random.normal(key, (E, C, K))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (E, K, N)) * 0.1
+        qt = quantize(w, bits=8, group_size=32, asymmetric=True)
+        ul = jax.random.bernoulli(jax.random.fold_in(key, 2), shape=(E,))
+        out = expert_matmul_qt(x, qt, ul, shift=4)
+        ref = expert_matmul_ref(x, qt.codes, qt.scales, qt.zero_points,
+                                ul, group_size=32, shift=4)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "dims",
+        [(1, 16, 16, 4, 2, 32, True, None),
+         (2, 24, 40, 8, 2, 32, True, None),
+         (1, 17, 33, 4, 4, 64, True, 8),      # ragged + sliding window
+         (1, 16, 16, 4, 2, 32, False, None)], # non-causal (encoder)
+        ids=str)
+    def test_matches_ref(self, rng, dims):
+        from repro.kernels.flash_attn.ops import flash_attention
+        from repro.kernels.flash_attn.ref import flash_attention_ref
+
+        B, Sq, Sk, H, Hkv, D, causal, win = dims
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (B, Sq, H, D))
+        k = jax.random.normal(ks[1], (B, Sk, Hkv, D))
+        v = jax.random.normal(ks[2], (B, Sk, Hkv, D))
+        out = flash_attention(q, k, v, causal=causal, sliding_window=win,
+                              bq=8, bk=8)
+        ref = flash_attention_ref(q, k, v, causal=causal,
+                                  sliding_window=win)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)
+
+    def test_block_size_invariance(self, rng):
+        from repro.kernels.flash_attn.ops import flash_attention
+
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (1, 32, 4, 32))
+        k = jax.random.normal(ks[1], (1, 32, 2, 32))
+        v = jax.random.normal(ks[2], (1, 32, 2, 32))
+        outs = [flash_attention(q, k, v, bq=bq, bk=bk)
+                for bq, bk in [(8, 8), (16, 32), (32, 16)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                       atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 999), sq=st.integers(4, 24),
+           sk=st.integers(4, 24))
+    def test_property_random_shapes(self, seed, sq, sk):
+        from repro.kernels.flash_attn.ops import flash_attention
+        from repro.kernels.flash_attn.ref import flash_attention_ref
+
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, sq, 2, 16))
+        k = jax.random.normal(ks[1], (1, sk, 2, 16))
+        v = jax.random.normal(ks[2], (1, sk, 2, 16))
+        out = flash_attention(q, k, v, bq=8, bk=8)
+        ref = flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)

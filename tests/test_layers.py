@@ -1,0 +1,139 @@
+"""Attention / RoPE / MLP building blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def _qkv(key, b=2, sq=16, sk=16, h=4, kv=2, d=32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d))
+    k = jax.random.normal(ks[1], (b, sk, kv, d))
+    v = jax.random.normal(ks[2], (b, sk, kv, d))
+    return q, k, v
+
+
+class TestRoPE:
+    def test_preserves_norm(self, rng):
+        x = jax.random.normal(rng, (2, 8, 4, 32))
+        pos = jnp.arange(8)[None, :]
+        y = L.apply_rope(x, pos, 10000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x, np.float64), axis=-1),
+            np.linalg.norm(np.asarray(y, np.float64), axis=-1), rtol=1e-4)
+
+    def test_relative_property(self, rng):
+        """<rope(q,m), rope(k,n)> depends only on m-n."""
+        q = jax.random.normal(rng, (1, 1, 1, 16))
+        k = jax.random.normal(jax.random.fold_in(rng, 1), (1, 1, 1, 16))
+
+        def score(m, n):
+            qr = L.apply_rope(q, jnp.array([[m]]), 1e4)
+            kr = L.apply_rope(k, jnp.array([[n]]), 1e4)
+            return float(jnp.sum(qr * kr))
+
+        assert abs(score(5, 3) - score(10, 8)) < 1e-4
+        assert abs(score(0, 0) - score(7, 7)) < 1e-4
+
+    def test_position_zero_identity(self, rng):
+        x = jax.random.normal(rng, (1, 1, 2, 16))
+        y = L.apply_rope(x, jnp.zeros((1, 1)), 1e4)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+class TestAttention:
+    def test_causal_mask(self, rng):
+        """Changing future keys must not change past outputs."""
+        q, k, v = _qkv(rng)
+        out1 = L.attention(q, k, v, causal=True)
+        k2 = k.at[:, -1].set(99.0)
+        v2 = v.at[:, -1].set(99.0)
+        out2 = L.attention(q, k2, v2, causal=True)
+        np.testing.assert_allclose(np.asarray(out1[:, :-1]),
+                                   np.asarray(out2[:, :-1]), atol=1e-5)
+        assert not np.allclose(np.asarray(out1[:, -1]),
+                               np.asarray(out2[:, -1]))
+
+    def test_blockwise_matches_plain(self, rng):
+        q, k, v = _qkv(rng, sq=24, sk=40)
+        plain = L.attention(q, k, v, causal=True, q_offset=16)
+        block = L.blockwise_attention(q, k, v, causal=True, q_offset=16,
+                                      block_kv=8)
+        np.testing.assert_allclose(np.asarray(plain), np.asarray(block),
+                                   atol=1e-4)
+
+    def test_blockwise_sliding_window(self, rng):
+        q, k, v = _qkv(rng, sq=16, sk=16)
+        plain = L.attention(q, k, v, causal=True, sliding_window=4)
+        block = L.blockwise_attention(q, k, v, causal=True,
+                                      sliding_window=4, block_kv=8)
+        np.testing.assert_allclose(np.asarray(plain), np.asarray(block),
+                                   atol=1e-4)
+
+    def test_softcap(self, rng):
+        q, k, v = _qkv(rng)
+        a = L.attention(q * 10, k * 10, v, causal=True, logit_softcap=5.0)
+        assert not np.any(np.isnan(np.asarray(a)))
+
+    def test_decode_matches_full(self, rng):
+        """Single-token decode == last row of full attention."""
+        q, k, v = _qkv(rng, sq=8, sk=8)
+        full = L.attention(q, k, v, causal=True)
+        dec = L.decode_attention(q[:, -1], k, v, cur_pos=jnp.asarray(8))
+        np.testing.assert_allclose(np.asarray(full[:, -1]), np.asarray(dec),
+                                   atol=1e-5)
+
+    def test_decode_ignores_stale_cache(self, rng):
+        q, k, v = _qkv(rng, sq=1, sk=16)
+        d1 = L.decode_attention(q[:, 0], k, v, cur_pos=jnp.asarray(4))
+        k2 = k.at[:, 10:].set(7.0)
+        d2 = L.decode_attention(q[:, 0], k2, v, cur_pos=jnp.asarray(4))
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-6)
+
+    def test_gqa_equals_repeated_mha(self, rng):
+        q, k, v = _qkv(rng, h=8, kv=2)
+        gqa = L.attention(q, k, v, causal=True)
+        kr = L._expand_kv(k, 4)
+        vr = L._expand_kv(v, 4)
+        mha = L.attention(q, kr, vr, causal=True)
+        np.testing.assert_allclose(np.asarray(gqa), np.asarray(mha),
+                                   atol=1e-5)
+
+
+class TestMLP:
+    @pytest.mark.parametrize("mlp_type", ["swiglu", "geglu", "relu2", "gelu"])
+    def test_shapes_and_finiteness(self, rng, mlp_type):
+        d, f = 32, 64
+        shapes = L.mlp_param_shapes(d, f, mlp_type)
+        params = {k: jax.random.normal(jax.random.fold_in(rng, i), s) * 0.05
+                  for i, (k, s) in enumerate(shapes.items())}
+        x = jax.random.normal(rng, (4, d))
+        y = L.mlp_apply(params, x, mlp_type)
+        assert y.shape == (4, d)
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_relu2_nonnegative_preactivation(self, rng):
+        """Squared-ReLU output is a nonneg combination of wo rows."""
+        d, f = 16, 32
+        params = {"wi": jax.random.normal(rng, (d, f)),
+                  "wo": jnp.eye(f)[:, :d].astype(jnp.float32) * 0 + 1}
+        x = jax.random.normal(rng, (4, d))
+        h = np.square(np.maximum(np.asarray(x @ params["wi"]), 0))
+        assert (h >= 0).all()
+
+
+class TestNorms:
+    def test_rmsnorm_scale_invariant_direction(self, rng):
+        x = jax.random.normal(rng, (4, 32))
+        s = jnp.zeros(32)
+        y1 = L.rms_norm(x, s)
+        y2 = L.rms_norm(x * 10.0, s)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+    def test_layernorm_zero_mean(self, rng):
+        x = jax.random.normal(rng, (4, 32)) + 3.0
+        y = L.layer_norm(x, jnp.ones(32), jnp.zeros(32))
+        np.testing.assert_allclose(np.asarray(y).mean(-1), 0.0, atol=1e-5)

@@ -1,0 +1,159 @@
+"""MoE dispatch/combine + quantized expert path."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.amat import MAT84, amat_quantize
+from repro.models.moe import (MoECfg, RoutingPolicy, capacity, combine,
+                              dispatch, dispatch_indices, moe_apply,
+                              moe_param_shapes, router_probs, topk_select)
+
+
+def _params(key, d, cfg: MoECfg):
+    shapes = moe_param_shapes(d, cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    ks = jax.random.split(key, len(leaves))
+    init = [jax.random.normal(k, s) * 0.1 for k, s in zip(ks, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, init)
+
+
+CFG = MoECfg(n_experts=8, top_k=2, d_ff=32, capacity_factor=4.0)
+D = 32   # >= quant group size (G32) for the quantized-expert tests
+
+
+class TestDispatch:
+    def test_positions_unique_per_expert(self, rng):
+        probs = jax.nn.softmax(jax.random.normal(rng, (64, 8)), -1)
+        gates, ids = topk_select(probs, 2)
+        cap = capacity(64, 2, 8, 4.0)
+        pos, keep = dispatch_indices(ids, gates, 8, cap)
+        ids_np, pos_np, keep_np = map(np.asarray, (ids, pos, keep))
+        seen = set()
+        for t in range(64):
+            for kk in range(2):
+                if keep_np[t, kk]:
+                    slot = (ids_np[t, kk], pos_np[t, kk])
+                    assert slot not in seen, "double-booked expert slot"
+                    seen.add(slot)
+                    assert pos_np[t, kk] < cap
+
+    def test_roundtrip_identity_when_experts_identity(self, rng):
+        """dispatch -> (identity expert) -> combine == gate-weighted sum."""
+        T = 32
+        x = jax.random.normal(rng, (T, D))
+        probs = jax.nn.softmax(jax.random.normal(
+            jax.random.fold_in(rng, 1), (T, 8)), -1)
+        gates, ids = topk_select(probs, 2)
+        cap = capacity(T, 2, 8, 4.0)
+        pos, keep = dispatch_indices(ids, gates, 8, cap)
+        buf = dispatch(x, ids, pos, keep, 8, cap)
+        y = combine(buf, ids, pos, keep, gates)
+        # identity experts: y == sum_k gate_k * x == x (gates normalized)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-5)
+
+    def test_capacity_drops_counted(self, rng):
+        """With tiny capacity, overflow tokens are dropped, not corrupted."""
+        T = 64
+        x = jnp.ones((T, D))
+        ids = jnp.zeros((T, 1), jnp.int32)       # all to expert 0
+        gates = jnp.ones((T, 1))
+        cap = 8
+        pos, keep = dispatch_indices(ids, gates, 8, cap)
+        assert int(np.asarray(keep).sum()) == 8
+        buf = dispatch(x, ids, pos, keep, 8, cap)
+        assert float(jnp.sum(buf[0])) == pytest.approx(8 * D)
+        assert float(jnp.sum(buf[1:])) == 0.0
+
+
+class TestMoEApply:
+    def test_output_shape_and_aux(self, rng):
+        params = _params(rng, D, CFG)
+        x = jax.random.normal(rng, (32, D))
+        y, aux = moe_apply(params, x, CFG)
+        assert y.shape == (32, D)
+        assert float(aux["aux_loss"]) > 0
+        assert float(aux["dropped_frac"]) < 0.2
+
+    def test_quantized_matches_float_closely(self, rng):
+        params = _params(rng, D, CFG)
+        x = jax.random.normal(rng, (32, D)) * 0.5
+        y_float, aux_f = moe_apply(params, x, CFG)
+
+        qp = dict(params)
+        qp["experts"] = {
+            "wi_q": amat_quantize(params["experts"]["wi"], MAT84),
+            "wo_q": amat_quantize(params["experts"]["wo"], MAT84),
+        }
+        y_q, _ = moe_apply(qp, x, CFG, mat=MAT84,
+                           gate_override=(aux_f["gates"], aux_f["ids"]))
+        rel = float(jnp.linalg.norm(y_q - y_float)
+                    / (jnp.linalg.norm(y_float) + 1e-9))
+        assert rel < 0.05, f"8-bit expert path diverges: rel={rel}"
+
+    def test_use_lsb_selects_precision(self, rng):
+        params = _params(rng, D, CFG)
+        x = jax.random.normal(rng, (16, D)) * 0.5
+        qp = dict(params)
+        qp["experts"] = {
+            "wi_q": amat_quantize(params["experts"]["wi"], MAT84),
+            "wo_q": amat_quantize(params["experts"]["wo"], MAT84),
+        }
+        _, aux = moe_apply(params, x, CFG)
+        go = (aux["gates"], aux["ids"])
+        y_hi, _ = moe_apply(qp, x, CFG, mat=MAT84, gate_override=go,
+                            use_lsb=jnp.ones(8, bool))
+        y_lo, _ = moe_apply(qp, x, CFG, mat=MAT84, gate_override=go,
+                            use_lsb=jnp.zeros(8, bool))
+        # 4-bit path differs measurably from 8-bit path
+        assert float(jnp.linalg.norm(y_hi - y_lo)) > 1e-4
+
+    def test_policy_dbsc_demand_consistent(self, rng):
+        params = _params(rng, D, CFG)
+        x = jax.random.normal(rng, (16, D))
+        policy = RoutingPolicy(kind="cache_prior", slice_mode="dbsc",
+                               theta=0.5)
+        state = {"alpha": jnp.float32(0.0),
+                 "cached_msb": jnp.ones(8, bool),
+                 "cached_lsb": jnp.ones(8, bool)}
+        y, aux = moe_apply(params, x, CFG, policy=policy, policy_state=state)
+        ids, crit = np.asarray(aux["ids"]), np.asarray(aux["critical"])
+        msb, lsb = np.asarray(aux["msb_needed"]), np.asarray(aux["lsb_needed"])
+        # every selected expert demands its MSB
+        assert msb[np.unique(ids)].all()
+        # lsb demand only from critical selections
+        crit_experts = np.unique(ids[crit]) if crit.any() else np.array([], int)
+        assert set(np.nonzero(lsb)[0]) == set(crit_experts.tolist())
+
+    def test_shared_expert_added(self, rng):
+        cfg_s = dataclasses.replace(CFG, n_shared_experts=1, d_ff_shared=32)
+        params = _params(rng, D, cfg_s)
+        x = jax.random.normal(rng, (16, D))
+        y_with, _ = moe_apply(params, x, cfg_s)
+        p2 = dict(params)
+        p2["shared"] = jax.tree_util.tree_map(jnp.zeros_like, params["shared"])
+        y_without, _ = moe_apply(p2, x, cfg_s)
+        assert float(jnp.linalg.norm(y_with - y_without)) > 1e-4
+
+
+class TestPropertyBased:
+    @settings(max_examples=20, deadline=None)
+    @given(T=st.integers(4, 64), E=st.sampled_from([4, 8, 16]),
+           k=st.integers(1, 3), seed=st.integers(0, 999))
+    def test_combine_bounded_by_max_expert_output(self, T, E, k, seed):
+        """Gate-weighted combine is a convex mix (no amplification)."""
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (T, D))
+        probs = jax.nn.softmax(
+            jax.random.normal(jax.random.fold_in(key, 1), (T, E)), -1)
+        gates, ids = topk_select(probs, min(k, E))
+        cap = capacity(T, min(k, E), E, 8.0)
+        pos, keep = dispatch_indices(ids, gates, E, cap)
+        buf = dispatch(x, ids, pos, keep, E, cap)
+        y = combine(buf, ids, pos, keep, gates)
+        assert float(jnp.max(jnp.abs(y))) <= float(jnp.max(jnp.abs(x))) + 1e-4

@@ -1,0 +1,99 @@
+"""Performance-variant correctness (the §Perf hillclimb knobs).
+
+Each variant must preserve model semantics: one-hot embedding and
+window-sliced decode exactly; int8 KV and AMAT-quantized serving within
+quantization tolerance.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.amat import MatConfig
+from repro.configs.base import get_config
+from repro.models.model import (decode_step, forward, init_params, prefill,
+                                unembed)
+from repro.models.moe import quantize_params_for_serve
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama4-scout-17b-a16e").reduced()
+    cfg = dataclasses.replace(
+        cfg, dtype="float32",
+        moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    lp, cache, _ = prefill(params, cfg, toks, max_seq=32)
+    t = jnp.argmax(lp, -1).astype(jnp.int32)
+    ld_ref, _, _ = decode_step(params, cfg, t, cache)
+    return cfg, params, toks, t, ld_ref
+
+
+class TestVariants:
+    def test_onehot_embed_exact(self, setup):
+        cfg, params, toks, t, ref = setup
+        c1 = dataclasses.replace(cfg, onehot_embed=True)
+        lp, cache, _ = prefill(params, c1, toks, max_seq=32)
+        ld, _, _ = decode_step(params, c1, t, cache)
+        np.testing.assert_allclose(np.asarray(ld), np.asarray(ref),
+                                   atol=1e-4)
+
+    def test_int8_kv_close(self, setup):
+        cfg, params, toks, t, ref = setup
+        c2 = dataclasses.replace(cfg, kv_dtype="int8")
+        lp, cache, _ = prefill(params, c2, toks, max_seq=32)
+        assert cache["pos0"]["k"].dtype == jnp.int8
+        assert "k_scale" in cache["pos0"]
+        ld, _, _ = decode_step(params, c2, t, cache)
+        rel = float(jnp.linalg.norm(ld - ref) / jnp.linalg.norm(ref))
+        assert rel < 0.05, rel
+
+    def test_quantized_serve_close(self, setup):
+        cfg, params, toks, t, ref = setup
+        c3 = dataclasses.replace(cfg, quantized_serve=True)
+        mat = MatConfig(8, 4)
+        qp = quantize_params_for_serve(params, c3, mat)
+        assert "wi_codes" in qp["blocks"]["pos0"]["moe"]["experts"]
+        lp, cache, _ = prefill(qp, c3, toks, max_seq=32, mat=mat)
+        ld, _, _ = decode_step(qp, c3, t, cache, mat=mat)
+        rel = float(jnp.linalg.norm(ld - ref) / jnp.linalg.norm(ref))
+        assert rel < 0.05, rel
+
+    def test_window_sliced_decode_exact(self):
+        cfg = get_config("smollm-360m").reduced()
+        cfg = dataclasses.replace(cfg, dtype="float32", sliding_window=8,
+                                  always_swa=True)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(2), (1, 20), 0,
+                                  cfg.vocab_size)
+        lp, cache, _ = prefill(params, cfg, toks, max_seq=24)
+        t = jnp.argmax(lp, -1).astype(jnp.int32)
+        ld, _, _ = decode_step(params, cfg, t, cache)
+        toks_full = jnp.concatenate([toks, t[:, None]], 1)
+        h, _ = forward(params, cfg, toks_full)
+        oracle = unembed(params, cfg, h[:, -1])
+        np.testing.assert_allclose(np.asarray(ld), np.asarray(oracle),
+                                   atol=1e-4)
+
+    def test_seq_parallel_noop_on_host(self, setup):
+        """Without a mesh, seq_parallel hints are identity."""
+        cfg, params, toks, t, ref = setup
+        c4 = dataclasses.replace(cfg, seq_parallel=True)
+        lp, cache, _ = prefill(params, c4, toks, max_seq=32)
+        ld, _, _ = decode_step(params, c4, t, cache)
+        np.testing.assert_allclose(np.asarray(ld), np.asarray(ref),
+                                   atol=1e-5)
+
+    def test_quantized_serve_init_params(self):
+        cfg = dataclasses.replace(
+            get_config("llama4-scout-17b-a16e").reduced(),
+            quantized_serve=True)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        e = params["blocks"]["pos0"]["moe"]["experts"]
+        assert e["wi_codes"].dtype == jnp.uint8
+        assert e["wi_scales"].dtype == jnp.float32

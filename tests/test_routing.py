@@ -1,0 +1,176 @@
+"""Cache-aware routing policies + miss-rate controller."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.routing import (MissRateController, cache_prior_routing,
+                                criticality, cumsum_routing, expert_demand,
+                                topk_routing)
+
+
+def _probs(key, T=32, E=16, sharp=2.0):
+    logits = jax.random.normal(key, (T, E)) * sharp
+    return jax.nn.softmax(logits, axis=-1)
+
+
+class TestTopK:
+    def test_gates_normalized(self, rng):
+        gates, ids = topk_routing(_probs(rng), 4)
+        np.testing.assert_allclose(np.sum(np.asarray(gates), -1), 1.0,
+                                   rtol=1e-5)
+
+    def test_selects_argmax(self, rng):
+        p = _probs(rng)
+        _, ids = topk_routing(p, 2)
+        np.testing.assert_array_equal(np.asarray(ids[:, 0]),
+                                      np.argmax(np.asarray(p), -1))
+
+
+class TestCumsum:
+    def test_threshold_coverage(self, rng):
+        p = _probs(rng, sharp=3.0)
+        gates, ids, active = cumsum_routing(p, 0.9, 8)
+        p_np, ids_np, act = map(np.asarray, (p, ids, active))
+        for t in range(p_np.shape[0]):
+            mass = p_np[t, ids_np[t][act[t]]].sum()
+            # selected set covers tau (or is the full kmax)
+            assert mass >= 0.9 - 1e-5 or act[t].all()
+
+    def test_sharper_uses_fewer_experts(self, rng):
+        flat = _probs(rng, sharp=0.3)
+        sharp = _probs(rng, sharp=5.0)
+        _, _, a_flat = cumsum_routing(flat, 0.9, 8)
+        _, _, a_sharp = cumsum_routing(sharp, 0.9, 8)
+        assert np.asarray(a_sharp).sum() < np.asarray(a_flat).sum()
+
+
+class TestCachePrior:
+    def test_zero_alpha_is_topk(self, rng):
+        p = _probs(rng)
+        cached = jnp.zeros(16, bool).at[:4].set(True)
+        g0, i0 = cache_prior_routing(p, cached, 0.0, 2)
+        g1, i1 = topk_routing(p, 2)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+    def test_boost_pulls_selection_to_cache(self, rng):
+        p = _probs(rng)
+        cached = jnp.zeros(16, bool).at[:4].set(True)
+
+        def cached_frac(alpha):
+            _, ids = cache_prior_routing(p, cached, alpha, 2)
+            return float(jnp.mean((ids < 4).astype(jnp.float32)))
+
+        fracs = [cached_frac(a) for a in (0.0, 2.0, 10.0, 100.0)]
+        assert fracs == sorted(fracs)
+        # multiplicative boost is score-proportional (paper design): a
+        # near-zero cached score can stay unselected, so <1.0 is expected
+        assert fracs[-1] > 0.9
+        assert fracs[-1] > fracs[0] + 0.2
+
+    def test_gate_values_from_original_probs(self, rng):
+        """Boost reorders selection but must not distort mixture weights."""
+        p = _probs(rng)
+        cached = jnp.zeros(16, bool).at[:4].set(True)
+        gates, ids = cache_prior_routing(p, cached, 5.0, 2)
+        raw = jnp.take_along_axis(p, ids, axis=-1)
+        raw = raw / raw.sum(-1, keepdims=True)
+        np.testing.assert_allclose(np.asarray(gates), np.asarray(raw),
+                                   rtol=1e-5)
+
+
+class TestCriticality:
+    def test_dynamic_head_count(self):
+        gates = jnp.array([[0.9, 0.1], [0.55, 0.45], [0.45, 0.35]])
+        crit = criticality(gates, theta=0.5)
+        assert np.asarray(crit).sum(-1).tolist() == [1, 1, 0]
+
+    def test_expert_demand(self):
+        ids = jnp.array([[0, 1], [1, 2]])
+        crit = jnp.array([[True, False], [False, False]])
+        msb, lsb = expert_demand(ids, crit, 4)
+        assert np.asarray(msb).tolist() == [True, True, True, False]
+        assert np.asarray(lsb).tolist() == [True, False, False, False]
+
+
+class TestController:
+    def test_converges_toward_target(self):
+        """Simulated plant: higher alpha -> lower miss rate."""
+        ctrl = MissRateController(0.05, warmup_steps=5)
+        miss = 0.4
+        for _ in range(80):
+            alpha = ctrl.update(miss)
+            miss = 0.4 / (1.0 + 0.5 * alpha)       # plant response
+        assert miss < 0.1
+
+    def test_inactive_during_warmup(self):
+        ctrl = MissRateController(0.05, warmup_steps=10)
+        for _ in range(10):
+            a = ctrl.update(0.9)
+        assert a == 0.0 and not ctrl.active
+        assert ctrl.update(0.9) > 0.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.floats(0.0, 1.0), min_size=1, max_size=60))
+    def test_alpha_bounded_nonnegative(self, misses):
+        ctrl = MissRateController(0.05, warmup_steps=3)
+        for m in misses:
+            a = ctrl.update(m)
+            assert 0.0 <= a <= ctrl.alpha_max
+
+
+class TestBuddy:
+    def test_buddy_substitutes_only_when_cached(self, rng):
+        from repro.core.routing import buddy_routing
+
+        p = _probs(rng, T=8, E=8)
+        buddies = jnp.array([1, 0, 3, 2, 5, 4, 7, 6])
+        cached = jnp.zeros(8, bool).at[jnp.array([1, 3])].set(True)
+        gates, ids = buddy_routing(p, cached, buddies, 2)
+        ids_np = np.asarray(ids)
+        base_gates, base_ids = np.asarray(jax.lax.top_k(p, 2)[1]), None
+        for t in range(8):
+            for kk in range(2):
+                orig = int(np.asarray(jax.lax.top_k(p, 2)[1])[t, kk])
+                got = int(ids_np[t, kk])
+                if orig in (1, 3):                 # cached -> kept
+                    assert got == orig
+                elif int(buddies[orig]) in (1, 3):  # buddy cached -> swap
+                    assert got == int(buddies[orig])
+                else:                               # miss stands
+                    assert got == orig
+
+    def test_compute_buddies_symmetric_pairs(self, rng):
+        from repro.core.routing import compute_buddies
+
+        base = jax.random.normal(rng, (3, 16))
+        # experts 2i and 2i+1 are near-duplicates
+        w = jnp.stack([base[0], base[0] + 0.01,
+                       base[1], base[1] + 0.01,
+                       base[2], base[2] + 0.01])
+        b = np.asarray(compute_buddies(w))
+        assert b.tolist() == [1, 0, 3, 2, 5, 4]
+
+    def test_engine_buddy_policy_runs(self):
+        import dataclasses
+        from repro.configs.base import get_config
+        from repro.core.amat import MatConfig
+        from repro.core.engine import EngineConfig, SliceMoEEngine
+        from repro.models.model import init_params
+        from repro.models.moe import RoutingPolicy
+
+        cfg = get_config("qwen15-moe-repro")
+        cfg = dataclasses.replace(cfg, n_layers=2)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = SliceMoEEngine(cfg, params, EngineConfig(
+            mat=MatConfig(8, 4), cache_bytes=1e6,
+            policy=RoutingPolicy(kind="buddy", slice_mode="dbsc"),
+            max_seq=64))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 24), 0,
+                                  cfg.vocab_size)
+        logits = eng.prefill(toks)
+        out, metrics = eng.decode(
+            jnp.argmax(logits, -1).astype(jnp.int32), 6)
+        assert out.shape == (1, 6)

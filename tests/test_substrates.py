@@ -1,0 +1,138 @@
+"""Data pipeline / optimizer / checkpoint substrates."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import ckpt as CKPT
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim import adamw as OPT
+
+
+class TestData:
+    def _data(self, **kw):
+        base = dict(vocab_size=256, seq_len=32, global_batch=8, seed=3)
+        base.update(kw)
+        return SyntheticLM(DataConfig(**base))
+
+    def test_deterministic(self):
+        a = self._data().sample_batch(5, 8)
+        b = self._data().sample_batch(5, 8)
+        np.testing.assert_array_equal(a, b)
+
+    def test_steps_differ(self):
+        d = self._data()
+        assert not np.array_equal(d.sample_batch(0, 8), d.sample_batch(1, 8))
+
+    def test_host_shard_consistent_with_global(self):
+        d = self._data()
+        full = d.sample_batch(2, 8)
+        sh = d.host_shard(2, shard_idx=1, n_shards=4)
+        np.testing.assert_array_equal(sh["tokens"], full[2:4, :-1])
+        np.testing.assert_array_equal(sh["labels"], full[2:4, 1:])
+
+    def test_labels_shifted(self):
+        d = self._data()
+        b = next(d.batches())
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_tokens_in_range(self):
+        b = self._data().sample_batch(0, 8)
+        assert b.min() >= 0 and b.max() < 256
+
+    def test_nonuniform_distribution(self):
+        """Zipf structure: top tokens should dominate."""
+        b = self._data(global_batch=16).sample_batch(0, 16)
+        counts = np.bincount(b.reshape(-1), minlength=256)
+        assert counts.max() > 3 * np.median(counts[counts > 0])
+
+
+class TestAdamW:
+    def test_minimizes_quadratic(self):
+        cfg = OPT.AdamWConfig(lr=0.1, weight_decay=0.0, total_steps=200,
+                              warmup_steps=1, schedule="constant")
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = OPT.init_state(params, cfg)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = OPT.apply_updates(params, grads, state, cfg)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+    def test_grad_clip(self):
+        cfg = OPT.AdamWConfig(grad_clip=1.0, total_steps=10, warmup_steps=1)
+        params = {"w": jnp.zeros(4)}
+        state = OPT.init_state(params, cfg)
+        _, _, m = OPT.apply_updates(params, {"w": jnp.full(4, 1e6)}, state,
+                                    cfg)
+        assert float(m["grad_norm"]) > 1e5   # reported pre-clip
+
+    def test_weight_decay_only_matrices(self):
+        cfg = OPT.AdamWConfig(lr=1e-2, weight_decay=1.0, total_steps=10,
+                              warmup_steps=1, schedule="constant")
+        params = {"mat": jnp.ones((4, 4)), "vec": jnp.ones(4)}
+        state = OPT.init_state(params, cfg)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        new, _, _ = OPT.apply_updates(params, zeros, state, cfg)
+        assert float(jnp.max(new["mat"])) < 1.0       # decayed
+        np.testing.assert_allclose(np.asarray(new["vec"]), 1.0)  # untouched
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = OPT.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                              schedule="cosine")
+        lr0 = float(OPT.schedule_lr(cfg, jnp.asarray(0)))
+        lr10 = float(OPT.schedule_lr(cfg, jnp.asarray(10)))
+        lr99 = float(OPT.schedule_lr(cfg, jnp.asarray(99)))
+        assert lr0 < lr10
+        assert lr99 < lr10
+        assert lr99 >= 0.09           # cosine floor ~0.1 * lr
+
+    def test_bf16_params_f32_master(self):
+        cfg = OPT.AdamWConfig(lr=1e-4, total_steps=10, warmup_steps=1,
+                              schedule="constant", weight_decay=0.0)
+        params = {"w": jnp.ones(64, jnp.bfloat16)}
+        state = OPT.init_state(params, cfg)
+        for _ in range(10):
+            params, state, _ = OPT.apply_updates(
+                params, {"w": jnp.full(64, 1e-3, jnp.bfloat16)}, state, cfg)
+        # master accumulates below bf16 resolution
+        assert state.master["w"].dtype == jnp.float32
+        assert float(jnp.max(jnp.abs(state.master["w"] - 1.0))) > 0
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {
+            "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones(5, jnp.bfloat16),
+                  "d": (jnp.zeros(2, jnp.int32), jnp.ones((), jnp.float32))},
+        }
+        CKPT.save(str(tmp_path / "ck"), tree, step=42)
+        back = CKPT.restore(str(tmp_path / "ck"))
+        assert CKPT.restore_step(str(tmp_path / "ck")) == 42
+        for orig, rest in zip(jax.tree_util.tree_leaves(tree),
+                              jax.tree_util.tree_leaves(back)):
+            assert str(orig.dtype) == str(rest.dtype)
+            np.testing.assert_array_equal(
+                np.asarray(orig, np.float32), np.asarray(rest, np.float32))
+
+    def test_structure_preserved(self, tmp_path):
+        tree = {"x": [jnp.ones(2), {"y": jnp.zeros(3)}]}
+        CKPT.save(str(tmp_path / "ck2"), tree)
+        back = CKPT.restore(str(tmp_path / "ck2"))
+        assert isinstance(back["x"], list)
+        assert isinstance(back["x"][1], dict)
+
+    def test_model_params_roundtrip(self, tmp_path):
+        from repro.configs.base import get_config
+        from repro.models.model import init_params
+
+        cfg = get_config("smollm-360m").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        CKPT.save(str(tmp_path / "model"), {"params": params})
+        back = CKPT.restore(str(tmp_path / "model"))["params"]
+        assert jax.tree_util.tree_structure(params) == \
+            jax.tree_util.tree_structure(back)

@@ -1,0 +1,185 @@
+"""PCW warmup + SliceMoE engine integration (the paper's core claims)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.amat import MatConfig
+from repro.core.cache import SliceCache
+from repro.core.engine import EngineConfig, SliceMoEEngine
+from repro.core.slices import ExpertSliceStore, SliceKey
+from repro.core.warmup import (HotnessTracker, init_last_layer, init_random,
+                               pcw_reshape)
+from repro.models.model import init_params
+from repro.models.moe import RoutingPolicy
+
+
+@pytest.fixture(scope="module")
+def small_store(rng):
+    w = {
+        l: {"wi": jax.random.normal(jax.random.fold_in(rng, l),
+                                    (8, 32, 64)) * 0.1,
+            "wo": jax.random.normal(jax.random.fold_in(rng, 100 + l),
+                                    (8, 64, 32)) * 0.1}
+        for l in range(3)
+    }
+    return ExpertSliceStore.from_float(w, MatConfig(8, 4))
+
+
+class TestStore:
+    def test_slice_sizes(self, small_store):
+        s = small_store
+        # MSB (4-bit codes + metadata) is bigger than LSB (4 raw bits)
+        assert s.msb_bytes_per_expert > s.lsb_bytes_per_expert
+        # both slices together beat storing hi+lo copies (Matryoshka wins)
+        duplicated = s.highbit_expert_bytes() + s.msb_bytes_per_expert
+        assert s.highbit_expert_bytes() < duplicated
+
+    def test_total_bytes(self, small_store):
+        assert small_store.total_bytes() == pytest.approx(
+            small_store.highbit_expert_bytes() * 3 * 8)
+
+
+class TestPCW:
+    def _hot_tracker(self, L=3, E=8):
+        t = HotnessTracker(L, E)
+        # expert e hotness proportional to E-e on every layer
+        for l in range(L):
+            reps = np.concatenate([np.full(E - e, e) for e in range(E)])
+            t.observe(l, reps.reshape(-1, 1),
+                      np.ones_like(reps, float).reshape(-1, 1))
+        return t
+
+    def test_reshape_keeps_hot_evicts_cold(self, small_store):
+        cache = SliceCache(small_store.msb_bytes_per_expert * 10)
+        # fill with a cold-biased set
+        for l in range(3):
+            for e in range(8):
+                cache.insert(SliceKey(l, e, "lsb"),
+                             small_store.lsb_bytes_per_expert)
+        tracker = self._hot_tracker()
+        summary = pcw_reshape(cache, small_store, tracker,
+                              lsb_keep_frac=0.2)
+        assert summary["evicted_lsb"] > 0
+        assert summary["installed_msb"] > 0
+        msb, lsb = cache.residency(3, 8)
+        # hottest experts (low index) must be MSB-resident
+        assert msb[:, 0].all()
+        assert cache.used <= cache.capacity
+
+    def test_baseline_inits(self, small_store):
+        cache = SliceCache(small_store.msb_bytes_per_expert * 6)
+        init_last_layer(cache, small_store)
+        assert all(k.layer == 2 for k in cache.resident_keys())
+        init_random(cache, small_store, seed=1)
+        assert cache.used <= cache.capacity
+        assert len(cache) > 0
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_config("deepseek-v2-lite-repro")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run(cfg, params, **over):
+    base = dict(
+        mat=MatConfig(8, 4), cache_bytes=1.5e6,
+        policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc"),
+        miss_rate_target=0.05, warmup="pcw", max_seq=80)
+    base.update(over)
+    eng = SliceMoEEngine(cfg, params, EngineConfig(**base))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 48), 0,
+                              cfg.vocab_size)
+    logits = eng.prefill(toks)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+    _, metrics = eng.decode(first, 24)
+    return eng, metrics
+
+
+class TestEngine:
+    def test_controller_reduces_miss_rate(self, engine_setup):
+        cfg, params = engine_setup
+        eng, metrics = _run(cfg, params)
+        steps = metrics["per_step"]
+        early = np.mean([s["miss_rate"] for s in steps[:8]])
+        late = np.mean([s["miss_rate"] for s in steps[-8:]])
+        assert late <= early + 1e-9
+        assert eng.alpha > 0  # controller engaged
+
+    def test_dbsc_cheaper_than_highbit_baseline(self, engine_setup):
+        """Paper Fig. 9: DBSC beats whole-expert high-bit caching."""
+        cfg, params = engine_setup
+        _, m_dbsc = _run(cfg, params)
+        _, m_high = _run(
+            cfg, params,
+            policy=RoutingPolicy(kind="cache_prior", slice_mode="highbit"),
+            fused_slices=True)
+        e_dbsc = m_dbsc["decode_totals"]["total_energy_j"]
+        e_high = m_high["decode_totals"]["total_energy_j"]
+        assert e_dbsc < e_high, (e_dbsc, e_high)
+
+    def test_pcw_beats_empty_init(self, engine_setup):
+        """Paper Fig. 10: warmup reduces early-decode cost vs empty cache."""
+        cfg, params = engine_setup
+        _, m_pcw = _run(cfg, params, warmup="pcw")
+        _, m_empty = _run(cfg, params, warmup="empty")
+        e_pcw = m_pcw["decode_totals"]["total_energy_j"]
+        e_empty = m_empty["decode_totals"]["total_energy_j"]
+        assert e_pcw < e_empty, (e_pcw, e_empty)
+
+    def test_non_moe_arch_rejected(self):
+        cfg = get_config("smollm-360m").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="inapplicable"):
+            SliceMoEEngine(cfg, params, EngineConfig())
+
+    def test_decode_produces_tokens(self, engine_setup):
+        cfg, params = engine_setup
+        eng, metrics = _run(cfg, params)
+        assert metrics["cache_stats"]["msb_hits"] > 0
+
+
+class TestPrefetcher:
+    def test_transition_model_learns(self):
+        from repro.core.prefetch import TransitionPrefetcher
+
+        pf = TransitionPrefetcher(n_layers=3, n_experts=8, top_m=2)
+        # deterministic pattern: layer l expert i -> layer l+1 expert i+1
+        for _ in range(20):
+            for l in range(1, 3):
+                prev = np.array([2, 4])
+                cur = np.array([3, 5])
+                pf.observe(l, prev, cur)
+        pred = pf.predict(0, np.array([2, 4]))
+        assert set(pred.tolist()) == {3, 5}
+
+    def test_engine_prefetch_runs_and_tracks_accuracy(self, engine_setup):
+        cfg, params = engine_setup
+        eng, metrics = _run(
+            cfg, params,
+            policy=RoutingPolicy(kind="topk", slice_mode="highbit"),
+            fused_slices=True, prefetch_top_m=4, warmup="empty",
+            miss_rate_target=None)
+        assert eng.prefetcher is not None
+        assert eng.prefetcher.issued > 0
+        assert 0.0 <= eng.prefetcher.accuracy <= 1.0
+
+    def test_prefetch_worse_than_cache_aware(self, engine_setup):
+        """The paper's §2.1 claim: prefetching under diverse routing loses
+        to cache-aware routing on Flash traffic."""
+        cfg, params = engine_setup
+        _, m_pf = _run(
+            cfg, params,
+            policy=RoutingPolicy(kind="topk", slice_mode="highbit"),
+            fused_slices=True, prefetch_top_m=4, warmup="empty",
+            miss_rate_target=None)
+        _, m_dbsc = _run(cfg, params, warmup="pcw")
+        e_pf = m_pf["decode_totals"]["flash_bytes"]
+        e_db = m_dbsc["decode_totals"]["flash_bytes"]
+        assert e_db < e_pf, (e_db, e_pf)
