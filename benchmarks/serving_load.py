@@ -1,0 +1,220 @@
+"""Serving-load benchmark: arrival rate × batch size sweep.
+
+Exercises the continuous-batching subsystem on a tiny MoE config and
+reports, per (arrival_rate, max_batch) cell, the simulated decode
+throughput, TTFT percentiles, steady-state miss rate and energy per
+token.  Two claims are demonstrated with printed numbers:
+
+  (a) **batching pays**: decode throughput (simulated tokens/s) rises
+      with ``max_batch`` — the resident non-expert weights are read once
+      per *step*, so their DRAM traffic amortizes over the batch;
+  (b) **warm beats cold**: a persistent engine (shared slice cache +
+      accumulated hotness) yields a lower steady-state miss rate and
+      lower energy/token than the seed's fresh-engine-per-request
+      baseline on the identical workload.
+
+Run:  PYTHONPATH=src python benchmarks/serving_load.py [--quick]
+"""
+
+from __future__ import annotations
+
+import os as _os
+import sys as _sys
+
+_root = _os.path.join(_os.path.dirname(_os.path.abspath(__file__)), "..")
+for _p in (_os.path.join(_root, "src"), _root):
+    if _p not in _sys.path:
+        _sys.path.insert(0, _p)
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import CsvSink, report
+from repro.configs.base import get_config
+from repro.core.amat import MatConfig
+from repro.core.engine import EngineConfig, PersistentEngine, SliceMoEEngine
+from repro.models.model import init_params
+from repro.models.moe import RoutingPolicy
+from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
+                                     SchedulerConfig)
+from repro.serving.workloads import (LengthDist, TenantSpec, WorkloadConfig,
+                                     generate)
+
+ARCH = "qwen15-moe-repro"
+PROMPT_LEN = 24
+MAX_NEW = 12
+CACHE_BYTES = 2.5e6
+MAX_SEQ = 64
+
+
+def _engine_cfg() -> EngineConfig:
+    return EngineConfig(
+        mat=MatConfig(8, 4), cache_bytes=CACHE_BYTES,
+        policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc"),
+        miss_rate_target=0.1, warmup="pcw", max_seq=MAX_SEQ)
+
+
+def _workload(n_requests: int, seed: int, *, kind: str = "closed_loop",
+              rate: float = 2.0):
+    # Fixed lengths keep the jit-trace count at one prefill + one decode
+    # shape per max_batch, so the sweep measures scheduling, not compiles.
+    tenant = TenantSpec(
+        prompt_len=LengthDist("fixed", PROMPT_LEN),
+        output_len=LengthDist("fixed", MAX_NEW))
+    cfg = WorkloadConfig(kind=kind, n_requests=n_requests, rate=rate,
+                         seed=seed, tenants=(tenant,))
+    return generate(cfg, get_config(ARCH).vocab_size)
+
+
+def run_cell(cfg, params, *, max_batch: int, n_requests: int,
+             kind: str = "closed_loop", rate: float = 2.0):
+    engine = PersistentEngine(cfg, params, _engine_cfg())
+    sched = ContinuousBatchingScheduler(
+        engine, SchedulerConfig(max_batch=max_batch,
+                                max_queue=n_requests + 1))
+    t0 = time.perf_counter()
+    for r in _workload(n_requests, seed=0, kind=kind, rate=rate):
+        sched.submit(r)
+    sched.run()
+    wall = time.perf_counter() - t0
+    return sched.summary(wall_s=wall), engine
+
+
+def _epoch_miss_rate(cache, skip_requests: int = 0) -> float:
+    """Whole-request (prefill+decode) miss rate over archived epochs.
+
+    ``skip_requests`` drops the leading warm-up requests so the number
+    reflects steady state.
+    """
+    from repro.core.cache import CacheStats
+
+    acc = miss = 0
+    for label, snap in cache.epochs:
+        rid = int(label.split("/")[0][3:])     # 'req<N>/<phase>'
+        if rid < skip_requests:
+            continue
+        stats = CacheStats(**snap)
+        acc += stats.accesses
+        miss += stats.misses
+    return miss / max(acc, 1)
+
+
+def run_cold_baseline(cfg, params, *, n_requests: int) -> dict:
+    """Seed behavior: a fresh engine (cold cache) per request.
+
+    Runs each request through its own one-shot scheduler so the
+    accounting path is *identical* to the warm cell — the only variable
+    is whether the slice cache / hotness survive between requests.
+    """
+    reqs = _workload(n_requests, seed=0)
+    total_energy = 0.0
+    total_tokens = 0
+    miss_rates = []
+    sim_time = 0.0
+    for r in reqs:
+        engine = PersistentEngine(cfg, params, _engine_cfg())
+        sched = ContinuousBatchingScheduler(
+            engine, SchedulerConfig(max_batch=1, max_queue=2))
+        sched.submit(Request(
+            request_id=0, prompt=r.prompt,
+            max_new_tokens=r.max_new_tokens))
+        done = sched.run()
+        total_energy += engine.ledger.total_energy_j
+        sim_time += engine.ledger.total_latency_s
+        total_tokens += sum(len(c.tokens) for c in done)
+        miss_rates.append(_epoch_miss_rate(engine.cache))
+    return {
+        "n_tokens": total_tokens,
+        "sim_time_s": sim_time,
+        "throughput_tok_per_s": total_tokens / sim_time,
+        "steady_state_miss_rate": float(np.mean(miss_rates)),
+        "energy_per_token_j": total_energy / total_tokens,
+    }
+
+
+def main(quick: bool = False) -> None:
+    n_requests = 6 if quick else 12
+    rates = [2.0] if quick else [2.0, 20.0]
+    batches = [1, 4] if quick else [1, 2, 4, 8]
+
+    cfg = get_config(ARCH)
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    sink = CsvSink("serving_load", [
+        "scenario", "max_batch", "throughput_tok_per_s", "ttft_p50_s",
+        "ttft_p95_s", "per_token_p50_s", "steady_miss_rate",
+        "energy_per_token_j", "mean_batch_occupancy"])
+
+    # Cells: rate-limited Poisson arrivals (latency-oriented) plus a
+    # closed-loop saturated scenario (capacity-oriented — this is where
+    # batch size moves throughput; under light load it's arrival-bound).
+    cells = [(f"poisson@{rate:g}", "poisson", rate) for rate in rates]
+    cells.append(("saturated", "closed_loop", 0.0))
+
+    print(f"=== serving load sweep: {ARCH} (2 layers), "
+          f"{n_requests} requests/cell ===")
+    by_batch = {}
+    for name, kind, rate in cells:
+        for mb in batches:
+            s, _ = run_cell(cfg, params, max_batch=mb,
+                            n_requests=n_requests, kind=kind, rate=rate)
+            sink.add(name, mb, s["throughput_tok_per_s"], s["ttft_p50_s"],
+                     s["ttft_p95_s"], s["per_token_p50_s"],
+                     s["steady_state_miss_rate"], s["energy_per_token_j"],
+                     s["mean_batch_occupancy"])
+            by_batch.setdefault(name, {})[mb] = s
+            print(f"{name:>12} batch={mb}: "
+                  f"{s['throughput_tok_per_s']:8.1f} tok/s  "
+                  f"ttft_p50={s['ttft_p50_s']*1e3:6.2f} ms  "
+                  f"miss={s['steady_state_miss_rate']:.3f}  "
+                  f"E/tok={s['energy_per_token_j']*1e3:.4f} mJ  "
+                  f"occ={s['mean_batch_occupancy']:.2f}")
+
+    print("\n=== warm persistent engine vs fresh-engine-per-request "
+          "(seed baseline) ===")
+    # Same workload, same single-slot scheduler, same accounting — the
+    # only difference is cache/hotness persistence across requests.
+    cold = run_cold_baseline(cfg, params, n_requests=n_requests)
+    warm_s, warm_engine = run_cell(cfg, params, max_batch=1,
+                                   n_requests=n_requests)
+    warm_miss = _epoch_miss_rate(warm_engine.cache,
+                                 skip_requests=n_requests // 2)
+    print(f"cold (fresh engine/request): "
+          f"{cold['throughput_tok_per_s']:8.1f} tok/s  "
+          f"miss={cold['steady_state_miss_rate']:.3f}  "
+          f"E/tok={cold['energy_per_token_j']*1e3:.4f} mJ")
+    print(f"warm (persistent slice cache): "
+          f"{warm_s['throughput_tok_per_s']:8.1f} tok/s  "
+          f"miss={warm_miss:.3f}  "
+          f"E/tok={warm_s['energy_per_token_j']*1e3:.4f} mJ")
+    curve = [f"{m:.2f}" for label, m in
+             warm_engine.cache.epoch_miss_rates()
+             if label.endswith("/prefill")]
+    print(f"warm prefill miss-rate curve (per request): "
+          f"{' '.join(curve)}")
+
+    # The acceptance claims, asserted so CI catches regressions.
+    tp = {mb: by_batch["saturated"][mb]["throughput_tok_per_s"]
+          for mb in batches}
+    assert tp[max(batches)] > tp[1], \
+        f"batched decode no faster than single: {tp}"
+    assert warm_miss < cold["steady_state_miss_rate"], \
+        (warm_miss, cold["steady_state_miss_rate"])
+    assert warm_s["energy_per_token_j"] < cold["energy_per_token_j"], \
+        (warm_s["energy_per_token_j"], cold["energy_per_token_j"])
+    print("\nclaims verified: throughput(batch) increasing, "
+          "warm miss rate and energy/token below cold baseline")
+
+    path = sink.flush()
+    report("serving_load", 0.0, f"csv={path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

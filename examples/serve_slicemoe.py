@@ -64,12 +64,11 @@ def main():
                                 args.prompt_len).astype(np.int32),
             max_new_tokens=args.max_new))
 
+    from repro.core.cache import CacheStats
+
     for c in server.run():
         d = c.metrics["decode_totals"]
-        s = c.metrics["cache_stats"]
-        miss = (s["msb_misses"] + s["lsb_misses"]) / max(
-            s["msb_hits"] + s["msb_misses"]
-            + s["lsb_hits"] + s["lsb_misses"], 1)
+        miss = CacheStats(**c.metrics["cache_stats"]).miss_rate
         print(f"request {c.request_id}: {len(c.tokens)} tokens  "
               f"wall prefill {c.prefill_s:.2f}s decode {c.decode_s:.2f}s  |"
               f"  sim: {d['total_energy_j'] * 1e3:.2f} mJ, "

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Smoke invocation of the serving-load benchmark on a tiny MoE config.
+# Verifies the two subsystem claims end-to-end (throughput rises with
+# batch size; warm persistent cache beats fresh-engine-per-request) —
+# the benchmark asserts both and exits non-zero on regression.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src python benchmarks/serving_load.py --quick

@@ -1,0 +1,4 @@
+"""SliceMoE reproduction: bit-sliced expert caching under miss-rate
+constraints, grown into a continuous-batching serving system on JAX."""
+
+__version__ = "0.2.0"

@@ -1,0 +1,1 @@
+"""Model configurations (paper eval + assigned architecture pool)."""

@@ -71,6 +71,35 @@ class SliceCache:
         self._lsb: "OrderedDict[SliceKey, float]" = OrderedDict()
         self.used = 0.0
         self.stats = CacheStats()
+        # Cross-request stats epochs: each served request gets its own
+        # hit/miss window while cache *contents* persist, so a warm-vs-cold
+        # miss-rate curve can be read off epoch-by-epoch.
+        self.epochs: List[Tuple[str, dict]] = []
+        self._epoch_label: Optional[str] = None
+
+    # ------------------------------------------------------------- epochs
+    def begin_epoch(self, label: str) -> None:
+        """Archive the current stats window under its label, start a new one.
+
+        Contents (and therefore warmth) are untouched — only the counters
+        roll over.  Used by the persistent engine at request boundaries.
+        """
+        self.end_epoch()
+        self._epoch_label = label
+        self.stats = CacheStats()
+
+    def end_epoch(self) -> None:
+        """Archive the open epoch (no-op when none is open)."""
+        if self._epoch_label is None:
+            return
+        self.epochs.append((self._epoch_label, self.stats.snapshot()))
+        self._epoch_label = None
+        self.stats = CacheStats()
+
+    def epoch_miss_rates(self) -> List[Tuple[str, float]]:
+        """[(label, miss_rate)] over archived epochs — the warm-up curve."""
+        return [(label, CacheStats(**snap).miss_rate)
+                for label, snap in self.epochs]
 
     # ----------------------------------------------------------- internals
     def _segment(self, key: SliceKey) -> "OrderedDict[SliceKey, float]":

@@ -17,13 +17,27 @@ DRAM/Flash offload hierarchy.  Per decode step:
 Prefill runs once, layer-parallel, collecting the hotness statistics PCW
 needs; the prefill→decode transition applies the selected cache
 initialization (``pcw`` or one of the Fig. 10 baselines).
+
+State is split into two tiers so one engine can serve many requests
+(the continuous-batching scheduler in :mod:`repro.serving.scheduler`):
+
+* :class:`PersistentEngine` — *shared* state: the jitted prefill/decode
+  functions, the quantized slice store, the :class:`SliceCache`, the
+  :class:`HotnessTracker` and the :class:`CostLedger`.  These survive
+  across requests: a warm cache turns later requests' expert fetches
+  into hits, and PCW reshapes from *accumulated* hotness rather than
+  only the current prompt's prefill.
+* per-request state — the KV cache, the step counter and the
+  miss-rate-controller ``alpha``.  The scheduler keeps one of each per
+  active sequence; :class:`SliceMoEEngine` (the original single-request
+  API) keeps exactly one.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,13 +72,36 @@ class EngineConfig:
     # pull the top-m predicted next-layer experts into DRAM per layer.
     # None disables.
     prefetch_top_m: Optional[int] = None
+    # Cross-request hotness aging applied at each request boundary by the
+    # persistent engine (1.0 = never forget, 0.0 = per-request hotness).
+    hotness_request_decay: float = 0.5
 
     def cache(self) -> SliceCache:
         slice_aware = self.policy.slice_mode == "dbsc" and not self.fused_slices
         return SliceCache(self.cache_bytes, slice_aware=slice_aware)
 
 
-class SliceMoEEngine:
+@dataclasses.dataclass
+class StepCharge:
+    """Result of replaying one decode step into the cache + ledger."""
+
+    miss_rate: float                      # fleet expert-level miss rate
+    accesses: int
+    misses: int
+    per_slot_miss: np.ndarray             # [B] selection-weighted miss rate
+    ledger_delta: dict                    # cost delta for this step
+
+
+class PersistentEngine:
+    """Shared-state engine: one instance serves many requests.
+
+    Holds everything that must survive across requests (jitted fns, slice
+    store, :class:`SliceCache`, :class:`HotnessTracker`,
+    :class:`CostLedger`) and exposes stateless-per-request entry points:
+    ``run_prefill`` produces a fresh KV cache against the *warm* shared
+    cache, ``decode_batch`` advances a batch of sequences one token.
+    """
+
     def __init__(self, cfg: ModelConfig, params: dict, ecfg: EngineConfig):
         if not cfg.has_moe:
             raise ValueError(f"{cfg.name} has no MoE layers; SliceMoE "
@@ -80,9 +117,7 @@ class SliceMoEEngine:
         self.cache = ecfg.cache()
         self.ledger = CostLedger(system=SYSTEM_PROFILES[ecfg.system])
         self.tracker = HotnessTracker(self.n_moe_layers, self.n_experts)
-        self.controller = MissRateController(ecfg.miss_rate_target) \
-            if ecfg.miss_rate_target is not None else None
-        self.alpha = 0.0
+        self.requests_served = 0
 
         # moe pattern positions in order (matches aux stacking order)
         self.moe_positions = [i for i, s in enumerate(cfg.block_pattern)
@@ -130,12 +165,76 @@ class SliceMoEEngine:
         wi_cols = 2 * m.d_ff if m.mlp_type in ("swiglu", "geglu") else m.d_ff
         self.expert_macs_per_token = cfg.d_model * wi_cols + m.d_ff * cfg.d_model
 
+    # --------------------------------------------------- per-request state
+    def new_controller(self) -> Optional[MissRateController]:
+        """Fresh per-request miss-rate controller (None if unconstrained)."""
+        if self.ecfg.miss_rate_target is None:
+            return None
+        return MissRateController(self.ecfg.miss_rate_target)
+
+    def init_batch_cache(self, max_batch: int) -> dict:
+        """Batched KV-cache pytree with per-sequence positions."""
+        cache = MDL.init_cache(self.cfg, max_batch, self.ecfg.max_seq)
+        cache["pos"] = jnp.zeros((max_batch,), jnp.int32)
+        return cache
+
+    @staticmethod
+    def install_slot(batch_cache: dict, request_cache: dict,
+                     slot: int) -> dict:
+        """Scatter a batch-1 prefill cache into ``slot`` of a batched cache.
+
+        Leaves are ``[n_periods, B, ...]``; the prefill cache has B=1.
+        Returns a new pytree (functional update).
+        """
+        out = {}
+        for key, entry in batch_cache.items():
+            if key == "pos":
+                continue
+            out[key] = {name: leaf.at[:, slot].set(
+                request_cache[key][name][:, 0].astype(leaf.dtype))
+                for name, leaf in entry.items()}
+        out["pos"] = batch_cache["pos"].at[slot].set(
+            jnp.asarray(request_cache["pos"], jnp.int32))
+        return out
+
+    @staticmethod
+    def clear_slot(batch_cache: dict, slot: int) -> dict:
+        """Retire ``slot``: reset its position (KV rows become dead)."""
+        out = dict(batch_cache)
+        out["pos"] = batch_cache["pos"].at[slot].set(0)
+        return out
+
     # ------------------------------------------------------------- prefill
-    def prefill(self, tokens: jax.Array, **model_kwargs):
-        """Run prefill; simulate layer-streaming cache fills; apply warmup."""
+    def run_prefill(self, tokens: jax.Array, *,
+                    label: Optional[str] = None, inflight: int = 0,
+                    **model_kwargs):
+        """Prefill one request against the warm shared cache.
+
+        Simulates layer-streaming cache fills (hits on already-resident
+        slices cost no Flash traffic — the cross-request win), applies the
+        configured warmup transition from *accumulated* hotness, and
+        returns ``(logits, kv_cache, info)`` without mutating any
+        per-request state on the engine.
+
+        ``label``: when set, the request's prefill hit/miss counters are
+        archived as a cache stats epoch under ``{label}/prefill`` and a
+        fresh window is opened for its decode phase.
+
+        ``inflight``: sequences currently decoding.  The boundary decay
+        exponent is scaled by ``1/(1+inflight)`` so that under concurrent
+        batching — where admissions arrive many per request *completed* —
+        accumulated hotness doesn't collapse with arrival rate.
+        """
+        if self.requests_served > 0:
+            decay = self.ecfg.hotness_request_decay \
+                ** (1.0 / (1.0 + max(inflight, 0)))
+            self.tracker.begin_request(decay)
+        self.requests_served += 1
+        if label is not None:
+            self.cache.begin_epoch(f"{label}/prefill")
+
         logits, kv_cache, aux = self._jit_prefill(
             self.qparams, tokens=tokens, **model_kwargs)
-        self.kv_cache = kv_cache
 
         ids = np.asarray(aux["moe"]["ids"])      # [n_periods, n_moe_pos, T, k]
         gates = np.asarray(aux["moe"]["gates"]).astype(np.float64)
@@ -164,15 +263,19 @@ class SliceMoEEngine:
 
         # Transition: PCW or a baseline init state.
         if self.ecfg.warmup == "pcw":
-            self.warmup_summary = pcw_reshape(
+            warmup_summary = pcw_reshape(
                 self.cache, self.store, self.tracker,
                 lsb_keep_frac=self.ecfg.lsb_keep_frac)
         else:
             INIT_STATES[self.ecfg.warmup](self.cache, self.store)
-            self.warmup_summary = {"init": self.ecfg.warmup}
-        self.prefill_snapshot = self.ledger.snapshot()
-        self.cache.stats.reset()
-        return logits
+            warmup_summary = {"init": self.ecfg.warmup}
+        snapshot = self.ledger.snapshot()
+        if label is not None:
+            self.cache.begin_epoch(f"{label}/decode")
+        else:
+            self.cache.stats.reset()
+        info = {"warmup": warmup_summary, "snapshot": snapshot}
+        return logits, kv_cache, info
 
     # -------------------------------------------------------------- decode
     def _policy_state(self):
@@ -194,56 +297,56 @@ class SliceMoEEngine:
                 state[f"pos{pos}"]["buddies"] = self.buddies[f"pos{pos}"]
         return state
 
-    def decode(self, first_token: jax.Array, n_steps: int,
-               **model_kwargs):
-        """Greedy decode ``n_steps`` tokens with full offload simulation.
+    def decode_batch(self, token: jax.Array, kv_cache: dict, *,
+                     alpha: float = 0.0,
+                     slot_active: Optional[np.ndarray] = None,
+                     **model_kwargs):
+        """One batched decode step for the scheduler.
 
-        Returns (tokens [B, n_steps], metrics dict).
+        ``token``: [B] int32 (padding slots carry an arbitrary token);
+        ``slot_active``: [B] bool — padding slots are masked out of MoE
+        routing inside the jitted step (no expert capacity consumed, no
+        trace entries) and excluded from cache/cost accounting.
+
+        Returns ``(logits [B, V], kv_cache, StepCharge)``.
         """
-        token = first_token
-        tokens_out = []
-        step_metrics = []
-        base = self.ledger.snapshot()
+        ps = self._policy_state()
+        mask = None if slot_active is None \
+            else jnp.asarray(np.asarray(slot_active, bool))
+        logits, kv_cache, aux = self._jit_decode(
+            self.qparams, token=token, cache=kv_cache,
+            policy_state=ps, alpha=jnp.float32(alpha),
+            token_mask=mask, **model_kwargs)
+        charge = self.charge_decode_step(aux, slot_active=slot_active)
+        return logits, kv_cache, charge
 
-        for step in range(n_steps):
-            ps = self._policy_state()
-            logits, self.kv_cache, aux = self._jit_decode(
-                self.qparams, token=token, cache=self.kv_cache,
-                policy_state=ps, alpha=jnp.float32(self.alpha),
-                **model_kwargs)
-            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            tokens_out.append(token)
+    def charge_decode_step(self, aux,
+                           slot_active: Optional[np.ndarray] = None
+                           ) -> StepCharge:
+        """Replay one decode step's slice demand into cache + ledger.
 
-            step_miss = self._charge_step(aux)
-            if self.controller is not None:
-                self.alpha = self.controller.update(step_miss)
-            step_metrics.append({
-                "miss_rate": step_miss,
-                "alpha": self.alpha,
-                **self.ledger.delta_since(base),
-            })
-            base = self.ledger.snapshot()
-
-        metrics = {
-            "per_step": step_metrics,
-            "cache_stats": self.cache.stats.snapshot(),
-            "decode_totals": self.ledger.delta_since(self.prefill_snapshot),
-        }
-        return jnp.stack(tokens_out, axis=1), metrics
-
-    def _charge_step(self, aux) -> float:
-        """Replay one decode step's slice demand into cache + ledger."""
+        Per-expert accounting matches the single-request engine exactly
+        when every slot is active.  Additionally attributes each slice
+        miss to the slots that selected the missing expert, yielding the
+        per-sequence miss-rate signal the per-request controllers consume.
+        """
         ids = np.asarray(aux["moe"]["ids"])            # [P, npos, T, k]
-        msb_needed = np.asarray(aux["moe"]["msb_needed"])  # [P, npos, E]
-        lsb_needed = np.asarray(aux["moe"]["lsb_needed"])
-        use_lsb = np.asarray(aux["moe"]["use_lsb"])
         gates = np.asarray(aux["moe"]["gates"]).astype(np.float64)
-        active = np.asarray(aux["moe"]["active"])
+        active = np.asarray(aux["moe"]["active"])      # [P, npos, T, k]
+        critical = np.asarray(aux["moe"]["critical"])  # [P, npos, T, k]
 
+        P, npos, T, _k = ids.shape
+        slot_mask = np.ones(T, bool) if slot_active is None \
+            else np.asarray(slot_active, bool)
+        slot_accesses = np.zeros(T, np.int64)
+        slot_misses = np.zeros(T, np.int64)
+
+        base = self.ledger.snapshot()
         accesses = misses = 0
         mat = self.ecfg.mat
+        mode = self.ecfg.policy.slice_mode
         prev_used = None
-        for period in range(ids.shape[0]):
+        for period in range(P):
             for pidx, pos in enumerate(self.moe_positions):
                 lidx = self.layer_map[(pos, period)]
                 # --- prefetch (paper §2.1 baseline): before this layer
@@ -259,9 +362,9 @@ class SliceMoEEngine:
                         if key not in self.cache:
                             self.ledger.miss_fill(nb)
                             self.cache.insert(key, nb)
-                act = active[period, pidx].reshape(-1)
-                flat_ids = ids[period, pidx].reshape(-1)[act]
-                flat_gates = gates[period, pidx].reshape(-1)[act]
+                act2d = active[period, pidx] & slot_mask[:, None]   # [T, k]
+                flat_ids = ids[period, pidx][act2d]
+                flat_gates = gates[period, pidx][act2d]
                 self.tracker.observe(lidx, flat_ids, flat_gates)
                 if self.prefetcher is not None:
                     if prev_used is not None:
@@ -271,9 +374,24 @@ class SliceMoEEngine:
                             self.prefetcher.predict(lidx - 1, prev_used))
                         self.prefetcher.mark_useful(len(hits))
                     prev_used = flat_ids
+
+                # Per-expert slice demand over *active* slots only.  For
+                # a full batch this reproduces the jit-side msb_needed /
+                # lsb_needed exactly; padding slots are excluded.
+                msb_demand = np.unique(flat_ids)
+                if mode == "highbit":
+                    lsb_wanted = set(int(e) for e in msb_demand)
+                elif mode in ("lowbit", "amat_static"):
+                    lsb_wanted = set()
+                else:   # dbsc
+                    crit_ids = ids[period, pidx][
+                        act2d & critical[period, pidx]]
+                    lsb_wanted = set(int(e) for e in np.unique(crit_ids))
+
                 # token count per expert (for compute cost)
                 tok_per_e = np.bincount(flat_ids, minlength=self.n_experts)
-                for e in np.nonzero(msb_needed[period, pidx])[0]:
+                missed_expert = np.zeros(self.n_experts, bool)
+                for e in msb_demand:
                     e = int(e)
                     key = SliceKey(lidx, e, "msb")
                     nb = self.store.slice_bytes(key)
@@ -283,10 +401,12 @@ class SliceMoEEngine:
                     accesses += 1
                     if not hit:
                         misses += 1
+                        missed_expert[e] = True
                         self.ledger.miss_fill(nb)
                     self.ledger.dram_read(nb)
-                    wants_lsb = bool(lsb_needed[period, pidx, e]) \
+                    wants_lsb = e in lsb_wanted \
                         and not self.ecfg.fused_slices
+                    lsb_available = False
                     if wants_lsb:
                         lkey = SliceKey(lidx, e, "lsb")
                         lnb = self.store.slice_bytes(lkey)
@@ -296,20 +416,107 @@ class SliceMoEEngine:
                         accesses += 1
                         if not lhit:
                             misses += 1
+                            missed_expert[e] = True
                             if self.ecfg.policy.fetch_lsb_on_miss:
                                 self.ledger.miss_fill(lnb)
                         if lhit or self.ecfg.policy.fetch_lsb_on_miss:
                             self.ledger.dram_read(lnb)
-                    bits = mat.high_bits if bool(use_lsb[period, pidx, e]) \
-                        else mat.low_bits
-                    if self.ecfg.fused_slices:
+                            lsb_available = True
+                    # Bit-width from the *slot-masked* demand (padding
+                    # slots must not promote an expert to high-bit in the
+                    # cost model; the jit-side use_lsb can't distinguish).
+                    if self.ecfg.fused_slices or mode == "highbit":
                         bits = mat.high_bits
+                    elif mode in ("lowbit", "amat_static"):
+                        bits = mat.low_bits
+                    else:   # dbsc: high-bit iff both slices were fetched
+                        bits = mat.high_bits if lsb_available \
+                            else mat.low_bits
                     self.ledger.matmul(
                         int(tok_per_e[e]), self.cfg.d_model,
                         self.expert_macs_per_token // self.cfg.d_model,
                         bits)
-        # Non-expert resident weights: one pass per decode step.
+                # Per-slot miss attribution: a slot is charged for every
+                # selection that landed on an expert whose slice(s) missed
+                # this layer-step.
+                for b in np.nonzero(slot_mask)[0]:
+                    sel = ids[period, pidx][b][active[period, pidx][b]]
+                    slot_accesses[b] += sel.size
+                    slot_misses[b] += int(missed_expert[sel].sum())
+        # Non-expert resident weights: one pass per decode step, amortized
+        # over every active sequence in the batch.
+        n_active_tokens = int(slot_mask.sum())
         self.ledger.dram_read(self.resident_bytes)
-        self.ledger.matmul(ids.shape[-2], self.cfg.d_model,
+        self.ledger.matmul(max(n_active_tokens, 1), self.cfg.d_model,
                            int(self.resident_bytes / self.cfg.d_model) + 1, 8)
-        return misses / max(accesses, 1)
+        return StepCharge(
+            miss_rate=misses / max(accesses, 1),
+            accesses=accesses,
+            misses=misses,
+            per_slot_miss=slot_misses / np.maximum(slot_accesses, 1),
+            ledger_delta=self.ledger.delta_since(base),
+        )
+
+
+class SliceMoEEngine(PersistentEngine):
+    """Single-request convenience API (the paper's Fig. 1a deployment).
+
+    Adds exactly one request's worth of per-request state — ``kv_cache``,
+    the step counter and the controller ``alpha`` — on top of the shared
+    :class:`PersistentEngine`.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: dict, ecfg: EngineConfig):
+        super().__init__(cfg, params, ecfg)
+        self.controller = self.new_controller()
+        self.alpha = 0.0
+
+    # ------------------------------------------------------------- prefill
+    def prefill(self, tokens: jax.Array, **model_kwargs):
+        """Run prefill; simulate layer-streaming cache fills; apply warmup."""
+        logits, self.kv_cache, info = self.run_prefill(
+            tokens, **model_kwargs)
+        self.warmup_summary = info["warmup"]
+        self.prefill_snapshot = info["snapshot"]
+        return logits
+
+    # -------------------------------------------------------------- decode
+    def decode(self, first_token: jax.Array, n_steps: int,
+               **model_kwargs):
+        """Greedy decode ``n_steps`` tokens with full offload simulation.
+
+        Returns (tokens [B, n_steps], metrics dict).
+        """
+        token = first_token
+        tokens_out = []
+        step_metrics = []
+
+        for step in range(n_steps):
+            ps = self._policy_state()
+            logits, self.kv_cache, aux = self._jit_decode(
+                self.qparams, token=token, cache=self.kv_cache,
+                policy_state=ps, alpha=jnp.float32(self.alpha),
+                **model_kwargs)
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tokens_out.append(token)
+
+            charge = self.charge_decode_step(aux)
+            step_miss = charge.miss_rate
+            if self.controller is not None:
+                self.alpha = self.controller.update(step_miss)
+            step_metrics.append({
+                "miss_rate": step_miss,
+                "alpha": self.alpha,
+                **charge.ledger_delta,
+            })
+
+        metrics = {
+            "per_step": step_metrics,
+            "cache_stats": self.cache.stats.snapshot(),
+            "decode_totals": self.ledger.delta_since(self.prefill_snapshot),
+        }
+        return jnp.stack(tokens_out, axis=1), metrics
+
+    def _charge_step(self, aux) -> float:
+        """Back-compat shim: replay one step, return the fleet miss rate."""
+        return self.charge_decode_step(aux).miss_rate

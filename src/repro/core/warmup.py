@@ -54,6 +54,17 @@ class HotnessTracker:
         self.counts *= self.decay
         self.gate_mass *= self.decay
 
+    def begin_request(self, decay: float = 0.5) -> None:
+        """Age accumulated hotness at a request boundary.
+
+        The persistent engine keeps one tracker across requests so PCW can
+        reshape from *accumulated* traffic rather than only the current
+        prompt's prefill; the boundary decay keeps old requests from
+        permanently pinning the ranking when the workload mix drifts.
+        """
+        self.counts *= decay
+        self.gate_mass *= decay
+
     def hotness(self) -> np.ndarray:
         """[L, E] combined score: frequency + gate mass."""
         c = self.counts / max(self.counts.max(), 1e-9)

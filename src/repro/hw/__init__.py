@@ -1,0 +1,1 @@
+"""Hardware cost models (system specs, energy/latency ledger)."""

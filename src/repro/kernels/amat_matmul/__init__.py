@@ -1,0 +1,1 @@
+"""AMAT bit-sliced matmul Pallas kernel."""

@@ -1,0 +1,1 @@
+"""Batched expert matmul Pallas kernel."""

@@ -1,0 +1,1 @@
+"""Flash attention Pallas kernel."""

@@ -1,0 +1,1 @@
+"""Launch layer: meshes, sharding, train/serve drivers, dry-runs."""

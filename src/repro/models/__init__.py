@@ -1,0 +1,1 @@
+"""Model stack: layers, MoE, SSM, unified multi-arch model."""

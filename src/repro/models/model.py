@@ -206,7 +206,7 @@ def _cross_attn_block(p: dict, x: jax.Array, enc_k: jax.Array,
 
 def _ffn_block(p: dict, x: jax.Array, cfg: ModelConfig, spec: BlockSpec, *,
                collect, use_lsb=None, gate_override=None,
-               policy=None, policy_state=None, mat=None):
+               policy=None, policy_state=None, mat=None, token_mask=None):
     aux = None
     if spec.ffn == "dense":
         h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
@@ -217,7 +217,8 @@ def _ffn_block(p: dict, x: jax.Array, cfg: ModelConfig, spec: BlockSpec, *,
         y, aux = M.moe_apply(
             p["moe"], h.reshape(-1, d), cfg.moe,
             use_lsb=use_lsb, gate_override=gate_override,
-            policy=policy, policy_state=policy_state, mat=mat)
+            policy=policy, policy_state=policy_state, mat=mat,
+            token_mask=token_mask)
         x = x + y.reshape(b, s, d)
         if not collect:
             aux = {"aux_loss": aux["aux_loss"],
@@ -537,6 +538,7 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 policy_state: Optional[dict] = None,
                 alpha=None,
                 mat=None,
+                token_mask: Optional[jax.Array] = None,
                 use_window: bool = False):
     """One decode step.  token: [B] int32.  Returns (logits, cache, aux).
 
@@ -547,12 +549,24 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
       policy_state[f"pos{i}"]   : {'cached_msb'/'cached_lsb': [n_periods, E]}
     ``policy`` is a static RoutingPolicy; ``alpha`` a dynamic scalar
     (Cache-Prior boost) broadcast to every MoE layer; ``mat`` the AMAT
-    MatConfig when expert weights are quantized.
+    MatConfig when expert weights are quantized.  ``token_mask`` ([B]
+    bool) excludes padding rows from MoE routing/capacity (see
+    :func:`repro.models.moe.moe_apply`).
+
+    ``cache["pos"]`` may be a scalar (all sequences aligned — the original
+    single-request path) or a ``[B]`` vector of per-sequence lengths (the
+    continuous-batching path, where each slot was prefilled at a different
+    time).  With vector positions every sequence writes its KV row at its
+    own offset and attends over its own valid prefix.
     """
     b = token.shape[0]
     pos = cache["pos"]
+    vector_pos = getattr(pos, "ndim", 0) == 1      # per-sequence positions
     x = params["embed"][token].astype(_dt(cfg))[:, None, :]   # [B, 1, d]
-    positions = jnp.full((1, 1), pos, jnp.int32)
+    if vector_pos:
+        positions = pos[:, None].astype(jnp.int32)            # [B, 1]
+    else:
+        positions = jnp.full((1, 1), pos, jnp.int32)
     window = cfg.sliding_window if (use_window or cfg.always_swa) else None
     pattern = cfg.block_pattern
 
@@ -572,35 +586,44 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 S_alloc = cache_in[key]["k"].shape[1]
                 ring = cfg.ring_kv
                 pos_w = (pos % S_alloc) if ring else pos
+
+                def write_row(buf, val):
+                    # val: [B, 1, ...] — the new token's row per sequence.
+                    if vector_pos:
+                        return buf.at[jnp.arange(b), pos_w].set(
+                            val[:, 0].astype(buf.dtype))
+                    start = (0, pos_w) + (0,) * (buf.ndim - 2)
+                    return jax.lax.dynamic_update_slice(
+                        buf, val.astype(buf.dtype), start)
+
                 if cfg.kv_dtype == "int8":
                     kq, ks = _quant_kv(k)
                     vq, vs = _quant_kv(v)
-                    kc = jax.lax.dynamic_update_slice(
-                        cache_in[key]["k"], kq, (0, pos_w, 0, 0))
-                    vc = jax.lax.dynamic_update_slice(
-                        cache_in[key]["v"], vq, (0, pos_w, 0, 0))
-                    ksc = jax.lax.dynamic_update_slice(
-                        cache_in[key]["k_scale"], ks, (0, pos_w, 0))
-                    vsc = jax.lax.dynamic_update_slice(
-                        cache_in[key]["v_scale"], vs, (0, pos_w, 0))
+                    kc = write_row(cache_in[key]["k"], kq)
+                    vc = write_row(cache_in[key]["v"], vq)
+                    ksc = write_row(cache_in[key]["k_scale"], ks)
+                    vsc = write_row(cache_in[key]["v_scale"], vs)
                     entry = {"k": kc, "v": vc, "k_scale": ksc,
                              "v_scale": vsc}
                 else:
-                    kc = jax.lax.dynamic_update_slice(
-                        cache_in[key]["k"],
-                        k.astype(cache_in[key]["k"].dtype),
-                        (0, pos_w, 0, 0))
-                    vc = jax.lax.dynamic_update_slice(
-                        cache_in[key]["v"],
-                        v.astype(cache_in[key]["v"].dtype),
-                        (0, pos_w, 0, 0))
+                    kc = write_row(cache_in[key]["k"], k)
+                    vc = write_row(cache_in[key]["v"], v)
                     ksc = vsc = None
                     entry = {"k": kc, "v": vc}
 
                 # Sliding-window decode reads only the last `window` cache
                 # rows (true O(window) traffic, not a masked full read).
                 S_cache = kc.shape[1]
-                if ring:
+                if vector_pos:
+                    # Per-sequence lengths: rows diverge, so the compact
+                    # dynamic-slice read doesn't apply — read the full
+                    # cache and let the per-row mask in decode_attention
+                    # bound each sequence's valid prefix (and window).
+                    k_r, v_r = kc, vc
+                    ks_r, vs_r = ksc, vsc
+                    cur = jnp.minimum(pos + 1, S_cache) if ring else pos + 1
+                    win_mask = None if ring else window
+                elif ring:
                     # ring buffer: every resident row is within the window;
                     # attention is permutation-invariant so wraparound
                     # order doesn't matter.
@@ -657,7 +680,8 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 ps["alpha"] = alpha
             x, aux = _ffn_block(p, x, cfg, spec, collect=collect_trace,
                                 use_lsb=ul, gate_override=go,
-                                policy=policy, policy_state=ps, mat=mat)
+                                policy=policy, policy_state=ps, mat=mat,
+                                token_mask=token_mask)
             if aux is not None:
                 auxes.append(aux)
         stacked = {}

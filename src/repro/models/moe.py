@@ -194,6 +194,7 @@ def moe_apply(
     policy: Optional[RoutingPolicy] = None,
     policy_state: Optional[dict] = None,   # {'alpha': (), 'cached_msb': [E],
                                            #  'cached_lsb': [E]}
+    token_mask: Optional[jax.Array] = None,  # [T] bool; False = padding row
     deterministic: bool = True,
     rng: Optional[jax.Array] = None,
 ):
@@ -204,13 +205,31 @@ def moe_apply(
       experts:  {'wi': [E, d, F(|2F)] float}  OR
                 {'wi_q': QuantizedTensor, 'wo_q': QuantizedTensor}
       shared:   optional dense-MLP params applied to every token
+
+    ``token_mask`` excludes padding rows (retired/empty batch slots in
+    continuous-batching decode) from routing entirely: their ids are
+    redirected out of range so they occupy no expert capacity, never
+    appear in the slice-demand trace, and cannot evict a live token's
+    expert assignment under the capacity limit.
     """
     T, d = x.shape
     probs = router_probs(x, params["w_router"])
     active = None
     critical = None
+
+    def mask_routing(gates, ids, active):
+        if token_mask is None:
+            return gates, ids, active
+        tm = token_mask.astype(bool)
+        ids = jnp.where(tm[:, None], ids, cfg.n_experts)   # out-of-range
+        gates = gates * tm[:, None].astype(gates.dtype)
+        active = jnp.broadcast_to(tm[:, None], ids.shape) \
+            if active is None else (active & tm[:, None])
+        return gates, ids, active
+
     if gate_override is not None:
         gates, ids = gate_override
+        gates, ids, active = mask_routing(gates, ids, active)
         k_eff = ids.shape[-1]
     elif policy is not None:
         from repro.core import routing as R
@@ -229,6 +248,7 @@ def moe_apply(
                 probs, policy.cumsum_tau, kmax)
         else:
             gates, ids = R.topk_routing(probs, cfg.top_k)
+        gates, ids, active = mask_routing(gates, ids, active)
         gates = gates.astype(x.dtype)
         k_eff = ids.shape[-1]
 
@@ -258,6 +278,7 @@ def moe_apply(
                 rng, probs.shape, minval=1.0 - cfg.router_noise,
                 maxval=1.0 + cfg.router_noise)
         gates, ids = topk_select(p, cfg.top_k)
+        gates, ids, active = mask_routing(gates, ids, active)
         gates = gates.astype(x.dtype)
         k_eff = cfg.top_k
 

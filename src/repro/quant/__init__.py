@@ -1,0 +1,1 @@
+"""Group quantization primitives."""

@@ -1,0 +1,26 @@
+"""Serving subsystem: continuous batching over a persistent SliceMoE engine.
+
+Layers:
+  * :mod:`repro.serving.scheduler` — admission control + continuous
+    batching (slot packing, interleaved prefill, per-sequence retirement)
+  * :mod:`repro.serving.workloads` — deterministic traffic generation
+    (Poisson / bursty / closed-loop, multi-tenant mixes)
+  * :mod:`repro.serving.telemetry` — per-request records, fleet
+    percentiles, energy/token, warm-vs-cold miss curves
+  * :mod:`repro.serving.server` — the seed's single-batch API, kept as a
+    compatibility wrapper over the scheduler
+"""
+
+from repro.serving.scheduler import (Completion, ContinuousBatchingScheduler,
+                                     Request, SchedulerConfig)
+from repro.serving.server import PlainEngine, SliceMoEServer
+from repro.serving.telemetry import FleetTelemetry, percentile
+from repro.serving.workloads import (LengthDist, TenantSpec, TimedRequest,
+                                     WorkloadConfig, generate, scenario)
+
+__all__ = [
+    "Completion", "ContinuousBatchingScheduler", "Request",
+    "SchedulerConfig", "PlainEngine", "SliceMoEServer", "FleetTelemetry",
+    "percentile", "LengthDist", "TenantSpec", "TimedRequest",
+    "WorkloadConfig", "generate", "scenario",
+]

@@ -1,0 +1,307 @@
+"""Continuous-batching scheduler over a persistent SliceMoE engine.
+
+Replaces the seed's one-request-at-a-time loop: requests are admitted
+into a fixed pool of ``max_batch`` decode *slots*, prefills interleave
+with batched decode steps over all active slots, and sequences retire
+individually on EOS or their token budget (their slot is immediately
+refillable).  The engine — and with it the slice cache, the hotness
+tracker and the cost ledger — persists across every request the
+scheduler serves, so steady-state traffic runs against a *warm* cache.
+
+Scheduling loop (one ``step()``):
+
+  1. **Admission** — while a slot is free and the queue's head has
+     arrived (simulated clock), pop it, run its prefill against the warm
+     cache, and scatter its KV cache into the free slot.  Queue depth is
+     bounded by ``max_queue``; submissions beyond it are rejected.
+  2. **Batched decode** — one jitted ``decode_step`` over all
+     ``max_batch`` slots with per-sequence positions; padding slots are
+     masked out of cost accounting.
+  3. **Retirement** — per-sequence EOS / length check; finished slots
+     free up for the next admission.
+
+The simulated clock is the cost ledger's accumulated latency, so
+admission timing, TTFT and throughput are deterministic functions of the
+workload and the modeled hardware — not of host jit times.
+
+Per-request state (KV slot, step count, miss-rate-controller ``alpha``)
+lives in :class:`ActiveSeq`; the batched call uses the mean alpha of the
+active sequences (slots share one routing boost per step, a deliberate
+simplification documented in docs/serving.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import PersistentEngine
+from repro.serving.telemetry import (FleetTelemetry, RequestRecord,
+                                     StepRecord)
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 32
+    eos_token: Optional[int] = None
+    arrival_time: float = 0.0     # simulated seconds
+    tenant: str = "default"
+
+
+@dataclasses.dataclass
+class Completion:
+    request_id: int
+    tokens: np.ndarray
+    prefill_s: float              # wall seconds (host)
+    decode_s: float
+    metrics: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_batch: int = 4
+    max_queue: int = 64
+    # Truncate prompts down to a multiple of this many tokens (0 = exact
+    # lengths).  Bounds the number of distinct prefill jit traces under
+    # length-diverse workloads.
+    bucket_prompts: int = 0
+
+
+@dataclasses.dataclass
+class ActiveSeq:
+    """Per-request state pinned to one decode slot."""
+
+    slot: int
+    request: Request
+    record: RequestRecord
+    controller: object                 # MissRateController | None
+    alpha: float = 0.0
+    last_token: int = 0
+    generated: List[int] = dataclasses.field(default_factory=list)
+    ledger_base: Optional[dict] = None # snapshot at decode start
+    wall_prefill_s: float = 0.0
+    wall_decode_t0: float = 0.0
+
+
+class ContinuousBatchingScheduler:
+    """Admission control + continuous batching over a PersistentEngine."""
+
+    def __init__(self, engine: PersistentEngine,
+                 cfg: Optional[SchedulerConfig] = None):
+        self.engine = engine
+        self.cfg = cfg or SchedulerConfig()
+        if self.cfg.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[ActiveSeq]] = \
+            [None] * self.cfg.max_batch
+        self.batch_cache = engine.init_batch_cache(self.cfg.max_batch)
+        self.telemetry = FleetTelemetry()
+        self.completions: List[Completion] = []
+        self.sim_time = 0.0
+        self._ledger_mark = engine.ledger.total_latency_s
+
+    # --------------------------------------------------------------- intake
+    def servable(self, req: Request) -> bool:
+        """Whether the request's token budget fits under the KV budget."""
+        return 1 <= req.max_new_tokens < self.engine.ecfg.max_seq - 1
+
+    def submit(self, req: Request) -> bool:
+        """Admission control: reject queue overflow and unservable sizes.
+
+        Rejecting here (rather than raising mid-run) keeps one bad
+        request from aborting every in-flight sequence.
+        """
+        record = RequestRecord(
+            request_id=req.request_id,
+            tenant=getattr(req, "tenant", "default"),
+            prompt_len=len(req.prompt),
+            arrival_t=getattr(req, "arrival_time", 0.0))
+        if len(self.queue) >= self.cfg.max_queue or not self.servable(req):
+            self.telemetry.on_reject(record)
+            return False
+        self.telemetry.on_submit(record)
+        self.queue.append(req)
+        return True
+
+    # ---------------------------------------------------------------- clock
+    def _advance_clock(self) -> float:
+        """Fold new ledger latency into the simulated clock; return delta."""
+        now = self.engine.ledger.total_latency_s
+        delta = now - self._ledger_mark
+        self._ledger_mark = now
+        self.sim_time += delta
+        return delta
+
+    # ------------------------------------------------------------ admission
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def n_active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def _clip_prompt(self, req: Request) -> np.ndarray:
+        """Fit the prompt under the KV budget (keeping its tail).
+
+        Truncation is recorded on the request's telemetry record and in
+        its completion metrics — the output for a clipped request is not
+        the output for the full prompt.
+        """
+        prompt = np.asarray(req.prompt, np.int32)
+        budget = self.engine.ecfg.max_seq - req.max_new_tokens - 1
+        if budget < 1:
+            raise ValueError(
+                f"request {req.request_id}: max_new_tokens="
+                f"{req.max_new_tokens} leaves no room for a prompt under "
+                f"max_seq={self.engine.ecfg.max_seq}")
+        if len(prompt) > budget:
+            prompt = prompt[-budget:]
+        q = self.cfg.bucket_prompts
+        if q > 1 and len(prompt) > q:
+            # Round down to a multiple of q, keeping the most recent
+            # tokens (same tail-keep rule as the budget clip above).
+            prompt = prompt[-(len(prompt) // q) * q:]
+        if len(prompt) != len(req.prompt):
+            self.telemetry.requests[req.request_id].truncated = True
+        return prompt
+
+    def _admit_one(self, req: Request, slot: int) -> None:
+        record = self.telemetry.requests[req.request_id]
+        record.admit_t = self.sim_time
+        t0 = time.perf_counter()
+        prompt = self._clip_prompt(req)
+        # Per-request stats epochs are only meaningful when requests run
+        # one at a time; under batching, concurrent sequences would bleed
+        # into whichever epoch was opened last, mislabeling their misses.
+        # Fleet-level numbers come from telemetry either way.
+        label = f"req{req.request_id}" if self.cfg.max_batch == 1 else None
+        logits, kv_cache, _info = self.engine.run_prefill(
+            jnp.asarray(prompt)[None], label=label,
+            inflight=self.n_active())
+        wall = time.perf_counter() - t0
+        self._advance_clock()
+
+        seq = ActiveSeq(
+            slot=slot, request=req, record=record,
+            controller=self.engine.new_controller(),
+            last_token=int(jnp.argmax(logits, -1)[0]),
+            ledger_base=self.engine.ledger.snapshot(),
+            wall_prefill_s=wall,
+            wall_decode_t0=time.perf_counter())
+        self.batch_cache = self.engine.install_slot(
+            self.batch_cache, kv_cache, slot)
+        self.slots[slot] = seq
+
+    def _admit(self) -> int:
+        admitted = 0
+        free = self._free_slots()
+        while free and self.queue:
+            req = self.queue[0]
+            arrival = getattr(req, "arrival_time", 0.0)
+            if arrival > self.sim_time:
+                if self.n_active() == 0 and admitted == 0:
+                    # fleet idle: fast-forward to the next arrival
+                    self.sim_time = arrival
+                else:
+                    break
+            self.queue.popleft()
+            self._admit_one(req, free.pop(0))
+            admitted += 1
+        return admitted
+
+    # --------------------------------------------------------------- decode
+    def _decode_step(self) -> None:
+        active = [s for s in self.slots if s is not None]
+        if not active:
+            return
+        tokens = np.zeros(self.cfg.max_batch, np.int32)
+        slot_mask = np.zeros(self.cfg.max_batch, bool)
+        for seq in active:
+            tokens[seq.slot] = seq.last_token
+            slot_mask[seq.slot] = True
+        alphas = [seq.alpha for seq in active]
+        alpha = float(np.mean(alphas)) if alphas else 0.0
+
+        logits, self.batch_cache, charge = self.engine.decode_batch(
+            jnp.asarray(tokens), self.batch_cache,
+            alpha=alpha, slot_active=slot_mask)
+        next_tokens = np.asarray(
+            jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        step_latency = self._advance_clock()
+        self.telemetry.on_step(StepRecord(
+            t=self.sim_time, n_active=len(active),
+            miss_rate=charge.miss_rate, latency_s=step_latency,
+            energy_j=charge.ledger_delta["total_energy_j"]))
+
+        for seq in active:
+            tok = int(next_tokens[seq.slot])
+            seq.generated.append(tok)
+            seq.last_token = tok
+            if len(seq.generated) == 1:
+                seq.record.first_token_t = self.sim_time
+            seq.record.n_generated = len(seq.generated)
+            slot_miss = float(charge.per_slot_miss[seq.slot])
+            seq.record.miss_sum += slot_miss
+            seq.record.miss_steps += 1
+            if seq.controller is not None:
+                seq.alpha = seq.controller.update(slot_miss)
+            done = len(seq.generated) >= seq.request.max_new_tokens or \
+                (seq.request.eos_token is not None
+                 and tok == seq.request.eos_token)
+            if done:
+                self._retire(seq)
+
+    def _retire(self, seq: ActiveSeq) -> None:
+        seq.record.finish_t = self.sim_time
+        # Retirement fires on the step that produced EOS, so the token
+        # list never holds tokens past it — no truncation scan needed.
+        toks = np.asarray(seq.generated, np.int32)
+        self.completions.append(Completion(
+            request_id=seq.request.request_id,
+            tokens=toks,
+            prefill_s=seq.wall_prefill_s,
+            decode_s=time.perf_counter() - seq.wall_decode_t0,
+            metrics={
+                "ttft_s": seq.record.ttft,
+                "queue_delay_s": seq.record.queue_delay,
+                "mean_miss_rate": seq.record.mean_miss_rate,
+                "alpha_final": seq.alpha,
+                "prompt_truncated": seq.record.truncated,
+                # Exact for max_batch=1; overlaps concurrent requests
+                # otherwise (fleet totals live in telemetry.summary()).
+                "decode_totals": self.engine.ledger.delta_since(
+                    seq.ledger_base),
+                "cache_stats": self.engine.cache.stats.snapshot(),
+                # ^ likewise: the current stats window, per-request only
+                #   when requests run one at a time.
+            }))
+        self.slots[seq.slot] = None
+        self.batch_cache = self.engine.clear_slot(
+            self.batch_cache, seq.slot)
+
+    # ------------------------------------------------------------------ run
+    def step(self) -> bool:
+        """One scheduler tick.  Returns False when fully idle."""
+        self._admit()
+        if self.n_active() == 0:
+            return bool(self.queue)
+        self._decode_step()
+        return True
+
+    def run(self) -> List[Completion]:
+        """Drive until the queue drains and every sequence retires."""
+        while self.step():
+            pass
+        self.engine.cache.end_epoch()   # flush the last request's window
+        return self.completions
+
+    def summary(self, **kw) -> dict:
+        return self.telemetry.summary(
+            total_energy_j=self.engine.ledger.total_energy_j, **kw)

@@ -1,11 +1,14 @@
-"""Single-batch serving loop (the paper's deployment scenario, Fig. 1a).
+"""Single-batch serving API (the paper's deployment scenario, Fig. 1a).
 
-On-device MoE serving processes one request at a time: prefill the prompt
-(layer-parallel, streams experts from Flash), then decode token-by-token
-under the miss-rate constraint.  This server wraps
-:class:`~repro.core.engine.SliceMoEEngine` with a request queue, per-request
-metrics and an end-of-sequence check, and is the driver behind
-``examples/serve_slicemoe.py``.
+:class:`SliceMoEServer` keeps the seed's submit/run interface but is now
+a thin compatibility wrapper over the continuous-batching scheduler in
+:mod:`repro.serving.scheduler`, run with ``max_batch=1``: requests drain
+FIFO from a :class:`collections.deque` (the seed's ``list.pop(0)`` was
+O(n²) under load), one at a time, through a *persistent* engine — so
+unlike the seed, the slice cache and hotness statistics stay warm across
+requests.  Pass ``persistent=False`` to restore the seed's
+fresh-engine-per-request behavior (the cold baseline the serving
+benchmark measures against).
 
 For *non-MoE* architectures (dense/ssm/vlm/audio) a plain engine runs the
 same prefill/decode without the expert cache simulation — SliceMoE's
@@ -17,33 +20,21 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from functools import partial
-from typing import List, Optional
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.engine import EngineConfig, SliceMoEEngine
+from repro.core.engine import EngineConfig, PersistentEngine, SliceMoEEngine
 from repro.models import model as MDL
+from repro.serving.scheduler import (Completion, ContinuousBatchingScheduler,
+                                     Request, SchedulerConfig)
 
-
-@dataclasses.dataclass
-class Request:
-    request_id: int
-    prompt: np.ndarray            # [S] int32
-    max_new_tokens: int = 32
-    eos_token: Optional[int] = None
-
-
-@dataclasses.dataclass
-class Completion:
-    request_id: int
-    tokens: np.ndarray
-    prefill_s: float
-    decode_s: float
-    metrics: Optional[dict] = None
+__all__ = ["Request", "Completion", "PlainEngine", "SliceMoEServer"]
 
 
 class PlainEngine:
@@ -76,28 +67,58 @@ class PlainEngine:
 class SliceMoEServer:
     def __init__(self, cfg: ModelConfig, params: dict,
                  engine_cfg: Optional[EngineConfig] = None,
-                 max_seq: int = 256):
+                 max_seq: int = 256, *, persistent: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.engine_cfg = engine_cfg
-        self.queue: List[Request] = []
+        self.persistent = persistent
+        self.queue: Deque[Request] = deque()
         self.completions: List[Completion] = []
+        self._engine: Optional[PersistentEngine] = None
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def _moe_serving(self) -> bool:
+        return self.cfg.has_moe and self.engine_cfg is not None
+
     def _fresh_engine(self):
-        if self.cfg.has_moe and self.engine_cfg is not None:
+        if self._moe_serving():
             ecfg = dataclasses.replace(self.engine_cfg,
                                        max_seq=self.max_seq)
             return SliceMoEEngine(self.cfg, self.params, ecfg)
         return PlainEngine(self.cfg, self.params, self.max_seq)
 
+    def _shared_engine(self) -> PersistentEngine:
+        if self._engine is None:
+            ecfg = dataclasses.replace(self.engine_cfg,
+                                       max_seq=self.max_seq)
+            self._engine = PersistentEngine(self.cfg, self.params, ecfg)
+        return self._engine
+
     def run(self) -> List[Completion]:
-        """Drain the queue, one request at a time (single-batch)."""
+        """Drain the queue FIFO, one request at a time (single-batch)."""
+        if self._moe_serving() and self.persistent:
+            sched = ContinuousBatchingScheduler(
+                self._shared_engine(),
+                SchedulerConfig(max_batch=1, max_queue=len(self.queue) + 1))
+            # Validate the whole queue before draining any of it: raising
+            # mid-drain would strand already-dequeued requests.
+            bad = [r for r in self.queue if not sched.servable(r)]
+            if bad:
+                raise ValueError(
+                    "unservable request(s) "
+                    f"{[r.request_id for r in bad]}: max_new_tokens must "
+                    f"satisfy 1 <= n < max_seq-1 (max_seq={self.max_seq})")
+            while self.queue:
+                sched.submit(self.queue.popleft())
+            self.completions.extend(sched.run())
+            return self.completions
+        # Cold path: a fresh engine per request (the seed baseline), or a
+        # plain engine for non-MoE archs.
         while self.queue:
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             engine = self._fresh_engine()
             t0 = time.perf_counter()
             if isinstance(engine, SliceMoEEngine):

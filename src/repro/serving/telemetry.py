@@ -1,0 +1,179 @@
+"""Serving telemetry: per-request records and fleet aggregates.
+
+Two clocks run through the serving subsystem:
+
+* **simulated time** — the deterministic latency accumulated by the
+  :class:`~repro.hw.energy.CostLedger` (Flash fills, DRAM reads, XPU
+  matmuls on the modeled SoC).  All latency/throughput numbers the
+  benchmarks report are in this clock, so results are reproducible on
+  any host.
+* **wall time** — host-side ``perf_counter`` spans, reported separately
+  (jit compiles dominate it on small configs; it is *not* the paper
+  metric).
+
+Percentiles use the nearest-rank definition (ceil(p/100 * N)-th smallest)
+— deterministic, no interpolation, exact for small N.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+
+def percentile(values: List[float], p: float) -> float:
+    """Nearest-rank percentile; p in [0, 100].  Empty input -> nan."""
+    if not values:
+        return float("nan")
+    if not 0 <= p <= 100:
+        raise ValueError(f"percentile {p} out of range")
+    ordered = sorted(values)
+    if p == 0:
+        return float(ordered[0])
+    rank = math.ceil(p / 100.0 * len(ordered))
+    return float(ordered[rank - 1])
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Lifecycle timestamps (simulated clock) and counters for one request."""
+
+    request_id: int
+    tenant: str = "default"
+    prompt_len: int = 0
+    arrival_t: float = 0.0
+    admit_t: float = 0.0            # prefill started
+    first_token_t: float = 0.0      # first decode token produced
+    finish_t: float = 0.0
+    n_generated: int = 0
+    rejected: bool = False
+    truncated: bool = False         # prompt clipped to fit max_seq budget
+    miss_sum: float = 0.0           # per-step selection-weighted miss rates
+    miss_steps: int = 0
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_t - self.arrival_t
+
+    @property
+    def queue_delay(self) -> float:
+        return self.admit_t - self.arrival_t
+
+    @property
+    def decode_s(self) -> float:
+        return self.finish_t - self.first_token_t
+
+    @property
+    def per_token_s(self) -> float:
+        if self.n_generated <= 1:
+            return 0.0
+        return self.decode_s / (self.n_generated - 1)
+
+    @property
+    def mean_miss_rate(self) -> float:
+        return self.miss_sum / max(self.miss_steps, 1)
+
+
+@dataclasses.dataclass
+class StepRecord:
+    """One batched decode step: fleet-level counters."""
+
+    t: float                 # simulated time at end of step
+    n_active: int
+    miss_rate: float         # expert-level fleet miss rate this step
+    latency_s: float         # simulated step latency
+    energy_j: float
+
+
+class FleetTelemetry:
+    """Aggregates request + step records into the serving report."""
+
+    def __init__(self):
+        self.requests: Dict[int, RequestRecord] = {}
+        self.steps: List[StepRecord] = []
+        self.rejected: List[int] = []
+
+    # ------------------------------------------------------------ recording
+    def on_submit(self, record: RequestRecord) -> None:
+        self.requests[record.request_id] = record
+
+    def on_reject(self, record: RequestRecord) -> None:
+        record.rejected = True
+        self.requests[record.request_id] = record
+        self.rejected.append(record.request_id)
+
+    def on_step(self, record: StepRecord) -> None:
+        self.steps.append(record)
+
+    # ----------------------------------------------------------- aggregates
+    def completed(self) -> List[RequestRecord]:
+        return [r for r in self.requests.values()
+                if not r.rejected and r.n_generated > 0]
+
+    def miss_rate_curve(self) -> List[float]:
+        """Fleet miss rate per decode step, in execution order."""
+        return [s.miss_rate for s in self.steps]
+
+    def steady_state_miss_rate(self, skip_frac: float = 0.5) -> float:
+        """Mean fleet miss rate over the trailing (1-skip_frac) of steps."""
+        curve = self.miss_rate_curve()
+        if not curve:
+            return float("nan")
+        tail = curve[int(len(curve) * skip_frac):] or curve
+        return sum(tail) / len(tail)
+
+    def summary(self, *, total_energy_j: Optional[float] = None,
+                wall_s: Optional[float] = None) -> dict:
+        done = self.completed()
+        ttfts = [r.ttft for r in done]
+        per_tok = [r.per_token_s for r in done if r.n_generated > 1]
+        n_tokens = sum(r.n_generated for r in done)
+        sim_span = max((r.finish_t for r in done), default=0.0) - \
+            min((r.arrival_t for r in done), default=0.0)
+        out = {
+            "n_requests": len(done),
+            "n_rejected": len(self.rejected),
+            "n_tokens": n_tokens,
+            "sim_time_s": sim_span,
+            "throughput_tok_per_s": n_tokens / sim_span if sim_span > 0
+            else float("nan"),
+            "ttft_p50_s": percentile(ttfts, 50),
+            "ttft_p95_s": percentile(ttfts, 95),
+            "ttft_p99_s": percentile(ttfts, 99),
+            "per_token_p50_s": percentile(per_tok, 50),
+            "per_token_p95_s": percentile(per_tok, 95),
+            "queue_delay_p50_s": percentile(
+                [r.queue_delay for r in done], 50),
+            "mean_miss_rate": (
+                sum(r.mean_miss_rate for r in done) / len(done)
+                if done else float("nan")),
+            "steady_state_miss_rate": self.steady_state_miss_rate(),
+            "mean_batch_occupancy": (
+                sum(s.n_active for s in self.steps) / len(self.steps)
+                if self.steps else 0.0),
+        }
+        if total_energy_j is not None:
+            out["energy_per_token_j"] = (
+                total_energy_j / n_tokens if n_tokens else float("nan"))
+        if wall_s is not None:
+            out["wall_s"] = wall_s
+            out["wall_tok_per_s"] = n_tokens / wall_s if wall_s > 0 \
+                else float("nan")
+        per_tenant: Dict[str, int] = {}
+        for r in done:
+            per_tenant[r.tenant] = per_tenant.get(r.tenant, 0) \
+                + r.n_generated
+        if len(per_tenant) > 1:
+            out["tokens_per_tenant"] = per_tenant
+        return out
+
+
+def format_summary(s: dict, title: str = "serving summary") -> str:
+    lines = [f"--- {title} ---"]
+    for k, v in s.items():
+        if isinstance(v, float):
+            lines.append(f"  {k:>26}: {v:.6g}")
+        else:
+            lines.append(f"  {k:>26}: {v}")
+    return "\n".join(lines)

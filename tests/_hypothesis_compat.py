@@ -1,0 +1,155 @@
+"""Minimal ``hypothesis`` fallback for environments without the package.
+
+The tier-1 suite uses a small, well-behaved subset of hypothesis:
+``@settings(max_examples=N, deadline=None)`` stacked on ``@given(...)``
+with ``integers / floats / booleans / lists / tuples / sampled_from``
+strategies.  When the real package is importable, ``conftest.py`` never
+loads this module.  When it is not, this shim re-implements that subset
+as a fixed-seed sample loop: each example draws from a
+``numpy.random.Generator`` seeded by the example index, so runs are
+deterministic everywhere and failures are reproducible.
+
+This intentionally does NOT implement shrinking, ``assume``, stateful
+testing, or the database — the suite does not use them.  Environments
+with ``hypothesis`` installed (see requirements-dev.txt) get the real
+thing, including shrinking.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+# --------------------------------------------------------------------------
+# Strategies
+# --------------------------------------------------------------------------
+class SearchStrategy:
+    """A strategy is just a callable drawing one example from an rng."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(
+        lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example_from(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def tuples(*element_strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.example_from(rng) for s in element_strategies))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: strategies[int(rng.integers(0, len(strategies)))]
+        .example_from(rng))
+
+
+# --------------------------------------------------------------------------
+# given / settings
+# --------------------------------------------------------------------------
+def given(*pos_strategies, **kw_strategies):
+    """Run the test once per example with drawn arguments filled in.
+
+    Like real hypothesis, positional strategies bind to the *rightmost*
+    parameters of the test function, and the wrapper's signature hides
+    every strategy-provided parameter so pytest does not mistake them
+    for fixtures.
+    """
+
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        params = [p for p in sig.parameters.values()]
+        draw_map = dict(kw_strategies)
+        if pos_strategies:
+            free = [p.name for p in params if p.name not in draw_map]
+            for name, strat in zip(free[-len(pos_strategies):],
+                                   pos_strategies):
+                draw_map[name] = strat
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_compat_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = np.random.default_rng(0xC0FFEE + i)
+                drawn = {name: s.example_from(rng)
+                         for name, s in draw_map.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {drawn!r}") from exc
+
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in params if p.name not in draw_map])
+        wrapper._compat_max_examples = DEFAULT_MAX_EXAMPLES
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_kw):
+    """Record max_examples on a @given-wrapped test (deadline etc. ignored)."""
+
+    def decorate(fn):
+        if hasattr(fn, "_compat_max_examples"):
+            fn._compat_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def install() -> None:
+    """Register this shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "tuples", "just", "one_of", "SearchStrategy"):
+        setattr(st, name, globals()[name])
+
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -1,6 +1,18 @@
 """Shared fixtures.  NOTE: no XLA device-count flags here — tests must see
 the real single CPU device (the 512-device flag is dryrun.py-only)."""
 
+import os
+import sys
+
+# The real hypothesis package when available; otherwise the deterministic
+# seeded-sample shim so the suite collects and runs everywhere.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_compat
+    _hypothesis_compat.install()
+
 import jax
 import pytest
 
