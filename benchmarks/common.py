@@ -106,3 +106,19 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 def report(name: str, us_per_call: float, derived: str) -> None:
     """The required ``name,us_per_call,derived`` CSV line to stdout."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def json_record(name: str, payload: dict) -> str:
+    """Persist a benchmark's structured results as results/BENCH_<name>.json.
+
+    These files are the cross-PR perf baselines: the next session diffs
+    its numbers against them (see docs/architecture.md §benchmarks).
+    """
+    import json
+
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

@@ -1,17 +1,30 @@
 """Micro-benchmarks of the Pallas kernels (interpret mode on CPU — the
 numbers gauge the *reference path*; real VMEM-tiled timings need a TPU)
-plus the pure-jnp oracle for comparison."""
+plus the pure-jnp oracle for comparison.
+
+Also reports, per paper MAT config, the analytic HBM weight bytes moved
+by one expert-FFN step under **dense dequantization** (read codes, write
+the dense f32 tensor, read it back into the matmul) vs **quantized
+execution** (stream packed codes straight into the fused kernel) — the
+tentpole claim (>= 2x fewer bytes for MAT84, asserted) and the
+cross-PR baseline recorded in results/BENCH_kernels_micro.json."""
 
 from __future__ import annotations
 
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import CsvSink, report, time_call
-from repro.kernels.amat_matmul.ops import amat_matmul_qt
-from repro.kernels.amat_matmul.ref import amat_matmul_ref
+from benchmarks.common import CsvSink, json_record, report, time_call
+from repro.core.amat import PAPER_CONFIGS, amat_quantize
+from repro.kernels.amat_matmul.ops import (amat_expert_matmul_qt,
+                                           amat_matmul_qt)
+from repro.kernels.amat_matmul.ref import (amat_batched_matmul_ref,
+                                           amat_matmul_ref)
+from repro.hw.energy import expert_weight_step_bytes
 from repro.kernels.expert_matmul.ops import expert_matmul_qt
 from repro.kernels.expert_matmul.ref import expert_matmul_ref
 from repro.quant.groupquant import quantize
@@ -28,9 +41,10 @@ def main(quick: bool = False) -> None:
     qt = quantize(w, bits=8, group_size=32, asymmetric=True)
 
     us_k = time_call(lambda: amat_matmul_qt(x, qt, shift=4, mode="low"))
-    us_r = time_call(lambda: jax.jit(
-        lambda: amat_matmul_ref(x, qt.codes, qt.scales, qt.zero_points,
-                                group_size=32, shift=4, mode="low"))())
+    amat_ref_fn = jax.jit(partial(amat_matmul_ref, group_size=32, shift=4,
+                                  mode="low"))
+    us_r = time_call(lambda: amat_ref_fn(x, qt.codes, qt.scales,
+                                         qt.zero_points))
     sink.add("amat_matmul_pallas_interp", f"{M}x{K}x{N}", round(us_k, 1))
     sink.add("amat_matmul_ref_jit", f"{M}x{K}x{N}", round(us_r, 1))
 
@@ -40,18 +54,72 @@ def main(quick: bool = False) -> None:
     qte = quantize(we, bits=8, group_size=32, asymmetric=True)
     ul = jnp.arange(E) % 2 == 0
     us_e = time_call(lambda: expert_matmul_qt(xe, qte, ul, shift=4))
-    us_er = time_call(lambda: jax.jit(
-        lambda: expert_matmul_ref(xe, qte.codes, qte.scales,
-                                  qte.zero_points, ul, group_size=32,
-                                  shift=4))())
+    expert_ref_fn = jax.jit(partial(expert_matmul_ref, group_size=32,
+                                    shift=4))
+    us_er = time_call(lambda: expert_ref_fn(xe, qte.codes, qte.scales,
+                                            qte.zero_points, ul))
     sink.add("expert_matmul_pallas_interp", f"{E}x{C}x{K}x{N}",
              round(us_e, 1))
     sink.add("expert_matmul_ref_jit", f"{E}x{C}x{K}x{N}", round(us_er, 1))
 
+    # --- quantized execution vs dense dequant: the batched-expert kernel
+    # (scalar-prefetched per-expert use_lsb) against the materialize-
+    # then-einsum reference, plus analytic HBM weight-byte accounting.
+    us_b = us_br = 0.0
+    bytes_rows = {}
+    for mat in PAPER_CONFIGS:
+        qtm = amat_quantize(we, mat)
+        us_b = time_call(lambda q=qtm, m=mat: amat_expert_matmul_qt(
+            xe, q, ul, shift=m.shift))
+        # jit once, time only execution (a jit built inside the timed
+        # lambda would measure recompilation on every call)
+        ref_fn = jax.jit(partial(amat_batched_matmul_ref,
+                                 group_size=mat.group_size,
+                                 shift=mat.shift))
+        us_br = time_call(lambda q=qtm: ref_fn(
+            xe, q.codes, q.scales, q.zero_points, ul))
+        sink.add(f"amat_batched_pallas_interp[{mat.name}]",
+                 f"{E}x{C}x{K}x{N}", round(us_b, 1))
+        sink.add(f"amat_batched_dense_ref_jit[{mat.name}]",
+                 f"{E}x{C}x{K}x{N}", round(us_br, 1))
+
+        n_elems = float(np.prod(qtm.codes.shape))
+        n_groups = float(np.prod(qtm.scales.shape))
+        # dense_itemsize=4: the dense reference here materializes f32
+        dense_b = expert_weight_step_bytes(n_elems, n_groups,
+                                           quant_execution=False,
+                                           dense_itemsize=4)
+        quant_b = expert_weight_step_bytes(n_elems, n_groups,
+                                           quant_execution=True)
+        bytes_rows[mat.name] = {
+            "dense_dequant_bytes": dense_b,
+            "quant_execution_bytes": quant_b,
+            "reduction_x": dense_b / quant_b,
+            "pallas_interp_us": us_b,
+            "dense_ref_jit_us": us_br,
+        }
+        sink.add(f"weight_bytes_dense[{mat.name}]", f"{E}x{C}x{K}x{N}",
+                 round(dense_b, 1))
+        sink.add(f"weight_bytes_quant_exec[{mat.name}]", f"{E}x{C}x{K}x{N}",
+                 round(quant_b, 1))
+    # Pins the analytic traffic model's headline claim (the bytes are a
+    # model of the two execution paths, not a runtime measurement — a
+    # kernel regression shows up in the parity tests, not here).
+    assert bytes_rows["MAT84"]["reduction_x"] >= 2.0, bytes_rows["MAT84"]
+
     path = sink.flush()
+    json_record("kernels_micro", {
+        "shape": {"E": E, "C": C, "K": K, "N": N},
+        "dense_vs_quant_execution": bytes_rows,
+        "amat_matmul_us": us_k,
+        "expert_matmul_us": us_e,
+    })
     us = (time.perf_counter() - t0) * 1e6
     report("kernels_micro", us,
-           f"amat={us_k:.0f}us;expert={us_e:.0f}us;csv={path}")
+           f"amat={us_k:.0f}us;expert={us_e:.0f}us;"
+           f"batched={us_b:.0f}us;"
+           f"mat84_bytes_reduction="
+           f"{bytes_rows['MAT84']['reduction_x']:.1f}x;csv={path}")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,10 @@ Each benchmark runs in its own subprocess (XLA's CPU JIT keeps every
 compiled executable resident; a single process running all benches
 exhausts memory on the 1-core container).  ``--only`` executes one
 benchmark inline.  Prints one ``name,us_per_call,derived`` CSV line per
-benchmark; detailed CSVs land in results/bench/.
+benchmark; detailed CSVs land in results/bench/, and ``kernels_micro``
+/ ``serving_load`` additionally persist cross-PR perf baselines
+(dense-dequant vs quantized-execution weight bytes, step latency) as
+``results/BENCH_<name>.json``.
 """
 
 from __future__ import annotations
@@ -18,7 +21,8 @@ import sys
 import traceback
 
 BENCH_NAMES = ["table1_amat", "fig8_accuracy", "fig9_energy",
-               "fig10_warmup", "ablations", "roofline", "kernels_micro"]
+               "fig10_warmup", "ablations", "roofline", "kernels_micro",
+               "serving_load"]
 
 
 def _run_inline(name: str, quick: bool) -> None:

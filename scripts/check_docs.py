@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Docs checker: intra-repo links resolve + fenced doctests pass.
+
+Run from anywhere: ``python scripts/check_docs.py``.  Scans README.md
+and docs/*.md for
+
+1. markdown links ``[text](target)`` whose target is not an URL —
+   the target (anchor stripped) must exist relative to the file, and
+2. fenced ```` ```python ```` blocks containing ``>>>`` prompts —
+   executed with :mod:`doctest` in a fresh namespace (examples must be
+   stdlib-only so the docs CI job needs no heavy deps).
+
+Exits non-zero listing every broken link / failing example.  Used by
+the ``docs`` job in .github/workflows/ci.yml.
+"""
+
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def doc_files() -> list[Path]:
+    return [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+
+def check_links(path: Path) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:               # pure in-page anchor
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link -> "
+                          f"{target}")
+    return errors
+
+
+def check_doctests(path: Path) -> list[str]:
+    """Run every ``>>>`` fenced block in ``path``.
+
+    Blocks within one file share a namespace (a page reads top-to-bottom
+    like a session), so later blocks may use names defined earlier.
+    """
+    errors = []
+    parser = doctest.DocTestParser()
+    globs: dict = {}
+    for i, block in enumerate(FENCE_RE.findall(path.read_text())):
+        if ">>>" not in block:
+            continue
+        runner = doctest.DocTestRunner(verbose=False,
+                                       optionflags=doctest.ELLIPSIS)
+        test = parser.get_doctest(block, globs, f"{path.name}[block {i}]",
+                                  str(path), 0)
+        out: list[str] = []
+        runner.run(test, out=out.append, clear_globs=False)
+        globs.update(test.globs)
+        if runner.failures:
+            errors.append(f"{path.relative_to(ROOT)} block {i}:\n"
+                          + "".join(out))
+    return errors
+
+
+def main() -> int:
+    errors = []
+    n_links = n_tests = 0
+    for path in doc_files():
+        if not path.exists():
+            errors.append(f"missing doc file: {path.relative_to(ROOT)}")
+            continue
+        n_links += len(LINK_RE.findall(path.read_text()))
+        n_tests += sum(">>>" in b
+                       for b in FENCE_RE.findall(path.read_text()))
+        errors += check_links(path)
+        errors += check_doctests(path)
+    if errors:
+        print("\n".join(errors))
+        return 1
+    print(f"docs OK: {len(doc_files())} files, {n_links} links, "
+          f"{n_tests} doctest blocks")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -109,7 +109,8 @@ class PersistentEngine:
         self.cfg = cfg
         self.ecfg = ecfg
         self.qparams, self.store, self.layer_map = quantize_moe_params(
-            params, cfg, ecfg.mat)
+            params, cfg, ecfg.mat,
+            quant_execution=ecfg.policy.quant_execution)
         self.float_params = params
         self.n_moe_layers = len(self.layer_map)
         self.n_experts = cfg.moe.n_experts
@@ -143,12 +144,18 @@ class PersistentEngine:
                 self.buddies[f"pos{i}"] = jnp.stack(
                     [compute_buddies(flat[p]) for p in range(P)])
 
+        # Both jitted fns run the expert FFN on packed AMAT codes when
+        # the policy selects quantized execution (prefill carries no
+        # policy, so the flag is threaded explicitly; prefill computes
+        # every expert high-bit — use_lsb defaults to all-ones inside
+        # the kernel path).
+        qe = ecfg.policy.quant_execution
         self._jit_prefill = jax.jit(partial(
             MDL.prefill, cfg=cfg, max_seq=ecfg.max_seq, collect_trace=True,
-            mat=ecfg.mat))
+            mat=ecfg.mat, quant_execution=qe))
         self._jit_decode = jax.jit(partial(
             MDL.decode_step, cfg=cfg, collect_trace=True,
-            policy=ecfg.policy, mat=ecfg.mat))
+            policy=ecfg.policy, mat=ecfg.mat, quant_execution=qe))
 
         # Non-expert resident weight bytes touched per decode step (INT8
         # per the paper's G128 non-expert quantization).
@@ -164,6 +171,33 @@ class PersistentEngine:
         m = cfg.moe
         wi_cols = 2 * m.d_ff if m.mlp_type in ("swiglu", "geglu") else m.d_ff
         self.expert_macs_per_token = cfg.d_model * wi_cols + m.d_ff * cfg.d_model
+
+    # ------------------------------------------------------- introspection
+    def expert_weight_bytes_per_step(self, *,
+                                     quant_execution: Optional[bool] = None
+                                     ) -> float:
+        """Analytic HBM expert-weight traffic of one decode step.
+
+        The batched expert FFN touches every expert's weights each step
+        (inactive experts multiply zero rows).  Dense-dequant reads the
+        packed codes, writes the dense tensor *at the model dtype's
+        width* and reads it back into the matmul; quantized execution
+        streams only the packed codes.  Shared accounting lives in
+        :func:`repro.hw.energy.expert_weight_step_bytes`.
+        """
+        from repro.hw.energy import expert_weight_step_bytes
+
+        if quant_execution is None:
+            quant_execution = self.ecfg.policy.quant_execution
+        import numpy as _np
+        n_codes = n_groups = 0.0
+        for le in self.store.layers.values():
+            for q in (le.wi_q, le.wo_q):
+                n_codes += float(_np.prod(q.codes.shape))
+                n_groups += float(_np.prod(q.scales.shape))
+        return expert_weight_step_bytes(
+            n_codes, n_groups, quant_execution=quant_execution,
+            dense_itemsize=jnp.dtype(self.cfg.dtype).itemsize)
 
     # --------------------------------------------------- per-request state
     def new_controller(self) -> Optional[MissRateController]:

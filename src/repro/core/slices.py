@@ -109,12 +109,18 @@ class ExpertSliceStore:
         return jnp.asarray(resident_lsb, bool)
 
 
-def quantize_moe_params(params: dict, cfg, mat: MatConfig):
+def quantize_moe_params(params: dict, cfg, mat: MatConfig, *,
+                        quant_execution: bool = False):
     """Replace float expert weights in a model param tree by AMAT tensors.
 
     Returns (new_params, store).  The param tree keeps QuantizedTensor
     leaves (a registered pytree) under ``experts/{wi_q,wo_q}``; the store
     indexes the same tensors by *flat layer index* for the cache sim.
+
+    ``quant_execution``: additionally store the ``wo`` codes transposed
+    to the output-major ``[..., d_model, d_ff]`` layout under
+    ``experts/wo_codes_t`` — the layout the transposed batched-expert
+    kernel consumes (so the hot path never transposes at step time).
     """
     pattern = cfg.block_pattern
     new_blocks = dict(params["blocks"])
@@ -141,6 +147,9 @@ def quantize_moe_params(params: dict, cfg, mat: MatConfig):
         wo_q = amat_quantize(wo, mat)
         moe_p = dict(blk["moe"])
         moe_p["experts"] = {"wi_q": wi_q, "wo_q": wo_q}
+        if quant_execution:
+            moe_p["experts"]["wo_codes_t"] = jnp.swapaxes(
+                wo_q.codes, -1, -2)
         blk["moe"] = moe_p
         new_blocks[f"pos{i}"] = blk
         for period in range(cfg.n_periods):

@@ -26,6 +26,27 @@ from typing import Optional
 from repro.hw.specs import SystemSpec, MOBILE_SOC
 
 
+def expert_weight_step_bytes(n_codes: float, n_groups: float, *,
+                             quant_execution: bool,
+                             dense_itemsize: int = 4) -> float:
+    """HBM bytes one expert-FFN step moves for its weights (analytic).
+
+    The batched expert FFN touches every expert's weights each step.
+    Codes are uint8 (1 B/element); group metadata is an f32 scale + a
+    uint8 zero-point (5 B/group), read by both paths.  Dense dequant
+    additionally writes and re-reads the materialized dense tensor at
+    ``dense_itemsize`` bytes/element (4 for f32, 2 for bf16 — pass the
+    model dtype's width); quantized execution streams only the packed
+    codes.  This is a *model* of the traffic, shared by the engine and
+    the benchmarks so their persisted baselines can't diverge — it is
+    not a runtime measurement.
+    """
+    meta = n_groups * 5.0
+    if quant_execution:
+        return n_codes * 1.0 + meta
+    return n_codes * (1.0 + 2.0 * dense_itemsize) + meta
+
+
 @dataclasses.dataclass
 class CostLedger:
     """Accumulates latency and energy over a simulated inference run."""

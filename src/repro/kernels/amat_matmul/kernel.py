@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused AMAT group-dequant + matmul.
+"""Pallas TPU kernels: fused AMAT group-dequant + matmul.
 
 The paper's XPU dequantizes bit-sliced experts in fixed-function hardware
 in front of the systolic array.  The TPU-native equivalent fuses the
@@ -9,8 +9,24 @@ and immediately fed to the MXU, so the f32 weight tile never exists in
 HBM.  Grid: ``(M/bm, N/bn, K/bk)`` with K innermost, accumulating into
 the output tile (revisited across the K dimension).
 
+Three entry points (see docs/kernels.md for the full grid/BlockSpec map):
+
+* :func:`amat_matmul_pallas` — single weight matrix, static precision
+  selection (``mode='high'|'low'``).  Microbenchmark / ablation kernel.
+* :func:`amat_batched_matmul_pallas` — batched over an expert axis
+  (``[E, K, N]`` codes) with **per-expert** precision selection: the
+  ``use_lsb`` vector rides in via scalar prefetch
+  (:class:`pltpu.PrefetchScalarGridSpec`), so expert ``e`` flips between
+  the MSB+LSB and the MSB-only dequant constants branch-free inside the
+  K loop.  This is the quantized-execution path of the expert FFN.
+* :func:`amat_batched_matmul_t_pallas` — the transposed variant for the
+  ``wo`` projection: codes stored output-major (``[E, N, K]``), the
+  tile is transposed in VREGs after the DMA so group metadata stays in
+  the canonical ``[E, K//G, N]`` layout.
+
 Tiling constraints: ``bk % group_size == 0`` so each K-tile covers whole
 quantization groups; bm/bn multiples of (8, 128) keep the MXU aligned.
+All kernels accept ``interpret=True`` so CPU CI executes the same body.
 """
 
 from __future__ import annotations
@@ -67,8 +83,14 @@ def amat_matmul_pallas(x, codes, scales, zps, *, group_size: int = 32,
     assert K == K2 and K % group_size == 0
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
     assert bk % group_size == 0, "K tile must cover whole groups"
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
-        f"pad inputs to block multiples: {(M, N, K)} vs {(bm, bn, bk)}"
+    assert N % bn == 0 and K % bk == 0, \
+        f"pad N/K to block multiples: {(N, K)} vs {(bn, bk)}"
+    # Decode batches are rarely multiples of bm: pad M internally and
+    # slice the result (padded rows hit zeroed x, contributing nothing).
+    m_pad = (-M) % bm
+    if m_pad:
+        x = jnp.pad(x, ((0, m_pad), (0, 0)))
+    Mp = M + m_pad
     n_k = K // bk
     gs_per_bk = bk // group_size
 
@@ -76,9 +98,9 @@ def amat_matmul_pallas(x, codes, scales, zps, *, group_size: int = 32,
         _amat_matmul_kernel, group_size=group_size, shift=shift,
         low=(mode == "low"), n_k=n_k)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(M // bm, N // bn, n_k),
+        grid=(Mp // bm, N // bn, n_k),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
@@ -86,8 +108,136 @@ def amat_matmul_pallas(x, codes, scales, zps, *, group_size: int = 32,
             pl.BlockSpec((gs_per_bk, bn), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), jnp.float32),
         # f32 accumulator tile in VMEM, revisited across the K grid dim
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, codes, scales, zps)
+    return out[:M] if m_pad else out
+
+
+# --------------------------------------------------------------------------
+# Batched-expert kernels (the quantized-execution path of the expert FFN)
+# --------------------------------------------------------------------------
+def _dequant_tile(codes, s, z, use_lsb_e, *, group_size: int, shift: int):
+    """Dequantize a [bk, bn] code tile in VREGs with runtime precision.
+
+    ``use_lsb_e`` is a scalar bool (this expert's precision): True keeps
+    the full high-bit code; False applies the AMAT truncation (shift on
+    code *and* zero-point, rescale) — both paths cost one FMA since the
+    select is on the dequant constants, not on the result.
+    """
+    bk, bn = codes.shape
+    g = bk // group_size
+    c = codes.reshape(g, group_size, bn).astype(jnp.float32)
+    zb = z.astype(jnp.float32).reshape(g, 1, bn)
+    sb = s.astype(jnp.float32).reshape(g, 1, bn)
+    if shift > 0:
+        inv = 0.5 ** shift
+        c = jnp.where(use_lsb_e, c, jnp.floor(c * inv))
+        zb = jnp.where(use_lsb_e, zb, jnp.floor(zb * inv))
+        sb = jnp.where(use_lsb_e, sb, sb * (2.0 ** shift))
+    return ((c - zb) * sb).reshape(bk, bn)
+
+
+def _amat_batched_kernel(u_ref, x_ref, c_ref, s_ref, z_ref, o_ref,
+                         acc_ref, *, group_size: int, shift: int,
+                         n_k: int, transposed: bool):
+    e = pl.program_id(0)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)                # [bm, bk]
+    codes = c_ref[0]                                # [bk, bn] | [bn, bk]
+    if transposed:
+        # output-major wo layout: transpose the code tile in VREGs so the
+        # dequant + dot share the K-major path (metadata is K-major).
+        codes = codes.T
+    hi = u_ref[e] > 0                               # scalar-prefetched flag
+    w = _dequant_tile(codes, s_ref[0], z_ref[0], hi,
+                      group_size=group_size, shift=shift)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def amat_batched_matmul_pallas(x, codes, scales, zps, use_lsb, *,
+                               group_size: int = 32, shift: int = 4,
+                               bm: int = 128, bn: int = 128, bk: int = 128,
+                               transposed: bool = False,
+                               interpret: bool = False):
+    """Per-expert fused dequant-matmul on packed AMAT codes.
+
+    x: [E, M, K]; codes: [E, K, N] (or [E, N, K] when ``transposed``);
+    scales/zps: [E, K//G, N]; use_lsb: [E] (bool/int) — expert ``e``
+    computes at high precision iff ``use_lsb[e]``.  Returns [E, M, N] f32.
+
+    ``use_lsb`` travels via scalar prefetch: it is resident in SMEM
+    before the grid starts, so per-expert precision selection costs no
+    extra DMA and no grid restructuring — DBSC's per-step high/low-bit
+    decisions become per-expert dequant shifts inside one kernel launch.
+    """
+    E, M, K = x.shape
+    N = codes.shape[1] if transposed else codes.shape[2]
+    assert codes.shape == ((E, N, K) if transposed else (E, K, N))
+    assert K % group_size == 0
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert bk % group_size == 0, "K tile must cover whole groups"
+    assert N % bn == 0 and K % bk == 0, \
+        f"pad N/K to block multiples: {(N, K)} vs {(bn, bk)}"
+    m_pad = (-M) % bm
+    if m_pad:
+        x = jnp.pad(x, ((0, 0), (0, m_pad), (0, 0)))
+    Mp = M + m_pad
+    n_k = K // bk
+    g_bk = bk // group_size
+    u = use_lsb.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _amat_batched_kernel, group_size=group_size, shift=shift,
+        n_k=n_k, transposed=transposed)
+    code_spec = (
+        pl.BlockSpec((1, bn, bk), lambda e, i, j, k, u_ref: (e, j, k))
+        if transposed else
+        pl.BlockSpec((1, bk, bn), lambda e, i, j, k, u_ref: (e, k, j)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(E, Mp // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, i, j, k, u_ref: (e, i, k)),
+            code_spec,
+            pl.BlockSpec((1, g_bk, bn), lambda e, i, j, k, u_ref: (e, k, j)),
+            pl.BlockSpec((1, g_bk, bn), lambda e, i, j, k, u_ref: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn),
+                               lambda e, i, j, k, u_ref: (e, i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, Mp, N), jnp.float32),
+        interpret=interpret,
+    )(u, x, codes, scales, zps)
+    return out[:, :M] if m_pad else out
+
+
+def amat_batched_matmul_t_pallas(x, codes_t, scales, zps, use_lsb, **kw):
+    """Transposed-weight variant: codes_t [E, N, K], metadata [E, K//G, N].
+
+    Used for the ``wo`` projection when its codes are stored output-major
+    (``[E, d_model, d_ff]``) so both expert weight matrices share the
+    d_model-minor HBM layout; the code tile is transposed in VREGs after
+    the DMA — group metadata never changes layout.
+    """
+    return amat_batched_matmul_pallas(x, codes_t, scales, zps, use_lsb,
+                                      transposed=True, **kw)

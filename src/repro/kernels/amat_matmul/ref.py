@@ -25,3 +25,34 @@ def amat_matmul_ref(x, codes, scales, zps, *, group_size: int = 32,
         s = s * (2.0 ** shift)
     w = ((c - z) * s).reshape(K, N)
     return x.astype(jnp.float32) @ w
+
+
+def _dequant_mixed_ref(codes, scales, zps, use_lsb, *, group_size, shift):
+    """[E, K, N] codes -> [E, K, N] f32 weights, per-expert precision."""
+    E, K, N = codes.shape
+    G = K // group_size
+    c = codes.reshape(E, G, group_size, N).astype(jnp.float32)
+    z = zps.reshape(E, G, 1, N).astype(jnp.float32)
+    s = scales.reshape(E, G, 1, N).astype(jnp.float32)
+    w_hi = (c - z) * s
+    w_lo = (jnp.floor(c / (2.0 ** shift)) - jnp.floor(z / (2.0 ** shift))) \
+        * (s * (2.0 ** shift))
+    sel = use_lsb.reshape(E, 1, 1, 1).astype(bool)
+    return jnp.where(sel, w_hi, w_lo).reshape(E, K, N)
+
+
+def amat_batched_matmul_ref(x, codes, scales, zps, use_lsb, *,
+                            group_size: int = 32, shift: int = 4):
+    """x: [E, M, K]; codes: [E, K, N]; scales/zps: [E, K//G, N];
+    use_lsb: [E] bool.  Returns [E, M, N] f32."""
+    w = _dequant_mixed_ref(codes, scales, zps, use_lsb,
+                           group_size=group_size, shift=shift)
+    return jnp.einsum("emk,ekn->emn", x.astype(jnp.float32), w)
+
+
+def amat_batched_matmul_t_ref(x, codes_t, scales, zps, use_lsb, *,
+                              group_size: int = 32, shift: int = 4):
+    """Transposed-weight oracle: codes_t [E, N, K], metadata [E, K//G, N]."""
+    codes = jnp.swapaxes(codes_t, -1, -2)
+    return amat_batched_matmul_ref(x, codes, scales, zps, use_lsb,
+                                   group_size=group_size, shift=shift)

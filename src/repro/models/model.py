@@ -206,7 +206,8 @@ def _cross_attn_block(p: dict, x: jax.Array, enc_k: jax.Array,
 
 def _ffn_block(p: dict, x: jax.Array, cfg: ModelConfig, spec: BlockSpec, *,
                collect, use_lsb=None, gate_override=None,
-               policy=None, policy_state=None, mat=None, token_mask=None):
+               policy=None, policy_state=None, mat=None, token_mask=None,
+               quant_execution=None):
     aux = None
     if spec.ffn == "dense":
         h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
@@ -218,7 +219,7 @@ def _ffn_block(p: dict, x: jax.Array, cfg: ModelConfig, spec: BlockSpec, *,
             p["moe"], h.reshape(-1, d), cfg.moe,
             use_lsb=use_lsb, gate_override=gate_override,
             policy=policy, policy_state=policy_state, mat=mat,
-            token_mask=token_mask)
+            token_mask=token_mask, quant_execution=quant_execution)
         x = x + y.reshape(b, s, d)
         if not collect:
             aux = {"aux_loss": aux["aux_loss"],
@@ -290,6 +291,7 @@ def forward(
     collect_trace: bool = False,
     use_window: bool = False,
     mat=None,
+    quant_execution: Optional[bool] = None,
 ):
     """Returns (hidden [B, S, d], aux dict with moe traces / losses)."""
     x = embed_inputs(params, cfg, tokens, prefix_embeds)
@@ -325,7 +327,7 @@ def forward(
             else:
                 x = _ssm_block(p, x, cfg)
             x, aux = _ffn_block(p, x, cfg, spec, collect=collect_trace,
-                                mat=mat)
+                                mat=mat, quant_execution=quant_execution)
             if aux is not None:
                 auxes.append(aux)
         if auxes:
@@ -458,7 +460,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
             max_seq: int, *, prefix_embeds=None, encoder_frames=None,
             collect_trace: bool = False, use_window: bool = False,
-            mat=None):
+            mat=None, quant_execution: Optional[bool] = None):
     """Forward over the prompt, returning (last-token logits, cache, aux)."""
     x = embed_inputs(params, cfg, tokens, prefix_embeds)
     b, s, d = x.shape
@@ -506,7 +508,7 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 cache_entries[key] = {"state": state,
                                       "conv": conv_tail.astype(dtype)}
             x, aux = _ffn_block(p, x, cfg, spec, collect=collect_trace,
-                                mat=mat)
+                                mat=mat, quant_execution=quant_execution)
             if aux is not None:
                 auxes.append(aux)
         stacked = {}
@@ -539,7 +541,8 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 alpha=None,
                 mat=None,
                 token_mask: Optional[jax.Array] = None,
-                use_window: bool = False):
+                use_window: bool = False,
+                quant_execution: Optional[bool] = None):
     """One decode step.  token: [B] int32.  Returns (logits, cache, aux).
 
     ``use_lsb`` / ``gate_override`` / ``policy_state`` are optional
@@ -681,7 +684,8 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
             x, aux = _ffn_block(p, x, cfg, spec, collect=collect_trace,
                                 use_lsb=ul, gate_override=go,
                                 policy=policy, policy_state=ps, mat=mat,
-                                token_mask=token_mask)
+                                token_mask=token_mask,
+                                quant_execution=quant_execution)
             if aux is not None:
                 auxes.append(aux)
         stacked = {}

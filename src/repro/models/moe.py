@@ -43,6 +43,12 @@ class RoutingPolicy:
                  'amat_static'— MSB-only during decode (high-bit prefill)
     fetch_lsb_on_miss: if False, an LSB miss degrades the expert to
                  MSB-only compute instead of fetching (needs cached_lsb).
+    quant_execution: run the expert FFN *directly on packed AMAT codes*
+                 via the batched-expert Pallas kernel (per-expert
+                 ``use_lsb`` becomes a per-expert dequant shift inside
+                 the kernel) instead of materializing dense f32/bf16
+                 expert weights each step.  Numerically equivalent to
+                 the dense-dequant path; see docs/kernels.md.
     """
 
     kind: str = "topk"
@@ -51,6 +57,7 @@ class RoutingPolicy:
     cumsum_tau: float = 0.9
     cumsum_kmax: int = 8
     fetch_lsb_on_miss: bool = True
+    quant_execution: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,22 +159,57 @@ def combine(y_buf: jax.Array, ids: jax.Array, positions: jax.Array,
 # --------------------------------------------------------------------------
 # Expert compute
 # --------------------------------------------------------------------------
-def _expert_ffn(xe: jax.Array, wi: jax.Array, wo: jax.Array,
-                mlp_type: str) -> jax.Array:
-    """Batched per-expert FFN. xe: [E, C, d]; wi: [E, d, F(|2F)]; wo: [E, F, d]."""
-    h = jnp.einsum("ecd,edf->ecf", xe, wi.astype(xe.dtype))
+def _ffn_activation(h: jax.Array, mlp_type: str, dtype) -> jax.Array:
+    """The FFN nonlinearity in f32, result cast to ``dtype``."""
     if mlp_type in ("swiglu", "geglu"):
         act = jax.nn.silu if mlp_type == "swiglu" else \
             (lambda u: jax.nn.gelu(u, approximate=True))
         g, u = jnp.split(h, 2, axis=-1)
-        h = act(g.astype(jnp.float32)).astype(xe.dtype) * u
-    elif mlp_type == "relu2":
-        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(xe.dtype)
-    elif mlp_type == "gelu":
-        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(xe.dtype)
-    else:
-        raise ValueError(mlp_type)
+        return act(g.astype(jnp.float32)).astype(dtype) * u
+    if mlp_type == "relu2":
+        return jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(dtype)
+    if mlp_type == "gelu":
+        return jax.nn.gelu(h.astype(jnp.float32),
+                           approximate=True).astype(dtype)
+    raise ValueError(mlp_type)
+
+
+def _expert_ffn(xe: jax.Array, wi: jax.Array, wo: jax.Array,
+                mlp_type: str) -> jax.Array:
+    """Batched per-expert FFN. xe: [E, C, d]; wi: [E, d, F(|2F)]; wo: [E, F, d]."""
+    h = jnp.einsum("ecd,edf->ecf", xe, wi.astype(xe.dtype))
+    h = _ffn_activation(h, mlp_type, xe.dtype)
     return jnp.einsum("ecf,efd->ecd", h, wo.astype(xe.dtype))
+
+
+def _expert_ffn_quant(xe: jax.Array, wi_q: QuantizedTensor,
+                      wo_q: QuantizedTensor,
+                      wo_codes_t: Optional[jax.Array],
+                      use_lsb: Optional[jax.Array], shift: int,
+                      mlp_type: str) -> jax.Array:
+    """Expert FFN computed *directly on packed AMAT codes* (no dense
+    weight tensor is ever materialized — the paper's in-front-of-compute
+    dequantization, here fused into the Pallas matmul's K loop).
+
+    ``use_lsb`` [E] selects the per-expert dequant shift inside the
+    kernel; ``wo_codes_t`` is the pre-transposed (output-major,
+    ``[E, d, F]``) wo code buffer — when absent the canonical ``[E, F,
+    d]`` codes are used with the K-major kernel.
+    """
+    from repro.kernels.amat_matmul.ops import (amat_expert_matmul_qt,
+                                               amat_expert_matmul_t)
+
+    ul = use_lsb if use_lsb is not None \
+        else jnp.ones((xe.shape[0],), bool)
+    h = amat_expert_matmul_qt(xe, wi_q, ul, shift=shift).astype(xe.dtype)
+    h = _ffn_activation(h, mlp_type, xe.dtype)
+    if wo_codes_t is not None:
+        y = amat_expert_matmul_t(h, wo_codes_t, wo_q.scales,
+                                 wo_q.zero_points, ul, shift=shift,
+                                 group_size=wo_q.group_size)
+    else:
+        y = amat_expert_matmul_qt(h, wo_q, ul, shift=shift)
+    return y.astype(xe.dtype)
 
 
 def _dequant_experts(qt: QuantizedTensor, use_lsb: Optional[jax.Array],
@@ -197,6 +239,7 @@ def moe_apply(
     token_mask: Optional[jax.Array] = None,  # [T] bool; False = padding row
     deterministic: bool = True,
     rng: Optional[jax.Array] = None,
+    quant_execution: Optional[bool] = None,  # None -> policy decides
 ):
     """Full MoE layer.  Returns (y [T, d], aux: dict).
 
@@ -290,10 +333,12 @@ def moe_apply(
     xe = shard_hint(xe, "model", None, None)   # expert parallelism
 
     experts = params["experts"]
+    quant_exec = quant_execution if quant_execution is not None else \
+        (policy.quant_execution if policy is not None else False)
+    wi_qt = wo_qt = None
     if "wi_q" in experts:
         assert mat is not None
-        wi = _dequant_experts(experts["wi_q"], use_lsb, mat.shift, x.dtype)
-        wo = _dequant_experts(experts["wo_q"], use_lsb, mat.shift, x.dtype)
+        wi_qt, wo_qt = experts["wi_q"], experts["wo_q"]
     elif "wi_codes" in experts:
         # flat-dict quantized form (quantized_serve dry-run / serve path)
         assert mat is not None
@@ -303,16 +348,29 @@ def moe_apply(
         wo_qt = QuantizedTensor(experts["wo_codes"], experts["wo_scales"],
                                 experts["wo_zps"], mat.high_bits,
                                 mat.group_size, True)
-        # Pin the dequantized tiles to the codes' sharding: without this
-        # GSPMD replicates them (a 66 GB/step all-gather on maverick —
-        # EXPERIMENTS.md §Perf hillclimb 1).
-        wi = shard_hint(_dequant_experts(wi_qt, use_lsb, mat.shift,
-                                         x.dtype), "model", None, "data")
-        wo = shard_hint(_dequant_experts(wo_qt, use_lsb, mat.shift,
-                                         x.dtype), "model", "data", None)
+
+    if wi_qt is not None and quant_exec:
+        # Quantized execution: the packed codes ARE the compute format.
+        # No dense expert tensor is materialized (and hence no
+        # dequant-tile shard_hint workaround is needed — the kernel
+        # reads the codes at their native sharding).
+        ye = _expert_ffn_quant(xe, wi_qt, wo_qt,
+                               experts.get("wo_codes_t"), use_lsb,
+                               mat.shift, cfg.mlp_type)
+    elif wi_qt is not None:
+        # Dense-dequant reference path: materialize per-expert f32/bf16
+        # weights each step (gather-then-dequantize).
+        wi = _dequant_experts(wi_qt, use_lsb, mat.shift, x.dtype)
+        wo = _dequant_experts(wo_qt, use_lsb, mat.shift, x.dtype)
+        if "wi_codes" in experts:
+            # Pin the dequantized tiles to the codes' sharding: without
+            # this GSPMD replicates them (a 66 GB/step all-gather on
+            # maverick — EXPERIMENTS.md §Perf hillclimb 1).
+            wi = shard_hint(wi, "model", None, "data")
+            wo = shard_hint(wo, "model", "data", None)
+        ye = _expert_ffn(xe, wi, wo, cfg.mlp_type)
     else:
-        wi, wo = experts["wi"], experts["wo"]
-    ye = _expert_ffn(xe, wi, wo, cfg.mlp_type)
+        ye = _expert_ffn(xe, experts["wi"], experts["wo"], cfg.mlp_type)
     ye = shard_hint(ye, "model", None, None)
     y = combine(ye, ids, positions, keep, gates)
     y = shard_hint(y, ("pod", "data"), None)

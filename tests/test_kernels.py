@@ -6,8 +6,15 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.amat_matmul.ops import amat_matmul, amat_matmul_qt
-from repro.kernels.amat_matmul.ref import amat_matmul_ref
+from repro.core.amat import PAPER_CONFIGS, amat_quantize
+from repro.kernels.amat_matmul.kernel import amat_matmul_pallas
+from repro.kernels.amat_matmul.ops import (amat_expert_matmul,
+                                           amat_expert_matmul_qt,
+                                           amat_expert_matmul_t,
+                                           amat_matmul, amat_matmul_qt)
+from repro.kernels.amat_matmul.ref import (amat_batched_matmul_ref,
+                                           amat_batched_matmul_t_ref,
+                                           amat_matmul_ref)
 from repro.kernels.expert_matmul.ops import expert_matmul, expert_matmul_qt
 from repro.kernels.expert_matmul.ref import expert_matmul_ref
 from repro.quant.groupquant import quantize
@@ -61,6 +68,113 @@ class TestAmatMatmul:
         exact = x @ w
         rel = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
         assert rel < 0.01
+
+    def test_pallas_call_pads_ragged_m(self, rng):
+        """Regression: decode batches are rarely multiples of bm — the
+        raw pallas entry point must pad M internally, not assert."""
+        for M in (1, 7, 130):
+            x = jax.random.normal(rng, (M, 64))
+            w = jax.random.normal(jax.random.fold_in(rng, M), (64, 128)) * 0.1
+            qt = quantize(w, bits=8, group_size=32, asymmetric=True)
+            out = amat_matmul_pallas(x, qt.codes, qt.scales, qt.zero_points,
+                                     bm=128, bn=128, bk=64, interpret=True)
+            ref = amat_matmul_ref(x, qt.codes, qt.scales, qt.zero_points)
+            assert out.shape == (M, 128)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=1e-3)
+
+
+class TestAmatBatchedMatmul:
+    """The quantized-execution kernel: per-expert use_lsb via scalar
+    prefetch, across all paper MAT configs and ragged shapes."""
+
+    @pytest.mark.parametrize("mat", PAPER_CONFIGS, ids=lambda m: m.name)
+    @pytest.mark.parametrize("emkn", [(4, 16, 64, 32), (3, 7, 96, 33),
+                                      (2, 1, 32, 128), (5, 130, 160, 16)],
+                             ids=str)
+    def test_matches_ref_paper_configs(self, rng, mat, emkn):
+        E, M, K, N = emkn
+        x = jax.random.normal(rng, (E, M, K))
+        w = jax.random.normal(jax.random.fold_in(rng, 1), (E, K, N)) * 0.1
+        qt = amat_quantize(w, mat)
+        ul = jnp.arange(E) % 2 == 0               # mixed per-expert mask
+        out = amat_expert_matmul_qt(x, qt, ul, shift=mat.shift)
+        ref = amat_batched_matmul_ref(x, qt.codes, qt.scales,
+                                      qt.zero_points, ul,
+                                      group_size=mat.group_size,
+                                      shift=mat.shift)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)
+
+    @pytest.mark.parametrize("mat", PAPER_CONFIGS, ids=lambda m: m.name)
+    def test_transposed_variant_matches_ref(self, rng, mat):
+        E, M, K, N = 3, 9, 64, 48
+        x = jax.random.normal(rng, (E, M, K))
+        w = jax.random.normal(jax.random.fold_in(rng, 1), (E, K, N)) * 0.1
+        qt = amat_quantize(w, mat)
+        ct = jnp.swapaxes(qt.codes, -1, -2)       # output-major wo layout
+        ul = jnp.arange(E) % 2 == 1
+        out = amat_expert_matmul_t(x, ct, qt.scales, qt.zero_points, ul,
+                                   shift=mat.shift,
+                                   group_size=mat.group_size)
+        ref = amat_batched_matmul_t_ref(x, ct, qt.scales, qt.zero_points,
+                                        ul, group_size=mat.group_size,
+                                        shift=mat.shift)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)
+        # and the transposed layout agrees with the K-major kernel
+        canon = amat_expert_matmul_qt(x, qt, ul, shift=mat.shift)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(canon),
+                                   atol=1e-4)
+
+    def test_use_lsb_extremes_match_static_modes(self, rng):
+        """all-ones == high-bit dequant; all-zeros == AMAT truncation."""
+        E, M, K, N = 2, 8, 64, 32
+        x = jax.random.normal(rng, (E, M, K))
+        w = jax.random.normal(jax.random.fold_in(rng, 1), (E, K, N)) * 0.1
+        qt = quantize(w, bits=8, group_size=32, asymmetric=True)
+        hi = amat_expert_matmul_qt(x, qt, jnp.ones(E, bool), shift=4)
+        lo = amat_expert_matmul_qt(x, qt, jnp.zeros(E, bool), shift=4)
+        for e in range(E):
+            hi_ref = amat_matmul_ref(x[e], qt.codes[e], qt.scales[e],
+                                     qt.zero_points[e], mode="high")
+            lo_ref = amat_matmul_ref(x[e], qt.codes[e], qt.scales[e],
+                                     qt.zero_points[e], shift=4,
+                                     mode="low")
+            np.testing.assert_allclose(np.asarray(hi[e]),
+                                       np.asarray(hi_ref), atol=1e-4)
+            np.testing.assert_allclose(np.asarray(lo[e]),
+                                       np.asarray(lo_ref), atol=1e-4)
+        assert float(jnp.linalg.norm(hi - lo)) > 1e-3
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 999), E=st.integers(1, 5))
+    def test_property_random_masks(self, seed, E):
+        key = jax.random.PRNGKey(seed)
+        M, K, N = 6, 32, 16
+        x = jax.random.normal(key, (E, M, K))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (E, K, N)) * 0.1
+        qt = quantize(w, bits=8, group_size=32, asymmetric=True)
+        ul = jax.random.bernoulli(jax.random.fold_in(key, 2), shape=(E,))
+        out = amat_expert_matmul_qt(x, qt, ul, shift=4)
+        ref = amat_batched_matmul_ref(x, qt.codes, qt.scales,
+                                      qt.zero_points, ul, shift=4)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)
+
+    def test_block_size_invariance(self, rng):
+        E, M, K, N = 2, 32, 128, 64
+        x = jax.random.normal(rng, (E, M, K))
+        w = jax.random.normal(jax.random.fold_in(rng, 1), (E, K, N)) * 0.1
+        qt = quantize(w, bits=8, group_size=32, asymmetric=True)
+        ul = jnp.array([True, False])
+        outs = [amat_expert_matmul_qt(x, qt, ul, shift=4, bm=bm, bn=bn,
+                                      bk=bk)
+                for bm, bn, bk in [(16, 16, 32), (32, 64, 64),
+                                   (128, 128, 128)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                       atol=1e-4)
 
 
 class TestExpertMatmul:
