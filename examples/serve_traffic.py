@@ -59,9 +59,11 @@ def main():
         miss_rate_target=0.10,
         warmup="pcw",
         max_seq=128))
+    # truncate_prompts: a traffic demo prefers serving a clipped prompt
+    # over rejecting the request (admission is strict by default).
     sched = ContinuousBatchingScheduler(engine, SchedulerConfig(
         max_batch=args.max_batch, max_queue=args.max_queue,
-        bucket_prompts=8))
+        bucket_prompts=8, truncate_prompts=True))
 
     wl = scenario(args.scenario, n_requests=args.requests,
                   rate=args.rate, seed=args.seed)

@@ -26,12 +26,31 @@ from typing import Dict, Iterable, List, Optional, Tuple
 from repro.core.slices import SliceKey
 
 
+class SliceTooLargeError(ValueError):
+    """A slice bigger than the whole cache was offered for insertion.
+
+    Raised by :meth:`SliceCache.insert` so the caller can't confuse
+    "dropped" with "already resident" (both used to return ``[]``):
+    a dropped fill never lands in DRAM, so the ledger must charge a
+    direct Flash→XPU stream instead of a fill + DRAM read.
+    """
+
+    def __init__(self, key: SliceKey, nbytes: float, capacity: float):
+        super().__init__(
+            f"slice {key} ({nbytes:.0f} B) exceeds cache capacity "
+            f"({capacity:.0f} B); fill dropped")
+        self.key = key
+        self.nbytes = nbytes
+        self.capacity = capacity
+
+
 @dataclasses.dataclass
 class CacheStats:
     msb_hits: int = 0
     msb_misses: int = 0
     lsb_hits: int = 0
     lsb_misses: int = 0
+    n_dropped: int = 0     # fills dropped because the slice outsizes the cache
 
     def record(self, kind: str, hit: bool) -> None:
         f = f"{kind}_{'hits' if hit else 'misses'}"
@@ -59,6 +78,7 @@ class CacheStats:
     def reset(self) -> None:
         self.msb_hits = self.msb_misses = 0
         self.lsb_hits = self.lsb_misses = 0
+        self.n_dropped = 0
 
 
 class SliceCache:
@@ -71,6 +91,11 @@ class SliceCache:
         self._lsb: "OrderedDict[SliceKey, float]" = OrderedDict()
         self.used = 0.0
         self.stats = CacheStats()
+        # In-flight fill state: completion time (timeline seconds) of a
+        # resident entry whose Flash→DRAM transfer is still landing.  A
+        # consumer arriving before ``ready_time`` must wait for it; an
+        # entry with no record is fully landed (ready at any time).
+        self._ready_at: Dict[SliceKey, float] = {}
         # Cross-request stats epochs: each served request gets its own
         # hit/miss window while cache *contents* persist, so a warm-vs-cold
         # miss-rate curve can be read off epoch-by-epoch.
@@ -116,6 +141,7 @@ class SliceCache:
         else:
             return None
         self.used -= nb
+        self._ready_at.pop(key, None)
         return key, nb
 
     def _make_room(self, nbytes: float) -> List[SliceKey]:
@@ -139,7 +165,15 @@ class SliceCache:
 
     def access(self, key: SliceKey, nbytes: float,
                *, fill_on_miss: bool = True) -> bool:
-        """Touch ``key``; returns True on hit.  Fills (with eviction) on miss."""
+        """Touch ``key``; returns True on hit.  Fills (with eviction) on miss.
+
+        An oversized fill (``nbytes > capacity``) is *dropped*, counted in
+        ``stats.n_dropped``, and the miss is reported as usual — callers
+        that need to distinguish a landed fill from a drop check
+        ``key in cache`` after a missed access (see the engine's charge
+        path) or call :meth:`insert` directly and catch
+        :class:`SliceTooLargeError`.
+        """
         seg = self._segment(key)
         hit = key in seg
         self.stats.record(key.kind, hit)
@@ -148,12 +182,23 @@ class SliceCache:
                 seg.move_to_end(key)      # LRU bump; LSBs stay low priority
             return True
         if fill_on_miss:
-            self.insert(key, nbytes)
+            try:
+                self.insert(key, nbytes)
+            except SliceTooLargeError:
+                self.stats.n_dropped += 1
         return False
 
     def insert(self, key: SliceKey, nbytes: float) -> List[SliceKey]:
+        """Install ``key``, evicting low-priority entries to make room.
+
+        Returns the evicted keys.  Raises :class:`SliceTooLargeError`
+        when the slice cannot fit even in an empty cache — previously
+        this silently returned ``[]``, indistinguishable from "already
+        resident", so callers charged the ledger for fills that never
+        happened.
+        """
         if nbytes > self.capacity:
-            return []
+            raise SliceTooLargeError(key, nbytes, self.capacity)
         seg = self._segment(key)
         if key in seg:
             seg.move_to_end(key)
@@ -163,10 +208,30 @@ class SliceCache:
         self.used += nbytes
         return evicted
 
+    # --------------------------------------------------- in-flight fills
+    def mark_inflight(self, key: SliceKey, ready_t: float) -> None:
+        """Record that ``key``'s fill (already inserted) lands at
+        ``ready_t`` on the simulation timeline.  Used by the async decode
+        replay so a consumer arriving earlier stalls until the transfer
+        completes instead of re-issuing it."""
+        if key in self:
+            self._ready_at[key] = ready_t
+
+    def ready_time(self, key: SliceKey, default: float = 0.0) -> float:
+        """Timeline second at which ``key`` is usable (``default`` when
+        no fill is in flight for it)."""
+        return self._ready_at.get(key, default)
+
+    def settle(self, now: float) -> None:
+        """Forget in-flight records that have landed by ``now``."""
+        self._ready_at = {k: t for k, t in self._ready_at.items()
+                          if t > now}
+
     def evict(self, key: SliceKey) -> bool:
         for seg in (self._msb, self._lsb):
             if key in seg:
                 self.used -= seg.pop(key)
+                self._ready_at.pop(key, None)
                 return True
         return False
 
@@ -202,10 +267,12 @@ class SliceCache:
         for seg in (self._msb, self._lsb):
             for k in [k for k in seg if pred(k)]:
                 self.used -= seg.pop(k)
+                self._ready_at.pop(k, None)
                 out.append(k)
         return out
 
     def clear(self) -> None:
         self._msb.clear()
         self._lsb.clear()
+        self._ready_at.clear()
         self.used = 0.0

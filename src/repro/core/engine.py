@@ -72,6 +72,12 @@ class EngineConfig:
     # pull the top-m predicted next-layer experts into DRAM per layer.
     # None disables.
     prefetch_top_m: Optional[int] = None
+    # Asynchronous slice-I/O timeline: replay decode as a per-expert
+    # fill -> DRAM-read -> matmul pipeline over the ledger's channel
+    # clocks (Flash / DRAM / XPU), with prefetch fills issued behind
+    # demand fills on the Flash channel.  False reproduces the
+    # serialized (paper Figs. 9-10) accounting exactly.
+    async_io: bool = False
     # Cross-request hotness aging applied at each request boundary by the
     # persistent engine (1.0 = never forget, 0.0 = per-request hotness).
     hotness_request_decay: float = 0.5
@@ -90,6 +96,45 @@ class StepCharge:
     misses: int
     per_slot_miss: np.ndarray             # [B] selection-weighted miss rate
     ledger_delta: dict                    # cost delta for this step
+
+
+@dataclasses.dataclass
+class _StepTrace:
+    """One decode step's routing trace + mutable replay counters.
+
+    Hoisted out of the jit aux once per step so the sync and async replay
+    paths share identical demand inputs and miss bookkeeping.
+    """
+
+    ids: np.ndarray                       # [P, npos, T, k]
+    gates: np.ndarray
+    active: np.ndarray
+    critical: np.ndarray
+    slot_mask: np.ndarray                 # [T] bool
+    slot_accesses: np.ndarray             # [T] int64 (mutated during replay)
+    slot_misses: np.ndarray
+    accesses: int = 0
+    misses: int = 0
+
+    @property
+    def P(self) -> int:
+        return self.ids.shape[0]
+
+    @classmethod
+    def from_aux(cls, aux, slot_active: Optional[np.ndarray]) -> "_StepTrace":
+        ids = np.asarray(aux["moe"]["ids"])            # [P, npos, T, k]
+        T = ids.shape[2]
+        slot_mask = np.ones(T, bool) if slot_active is None \
+            else np.asarray(slot_active, bool)
+        return cls(
+            ids=ids,
+            gates=np.asarray(aux["moe"]["gates"]).astype(np.float64),
+            active=np.asarray(aux["moe"]["active"]),
+            critical=np.asarray(aux["moe"]["critical"]),
+            slot_mask=slot_mask,
+            slot_accesses=np.zeros(T, np.int64),
+            slot_misses=np.zeros(T, np.int64),
+        )
 
 
 class PersistentEngine:
@@ -286,9 +331,12 @@ class PersistentEngine:
                         key = SliceKey(lidx, int(e), kind)
                         nb = self.store.slice_bytes(key)
                         hit = self.cache.access(key, nb)
-                        if not hit:
-                            self.ledger.miss_fill(nb)
-                        self.ledger.dram_read(nb)
+                        if hit or key in self.cache:
+                            if not hit:           # fill landed
+                                self.ledger.miss_fill(nb)
+                            self.ledger.dram_read(nb)
+                        else:                     # dropped: direct stream
+                            self.ledger.flash_stream(nb)
                 # prefill compute: all routed tokens, high precision
                 t_routed = l_ids.size
                 self.ledger.matmul(t_routed, self.cfg.d_model,
@@ -363,81 +411,147 @@ class PersistentEngine:
         when every slot is active.  Additionally attributes each slice
         miss to the slots that selected the missing expert, yielding the
         per-sequence miss-rate signal the per-request controllers consume.
+
+        Two replay disciplines share the same demand derivation, energy
+        model and hit/miss bookkeeping and differ only in *when* each
+        transfer occupies its hardware channel:
+
+        * ``async_io=False`` — serialized issue: every Flash fill, DRAM
+          read and matmul blocks the timeline (the pre-timeline scalar
+          accounting, reproduced exactly);
+        * ``async_io=True`` — a double-buffered layer pipeline: each
+          expert's fill → DRAM read → matmul chain is issued with real
+          data dependencies on the per-channel clocks, prefetch fills
+          ride the Flash channel behind demand fills, and only the layer
+          that actually consumes a late slice stalls.
         """
-        ids = np.asarray(aux["moe"]["ids"])            # [P, npos, T, k]
-        gates = np.asarray(aux["moe"]["gates"]).astype(np.float64)
-        active = np.asarray(aux["moe"]["active"])      # [P, npos, T, k]
-        critical = np.asarray(aux["moe"]["critical"])  # [P, npos, T, k]
+        replay = self._charge_async if self.ecfg.async_io \
+            else self._charge_sync
+        return replay(_StepTrace.from_aux(aux, slot_active))
 
-        P, npos, T, _k = ids.shape
-        slot_mask = np.ones(T, bool) if slot_active is None \
-            else np.asarray(slot_active, bool)
-        slot_accesses = np.zeros(T, np.int64)
-        slot_misses = np.zeros(T, np.int64)
+    # -------------------------------------------------- shared replay bits
+    def _slice_nbytes(self, key: SliceKey) -> float:
+        if self.ecfg.fused_slices:
+            return self.store.highbit_expert_bytes()
+        return self.store.slice_bytes(key)
 
-        base = self.ledger.snapshot()
-        accesses = misses = 0
+    def _layer_demand(self, tr: "_StepTrace", period: int, pidx: int):
+        """Demand for one (period, position) layer over *active* slots.
+
+        For a full batch this reproduces the jit-side msb_needed /
+        lsb_needed exactly; padding slots are excluded.
+        """
+        mode = self.ecfg.policy.slice_mode
+        act2d = tr.active[period, pidx] & tr.slot_mask[:, None]   # [T, k]
+        flat_ids = tr.ids[period, pidx][act2d]
+        flat_gates = tr.gates[period, pidx][act2d]
+        msb_demand = np.unique(flat_ids)
+        if mode == "highbit":
+            lsb_wanted = set(int(e) for e in msb_demand)
+        elif mode in ("lowbit", "amat_static"):
+            lsb_wanted = set()
+        else:   # dbsc
+            crit_ids = tr.ids[period, pidx][
+                act2d & tr.critical[period, pidx]]
+            lsb_wanted = set(int(e) for e in np.unique(crit_ids))
+        tok_per_e = np.bincount(flat_ids, minlength=self.n_experts)
+        return flat_ids, flat_gates, msb_demand, lsb_wanted, tok_per_e
+
+    def _expert_bits(self, lsb_available: bool) -> int:
+        """Matmul bit-width from the *slot-masked* demand (padding slots
+        must not promote an expert to high-bit in the cost model; the
+        jit-side use_lsb can't distinguish)."""
         mat = self.ecfg.mat
         mode = self.ecfg.policy.slice_mode
+        if self.ecfg.fused_slices or mode == "highbit":
+            return mat.high_bits
+        if mode in ("lowbit", "amat_static"):
+            return mat.low_bits
+        return mat.high_bits if lsb_available else mat.low_bits  # dbsc
+
+    def _msb_resident_row(self, lidx: int) -> np.ndarray:
+        """[E] bool: experts whose MSB slice for ``lidx`` is cached."""
+        row = np.zeros(self.n_experts, bool)
+        for e in range(self.n_experts):
+            row[e] = SliceKey(lidx, e, "msb") in self.cache
+        return row
+
+    def _attribute_slot_misses(self, tr: "_StepTrace", period: int,
+                               pidx: int, missed_expert: np.ndarray) -> None:
+        """Per-slot miss attribution: a slot is charged for every
+        selection that landed on an expert whose slice(s) missed this
+        layer-step."""
+        for b in np.nonzero(tr.slot_mask)[0]:
+            sel = tr.ids[period, pidx][b][tr.active[period, pidx][b]]
+            tr.slot_accesses[b] += sel.size
+            tr.slot_misses[b] += int(missed_expert[sel].sum())
+
+    def _step_charge(self, tr: "_StepTrace", base: dict) -> StepCharge:
+        return StepCharge(
+            miss_rate=tr.misses / max(tr.accesses, 1),
+            accesses=tr.accesses,
+            misses=tr.misses,
+            per_slot_miss=tr.slot_misses / np.maximum(tr.slot_accesses, 1),
+            ledger_delta=self.ledger.delta_since(base),
+        )
+
+    # -------------------------------------------- serialized (sync) replay
+    def _charge_sync(self, tr: "_StepTrace") -> StepCharge:
+        base = self.ledger.snapshot()
         prev_used = None
-        for period in range(P):
+        for period in range(tr.P):
             for pidx, pos in enumerate(self.moe_positions):
                 lidx = self.layer_map[(pos, period)]
                 # --- prefetch (paper §2.1 baseline): before this layer
                 # runs, the predictor has pulled its guesses into DRAM.
+                # Residency-filtered, so every prediction is a real fill.
+                issued = None
                 if self.prefetcher is not None and prev_used is not None:
-                    predicted = self.prefetcher.predict(lidx - 1, prev_used)
-                    self.prefetcher.mark_issued(len(predicted))
+                    predicted = self.prefetcher.predict(
+                        lidx - 1, prev_used,
+                        resident=self._msb_resident_row(lidx))
+                    # Only fills actually enqueued count as issued — a
+                    # capacity-skipped prediction moved no bytes and can
+                    # never save a miss (matches the async accounting).
+                    issued = set()
                     for e in predicted:
                         key = SliceKey(lidx, int(e), "msb")
-                        nb = self.store.slice_bytes(key)
-                        if self.ecfg.fused_slices:
-                            nb = self.store.highbit_expert_bytes()
-                        if key not in self.cache:
-                            self.ledger.miss_fill(nb)
+                        nb = self._slice_nbytes(key)
+                        if key not in self.cache and nb <= self.cache.capacity:
+                            self.ledger.miss_fill(nb, prefetch=True)
                             self.cache.insert(key, nb)
-                act2d = active[period, pidx] & slot_mask[:, None]   # [T, k]
-                flat_ids = ids[period, pidx][act2d]
-                flat_gates = gates[period, pidx][act2d]
+                            issued.add(int(e))
+                    self.prefetcher.mark_issued(len(issued))
+                flat_ids, flat_gates, msb_demand, lsb_wanted, tok_per_e = \
+                    self._layer_demand(tr, period, pidx)
                 self.tracker.observe(lidx, flat_ids, flat_gates)
                 if self.prefetcher is not None:
                     if prev_used is not None:
                         self.prefetcher.observe(lidx, prev_used, flat_ids)
-                        hits = set(np.unique(flat_ids)) & set(
-                            int(e) for e in
-                            self.prefetcher.predict(lidx - 1, prev_used))
-                        self.prefetcher.mark_useful(len(hits))
+                        demanded = set(int(e) for e in msb_demand)
+                        self.prefetcher.mark_useful(len(demanded & issued))
+                        for e in issued - demanded:
+                            self.prefetcher.mark_wasted()
+                            self.ledger.mark_prefetch_wasted(
+                                self._slice_nbytes(SliceKey(lidx, e, "msb")))
                     prev_used = flat_ids
 
-                # Per-expert slice demand over *active* slots only.  For
-                # a full batch this reproduces the jit-side msb_needed /
-                # lsb_needed exactly; padding slots are excluded.
-                msb_demand = np.unique(flat_ids)
-                if mode == "highbit":
-                    lsb_wanted = set(int(e) for e in msb_demand)
-                elif mode in ("lowbit", "amat_static"):
-                    lsb_wanted = set()
-                else:   # dbsc
-                    crit_ids = ids[period, pidx][
-                        act2d & critical[period, pidx]]
-                    lsb_wanted = set(int(e) for e in np.unique(crit_ids))
-
-                # token count per expert (for compute cost)
-                tok_per_e = np.bincount(flat_ids, minlength=self.n_experts)
                 missed_expert = np.zeros(self.n_experts, bool)
                 for e in msb_demand:
                     e = int(e)
                     key = SliceKey(lidx, e, "msb")
-                    nb = self.store.slice_bytes(key)
-                    if self.ecfg.fused_slices:
-                        nb = self.store.highbit_expert_bytes()
+                    nb = self._slice_nbytes(key)
                     hit = self.cache.access(key, nb)
-                    accesses += 1
+                    tr.accesses += 1
                     if not hit:
-                        misses += 1
+                        tr.misses += 1
                         missed_expert[e] = True
-                        self.ledger.miss_fill(nb)
-                    self.ledger.dram_read(nb)
+                        if key in self.cache:      # fill landed
+                            self.ledger.miss_fill(nb)
+                        else:                      # dropped: direct stream
+                            self.ledger.flash_stream(nb)
+                    if hit or key in self.cache:
+                        self.ledger.dram_read(nb)
                     wants_lsb = e in lsb_wanted \
                         and not self.ecfg.fused_slices
                     lsb_available = False
@@ -447,49 +561,178 @@ class PersistentEngine:
                         lhit = self.cache.access(
                             lkey, lnb,
                             fill_on_miss=self.ecfg.policy.fetch_lsb_on_miss)
-                        accesses += 1
+                        tr.accesses += 1
                         if not lhit:
-                            misses += 1
+                            tr.misses += 1
                             missed_expert[e] = True
                             if self.ecfg.policy.fetch_lsb_on_miss:
-                                self.ledger.miss_fill(lnb)
+                                if lkey in self.cache:
+                                    self.ledger.miss_fill(lnb)
+                                else:
+                                    self.ledger.flash_stream(lnb)
                         if lhit or self.ecfg.policy.fetch_lsb_on_miss:
-                            self.ledger.dram_read(lnb)
+                            if lhit or lkey in self.cache:
+                                self.ledger.dram_read(lnb)
                             lsb_available = True
-                    # Bit-width from the *slot-masked* demand (padding
-                    # slots must not promote an expert to high-bit in the
-                    # cost model; the jit-side use_lsb can't distinguish).
-                    if self.ecfg.fused_slices or mode == "highbit":
-                        bits = mat.high_bits
-                    elif mode in ("lowbit", "amat_static"):
-                        bits = mat.low_bits
-                    else:   # dbsc: high-bit iff both slices were fetched
-                        bits = mat.high_bits if lsb_available \
-                            else mat.low_bits
                     self.ledger.matmul(
                         int(tok_per_e[e]), self.cfg.d_model,
                         self.expert_macs_per_token // self.cfg.d_model,
-                        bits)
-                # Per-slot miss attribution: a slot is charged for every
-                # selection that landed on an expert whose slice(s) missed
-                # this layer-step.
-                for b in np.nonzero(slot_mask)[0]:
-                    sel = ids[period, pidx][b][active[period, pidx][b]]
-                    slot_accesses[b] += sel.size
-                    slot_misses[b] += int(missed_expert[sel].sum())
+                        self._expert_bits(lsb_available))
+                self._attribute_slot_misses(tr, period, pidx, missed_expert)
         # Non-expert resident weights: one pass per decode step, amortized
         # over every active sequence in the batch.
-        n_active_tokens = int(slot_mask.sum())
+        n_active_tokens = int(tr.slot_mask.sum())
         self.ledger.dram_read(self.resident_bytes)
         self.ledger.matmul(max(n_active_tokens, 1), self.cfg.d_model,
                            int(self.resident_bytes / self.cfg.d_model) + 1, 8)
-        return StepCharge(
-            miss_rate=misses / max(accesses, 1),
-            accesses=accesses,
-            misses=misses,
-            per_slot_miss=slot_misses / np.maximum(slot_accesses, 1),
-            ledger_delta=self.ledger.delta_since(base),
-        )
+        return self._step_charge(tr, base)
+
+    # ------------------------------------------- pipelined (async) replay
+    def _charge_async(self, tr: "_StepTrace") -> StepCharge:
+        """Event-timeline replay: the double-buffered layer pipeline.
+
+        Per flat layer (execution order):
+
+        1. the layer's routing is known once the previous layer's compute
+           drains (``t_route``); demand fills issue on the Flash channel
+           at that instant and each expert's DRAM read / matmul chain
+           follows its own data dependencies — expert ``e+1``'s fill
+           overlaps expert ``e``'s read and compute;
+        2. prefetch fills for the *next* layer (predicted from this
+           layer's routing, residency-filtered) are enqueued on the Flash
+           channel behind this layer's demand fills and marked in-flight
+           in the cache; a consumer that arrives before a prefetched
+           transfer lands stalls only for the remaining tail;
+        3. a prediction is **useful** iff its transfer landed before its
+           consuming layer started, **late** if demanded but still in
+           flight, **wasted** if never demanded (its Flash/DRAM energy is
+           attributed to ``prefetch_wasted_energy_j``).
+
+        The resident (non-expert) weight stream for the step is issued
+        once behind the expert reads and overlaps expert compute — the
+        double-buffering win the serialized model cannot express.
+        """
+        led = self.ledger
+        base = led.snapshot()
+        t_step = led.compute_ch.busy_until
+        prev_used = None
+        # prefetches in flight: key -> (ready_t, nbytes), per target layer
+        pending: dict = {}
+        for period in range(tr.P):
+            for pidx, pos in enumerate(self.moe_positions):
+                lidx = self.layer_map[(pos, period)]
+                t_route = max(t_step, led.compute_ch.busy_until)
+                flat_ids, flat_gates, msb_demand, lsb_wanted, tok_per_e = \
+                    self._layer_demand(tr, period, pidx)
+                self.tracker.observe(lidx, flat_ids, flat_gates)
+
+                # --- prefetch usefulness for THIS layer (issued at l-1),
+                # judged before demand charging mutates the cache.  The
+                # bar is t_route — when the consuming layer starts; a
+                # transfer still in flight then is late even though the
+                # consumer only waits out its tail.  A prediction whose
+                # slice was evicted before use saved nothing: wasted.
+                demanded = set(int(e) for e in msb_demand)
+                for key, (ready_t, p_nb) in pending.pop(lidx, {}).items():
+                    if key not in self.cache:     # evicted before use
+                        self.prefetcher.mark_wasted()
+                        led.mark_prefetch_wasted(p_nb)
+                    elif key.expert in demanded:
+                        if ready_t <= t_route:
+                            self.prefetcher.mark_useful()
+                        else:
+                            self.prefetcher.mark_late()
+                    else:
+                        self.prefetcher.mark_wasted()
+                        led.mark_prefetch_wasted(p_nb)
+
+                missed_expert = np.zeros(self.n_experts, bool)
+                for e in msb_demand:
+                    e = int(e)
+                    key = SliceKey(lidx, e, "msb")
+                    nb = self._slice_nbytes(key)
+                    hit = self.cache.access(key, nb)
+                    tr.accesses += 1
+                    if hit:
+                        # wait out an in-flight (prefetched) transfer
+                        t_data = max(t_route, self.cache.ready_time(key))
+                        _, t_data = led.dram_read_at(t_data, nb)
+                    else:
+                        tr.misses += 1
+                        missed_expert[e] = True
+                        if key in self.cache:       # fill landed
+                            _, fill_end = led.fill_at(t_route, nb)
+                            self.cache.mark_inflight(key, fill_end)
+                            _, t_data = led.dram_read_at(fill_end, nb)
+                        else:                       # dropped: direct stream
+                            _, t_data = led.flash_stream_at(t_route, nb)
+                    wants_lsb = e in lsb_wanted \
+                        and not self.ecfg.fused_slices
+                    lsb_available = False
+                    if wants_lsb:
+                        lkey = SliceKey(lidx, e, "lsb")
+                        lnb = self.store.slice_bytes(lkey)
+                        lhit = self.cache.access(
+                            lkey, lnb,
+                            fill_on_miss=self.ecfg.policy.fetch_lsb_on_miss)
+                        tr.accesses += 1
+                        if lhit:
+                            t_lsb = max(t_route, self.cache.ready_time(lkey))
+                            _, t_lsb = led.dram_read_at(t_lsb, lnb)
+                            t_data = max(t_data, t_lsb)
+                            lsb_available = True
+                        else:
+                            tr.misses += 1
+                            missed_expert[e] = True
+                            if self.ecfg.policy.fetch_lsb_on_miss:
+                                if lkey in self.cache:
+                                    _, lf_end = led.fill_at(t_route, lnb)
+                                    self.cache.mark_inflight(lkey, lf_end)
+                                    _, t_lsb = led.dram_read_at(lf_end, lnb)
+                                else:
+                                    _, t_lsb = led.flash_stream_at(
+                                        t_route, lnb)
+                                t_data = max(t_data, t_lsb)
+                                lsb_available = True
+                    led.matmul_at(
+                        t_data, int(tok_per_e[e]), self.cfg.d_model,
+                        self.expert_macs_per_token // self.cfg.d_model,
+                        self._expert_bits(lsb_available))
+                # --- learn + issue prefetch for the NEXT layer, behind
+                # this layer's demand fills on the Flash channel.
+                if self.prefetcher is not None:
+                    if prev_used is not None:
+                        self.prefetcher.observe(lidx, prev_used, flat_ids)
+                    prev_used = flat_ids
+                    if lidx + 1 < self.n_moe_layers:
+                        predicted = self.prefetcher.predict(
+                            lidx, flat_ids,
+                            resident=self._msb_resident_row(lidx + 1))
+                        n_issued = 0
+                        for e in predicted:
+                            key = SliceKey(lidx + 1, int(e), "msb")
+                            nb = self._slice_nbytes(key)
+                            if key in self.cache or nb > self.cache.capacity:
+                                continue
+                            _, end = led.fill_at(t_route, nb, prefetch=True)
+                            self.cache.insert(key, nb)
+                            self.cache.mark_inflight(key, end)
+                            pending.setdefault(lidx + 1, {})[key] = (end, nb)
+                            n_issued += 1
+                        self.prefetcher.mark_issued(n_issued)
+                self._attribute_slot_misses(tr, period, pidx, missed_expert)
+        # Every prefetch targets lidx+1 (< n_moe_layers), which always
+        # runs later in the same step and pops its pending entries — so
+        # issued == useful + late + wasted holds per step.
+        assert not pending, f"unconsumed prefetch bookkeeping: {pending}"
+        # Resident (non-expert) weights stream behind the expert reads
+        # and overlap expert compute; the dense step compute waits on them.
+        n_active_tokens = int(tr.slot_mask.sum())
+        _, res_ready = led.dram_read_at(t_step, self.resident_bytes)
+        led.matmul_at(res_ready, max(n_active_tokens, 1), self.cfg.d_model,
+                      int(self.resident_bytes / self.cfg.d_model) + 1, 8)
+        self.cache.settle(led.now)
+        return self._step_charge(tr, base)
 
 
 class SliceMoEEngine(PersistentEngine):

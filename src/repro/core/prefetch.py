@@ -13,11 +13,43 @@ of the next layer into DRAM before that layer executes.  Mispredictions
 cost real Flash reads (charged to the ledger) without saving future
 misses — exactly the failure mode the paper describes for
 diversity-regularized routers.
+
+On the asynchronous decode timeline (``EngineConfig.async_io``) each
+prediction becomes a fill issued on the Flash channel *behind* the
+current layer's demand fills; the engine classifies every issued
+prefetch into one of three outcomes:
+
+* **useful** — the predicted slice was demanded by its consuming layer
+  and its transfer landed before that layer started;
+* **late** — demanded, but the transfer was still in flight when the
+  layer needed it (the layer stalls on the tail of the transfer; some
+  latency is still hidden, but the paper's "before the layer starts"
+  usefulness bar is missed);
+* **wasted** — never demanded: pure Flash/DRAM energy burned
+  (``CostLedger.prefetch_wasted_energy_j``).
+
+Outcomes are judged against the *predicted consuming layer* (the next
+layer of the current step), the paper's §2.1 usefulness bar.  A
+"wasted" fill whose slice survives in the cache and serves a *later*
+step's demand shows up as an ordinary demand hit — that residual
+benefit is credited to the cache, not to the prefetcher, and its fill
+energy stays attributed as prefetch waste.
+
+Two fixes over the original implementation (both regression-tested):
+
+1. ``predict`` takes an optional **residency mask** — predicting an
+   expert that is already cached wastes a prefetch slot on a guaranteed
+   no-op, crowding out predictions that could actually save a miss;
+2. ties are broken by a **seeded random permutation** instead of
+   ``argsort``'s index order.  Under the uniform smoothing prior a cold
+   predictor used to emit experts ``0..m-1`` every time, systematically
+   (and invisibly) favoring low-numbered experts.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -28,14 +60,18 @@ class TransitionPrefetcher:
     n_experts: int
     top_m: int = 4
     smoothing: float = 0.1
+    seed: int = 0
 
     def __post_init__(self):
         # counts[l, i, j]: expert i used at layer l, expert j at layer l+1
         self.counts = np.full(
             (max(self.n_layers - 1, 1), self.n_experts, self.n_experts),
             self.smoothing)
+        self._rng = np.random.default_rng(self.seed)
         self.issued = 0
         self.useful = 0
+        self.late = 0
+        self.wasted = 0
 
     # --------------------------------------------------------------- learn
     def observe(self, layer: int, prev_experts: np.ndarray,
@@ -48,20 +84,59 @@ class TransitionPrefetcher:
         self.counts[layer - 1][np.ix_(pe, ce)] += 1.0
 
     # -------------------------------------------------------------- predict
-    def predict(self, layer: int, cur_experts: np.ndarray) -> np.ndarray:
-        """Top-m predicted experts for ``layer + 1``."""
-        if layer >= self.counts.shape[0]:
+    def predict(self, layer: int, cur_experts: np.ndarray,
+                resident: Optional[np.ndarray] = None) -> np.ndarray:
+        """Top-m predicted experts for ``layer + 1``.
+
+        ``resident``: optional ``[n_experts]`` bool mask of experts whose
+        target slice is already cached — they are excluded so every
+        returned prediction corresponds to a fill that could save a miss.
+        Score ties are broken by a seeded random permutation (drawn per
+        call, deterministic for a given construction seed and call
+        sequence), not by expert index.
+        """
+        # n_layers - 1, not counts.shape[0]: the counts buffer is floored
+        # to one transition matrix, so a 1-layer model would otherwise
+        # "predict" for a layer that does not exist.
+        if layer < 0 or layer >= self.n_layers - 1:
+            return np.empty(0, np.int64)
+        if cur_experts.size == 0:
             return np.empty(0, np.int64)
         ce = np.unique(cur_experts.reshape(-1))
         scores = self.counts[layer][ce].sum(axis=0)
-        return np.argsort(-scores)[: self.top_m]
+        candidates = np.arange(self.n_experts)
+        if resident is not None:
+            keep = ~np.asarray(resident, bool)
+            candidates = candidates[keep]
+            scores = scores[keep]
+        if candidates.size == 0:
+            return np.empty(0, np.int64)
+        perm = self._rng.permutation(candidates.size)
+        order = perm[np.argsort(-scores[perm], kind="stable")]
+        return candidates[order[: self.top_m]].astype(np.int64)
 
+    # ---------------------------------------------------------- accounting
     def mark_issued(self, n: int = 1) -> None:
         self.issued += n
 
     def mark_useful(self, n: int = 1) -> None:
         self.useful += n
 
+    def mark_late(self, n: int = 1) -> None:
+        self.late += n
+
+    def mark_wasted(self, n: int = 1) -> None:
+        self.wasted += n
+
     @property
     def accuracy(self) -> float:
         return self.useful / max(self.issued, 1)
+
+    def summary(self) -> dict:
+        return {
+            "issued": self.issued,
+            "useful": self.useful,
+            "late": self.late,
+            "wasted": self.wasted,
+            "accuracy": self.accuracy,
+        }

@@ -100,18 +100,21 @@ def pcw_reshape(cache: SliceCache, store: ExpertSliceStore,
     # 4) fill freed space with the hottest missing MSB slices (these bytes
     # were already streamed through DRAM during prefill; reshaping keeps
     # them instead of dropping them — no extra Flash traffic is charged).
+    # Every MSB slice is the same size, so the first one that doesn't fit
+    # ends the scan — no point walking the remaining L*E entries against
+    # a full cache.
     order = np.argsort(-flat)
     installed = 0
+    nb = store.msb_bytes_per_expert
     for idx in order:
+        if cache.used + nb > cache.capacity:
+            break
         lidx, e = divmod(int(idx), E)
         key = SliceKey(lidx, e, "msb")
-        nb = store.slice_bytes(key)
-        if key in cache or cache.used + nb > cache.capacity:
+        if key in cache:
             continue
         cache.insert(key, nb)
         installed += 1
-        if cache.used + store.msb_bytes_per_expert > cache.capacity:
-            break
 
     return {
         "evicted_lsb": len(evicted_lsb),

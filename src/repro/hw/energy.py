@@ -4,24 +4,54 @@ This is the cost model behind the paper's Figs. 9-10: every expert-slice
 transfer (Flash→DRAM on a miss, DRAM→XPU on use) and every expert matmul is
 accounted against the active :class:`~repro.hw.specs.SystemSpec`.
 
-The model is intentionally simple and auditable:
+The model is an **event timeline**: each hardware channel (Flash, DRAM,
+XPU compute) carries its own busy-until clock (:class:`ChannelTimeline`).
+An operation issued at time ``t`` starts at ``max(t, channel busy-until)``
+and occupies the channel for its transfer/compute duration, so a slice
+fill can genuinely overlap an expert matmul — total latency is the
+*makespan* ``max(channel busy-untils)``, not a sum of accumulators.
 
-* a *miss* on a slice of ``nbytes`` costs one Flash read (latency + energy)
-  plus one DRAM write,
+Two issue disciplines feed the timeline:
+
+* the **serialized** (legacy) methods — :meth:`CostLedger.miss_fill`,
+  :meth:`CostLedger.dram_read`, :meth:`CostLedger.matmul` — issue every
+  event at the current global frontier, so the makespan degenerates to
+  the sum of all durations (the paper's decode phase is bandwidth-bound,
+  i.e. misses serialize against compute).  With ``overlap_io_compute``
+  set, IO events chain only against the IO channels and compute against
+  the compute channel, degenerating to ``max(io, compute)`` (prefill).
+  Both reproduce the pre-timeline scalar-accumulator totals exactly.
+* the **event** methods — :meth:`CostLedger.fill_at`,
+  :meth:`CostLedger.dram_read_at`, :meth:`CostLedger.matmul_at` — take an
+  explicit data-dependency time, letting the engine pipeline per-expert
+  fill → read → matmul chains and issue asynchronous prefetch fills
+  behind demand fills on the Flash channel (``prefetch=True`` tags their
+  traffic separately).
+
+Energy is time-independent (every byte moved / MAC switched is charged
+when the event is recorded), so serialized and pipelined replays of the
+same trace agree on energy and disagree only on latency — which is the
+point: overlap hides latency, it does not un-spend energy.
+
+Cost conventions (unchanged from the scalar model):
+
+* a *miss* on a slice of ``nbytes`` costs one Flash read (latency +
+  energy) plus one DRAM write,
 * a *hit* (or post-fill use) costs one DRAM read into the XPU,
-* expert compute costs ``2 * tokens * d_in * d_out`` MAC-ops per matmul at
-  the XPU's int8 throughput; low-bit (MSB-only) compute gets a throughput
-  multiplier ``8 / bits`` reflecting the bit-serial/sliced PE design of the
-  paper's XPU,
-* DRAM and Flash transfers overlap compute only when
-  ``overlap_io_compute`` is set (the paper's decode phase is
-  bandwidth-bound, i.e. serialized on misses; prefill overlaps).
+* a *dropped* fill (slice larger than the cache — see
+  :meth:`~repro.core.cache.SliceCache.insert`) streams Flash→XPU
+  directly: Flash latency + energy, no DRAM write
+  (:meth:`CostLedger.flash_stream`),
+* expert compute costs ``2 * tokens * d_in * d_out`` MAC-ops per matmul
+  at the XPU's int8 throughput; low-bit (MSB-only) compute gets a
+  throughput multiplier ``8 / bits`` reflecting the bit-serial/sliced PE
+  design of the paper's XPU.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.hw.specs import SystemSpec, MOBILE_SOC
 
@@ -48,56 +78,174 @@ def expert_weight_step_bytes(n_codes: float, n_groups: float, *,
 
 
 @dataclasses.dataclass
+class ChannelTimeline:
+    """Busy-until clock for one hardware channel.
+
+    ``issue`` is the only mutator: an operation ready at ``t_ready``
+    starts when the channel frees up (FIFO — no preemption, matching a
+    DMA queue / systolic array that drains in issue order) and pushes
+    ``busy_until`` to its completion.  ``busy_s`` accumulates occupied
+    time, so ``busy_until - busy_s`` is the channel's total idle time.
+    """
+
+    name: str
+    busy_until: float = 0.0
+    busy_s: float = 0.0
+
+    def issue(self, t_ready: float, duration: float) -> Tuple[float, float]:
+        start = max(t_ready, self.busy_until)
+        end = start + duration
+        self.busy_until = end
+        self.busy_s += duration
+        return start, end
+
+    def reset(self) -> None:
+        self.busy_until = 0.0
+        self.busy_s = 0.0
+
+
+@dataclasses.dataclass
 class CostLedger:
-    """Accumulates latency and energy over a simulated inference run."""
+    """Event-timeline latency + energy ledger over a simulated run."""
 
     system: SystemSpec = dataclasses.field(default_factory=lambda: MOBILE_SOC)
     overlap_io_compute: bool = False
 
-    # accumulators
+    # energy / traffic accumulators (time-independent)
     flash_bytes: float = 0.0
     dram_bytes: float = 0.0
     compute_ops: float = 0.0
-    flash_latency_s: float = 0.0
-    dram_latency_s: float = 0.0
-    compute_latency_s: float = 0.0
+    flash_latency_s: float = 0.0       # per-channel duration sums (what a
+    dram_latency_s: float = 0.0        # fully serialized replay would
+    compute_latency_s: float = 0.0     # take; busy_s mirrors these)
     flash_energy_j: float = 0.0
     dram_energy_j: float = 0.0
     compute_energy_j: float = 0.0
     n_flash_transfers: int = 0
     n_dram_transfers: int = 0
 
-    # ---------------------------------------------------------------- events
-    def miss_fill(self, nbytes: float) -> None:
-        """Flash -> DRAM fill caused by a slice miss."""
+    # timeline state
+    flash_ch: ChannelTimeline = dataclasses.field(
+        default_factory=lambda: ChannelTimeline("flash"))
+    dram_ch: ChannelTimeline = dataclasses.field(
+        default_factory=lambda: ChannelTimeline("dram"))
+    compute_ch: ChannelTimeline = dataclasses.field(
+        default_factory=lambda: ChannelTimeline("compute"))
+    io_stall_s: float = 0.0            # compute idle time waiting on data
+
+    # asynchronous-prefetch traffic (a subset of the flash accumulators)
+    n_prefetch_fills: int = 0
+    prefetch_flash_bytes: float = 0.0
+    prefetch_wasted_energy_j: float = 0.0
+
+    # ------------------------------------------------------------ timeline
+    @property
+    def now(self) -> float:
+        """The timeline frontier: completion time of the latest event."""
+        return max(self.flash_ch.busy_until, self.dram_ch.busy_until,
+                   self.compute_ch.busy_until)
+
+    def _io_ready(self) -> float:
+        if self.overlap_io_compute:
+            return max(self.flash_ch.busy_until, self.dram_ch.busy_until)
+        return self.now
+
+    def _compute_ready(self) -> float:
+        if self.overlap_io_compute:
+            return self.compute_ch.busy_until
+        return self.now
+
+    # ------------------------------------------------- event API (timed)
+    def fill_at(self, t_ready: float, nbytes: float, *,
+                prefetch: bool = False,
+                dram_write: bool = True) -> Tuple[float, float]:
+        """Flash read issued once the demand (or prediction) is known at
+        ``t_ready``.  Returns the (start, end) span on the Flash channel;
+        the transferred slice is usable from ``end``.  ``dram_write``
+        distinguishes a Flash → DRAM fill (read + DRAM-write energy)
+        from a direct Flash → XPU stream (dropped fill, no DRAM write).
+        """
         sysspec = self.system
         self.flash_bytes += nbytes
         self.n_flash_transfers += 1
-        self.flash_latency_s += sysspec.flash.transfer_latency_s(nbytes)
-        # Flash read + DRAM write energy.
+        dur = sysspec.flash.transfer_latency_s(nbytes)
+        self.flash_latency_s += dur
         self.flash_energy_j += sysspec.flash.transfer_energy_j(nbytes)
-        self.dram_energy_j += sysspec.dram.transfer_energy_j(nbytes)
+        if dram_write:
+            self.dram_energy_j += sysspec.dram.transfer_energy_j(nbytes)
+        if prefetch:
+            self.n_prefetch_fills += 1
+            self.prefetch_flash_bytes += nbytes
+        return self.flash_ch.issue(t_ready, dur)
 
-    def dram_read(self, nbytes: float) -> None:
-        """DRAM -> XPU weight fetch (hit path or post-fill use)."""
+    def flash_stream_at(self, t_ready: float,
+                        nbytes: float) -> Tuple[float, float]:
+        """Flash → XPU direct stream for a slice the cache cannot hold
+        (dropped fill): Flash read latency + energy, no DRAM write."""
+        return self.fill_at(t_ready, nbytes, dram_write=False)
+
+    def dram_read_at(self, t_ready: float,
+                     nbytes: float) -> Tuple[float, float]:
+        """DRAM → XPU weight fetch, issued after its fill completes."""
         sysspec = self.system
         self.dram_bytes += nbytes
         self.n_dram_transfers += 1
-        self.dram_latency_s += sysspec.dram.transfer_latency_s(nbytes)
+        dur = sysspec.dram.transfer_latency_s(nbytes)
+        self.dram_latency_s += dur
         self.dram_energy_j += sysspec.dram.transfer_energy_j(nbytes)
+        return self.dram_ch.issue(t_ready, dur)
 
-    def matmul(self, tokens: int, d_in: int, d_out: int, bits: int) -> None:
-        """Expert (or dense) matmul at the given weight precision."""
+    def matmul_at(self, t_ready: float, tokens: int, d_in: int, d_out: int,
+                  bits: int) -> Tuple[float, float]:
+        """Expert (or dense) matmul whose weights are available at
+        ``t_ready``.  Time the compute channel sat idle waiting for that
+        data is charged to ``io_stall_s``."""
         sysspec = self.system
         ops = 2.0 * tokens * d_in * d_out
         native = sysspec.compute.native_precision_bits
         speedup = max(1.0, native / max(bits, 1))
+        dur = ops / (sysspec.compute.peak_ops_per_s * speedup)
         self.compute_ops += ops
-        self.compute_latency_s += ops / (sysspec.compute.peak_ops_per_s * speedup)
+        self.compute_latency_s += dur
         # Energy scales with switched bit-width on a bit-sliced PE array.
         self.compute_energy_j += (
             sysspec.compute.energy_j_per_op * ops * (min(bits, native) / native)
         )
+        self.io_stall_s += max(0.0, t_ready - self.compute_ch.busy_until)
+        return self.compute_ch.issue(t_ready, dur)
+
+    def mark_prefetch_wasted(self, nbytes: float) -> None:
+        """Attribute an already-charged prefetch fill as wasted: the
+        predicted slice was never demanded by (or landed too late for)
+        its consuming layer.  Informational — the Flash read + DRAM write
+        energy was spent at issue time and stays spent."""
+        sysspec = self.system
+        self.prefetch_wasted_energy_j += (
+            sysspec.flash.transfer_energy_j(nbytes)
+            + sysspec.dram.transfer_energy_j(nbytes))
+
+    # ---------------------------------------- serialized (legacy) events
+    def miss_fill(self, nbytes: float, *, prefetch: bool = False) -> None:
+        """Flash -> DRAM fill caused by a slice miss (blocking issue);
+        ``prefetch`` tags speculative fills in the traffic counters."""
+        self.fill_at(self._io_ready(), nbytes, prefetch=prefetch)
+
+    def flash_stream(self, nbytes: float) -> None:
+        """Direct Flash -> XPU stream for a dropped fill (blocking)."""
+        self.flash_stream_at(self._io_ready(), nbytes)
+
+    def dram_read(self, nbytes: float) -> None:
+        """DRAM -> XPU weight fetch (hit path or post-fill use)."""
+        self.dram_read_at(self._io_ready(), nbytes)
+
+    def matmul(self, tokens: int, d_in: int, d_out: int, bits: int) -> None:
+        """Expert (or dense) matmul at the given weight precision."""
+        t_ready = self._compute_ready()
+        # Serialized issue is a modeling choice, not a data dependency —
+        # don't let it masquerade as IO stall.
+        stall0 = self.io_stall_s
+        self.matmul_at(t_ready, tokens, d_in, d_out, bits)
+        self.io_stall_s = stall0
 
     # -------------------------------------------------------------- summary
     @property
@@ -105,10 +253,20 @@ class CostLedger:
         return self.flash_latency_s + self.dram_latency_s
 
     @property
-    def total_latency_s(self) -> float:
-        if self.overlap_io_compute:
-            return max(self.io_latency_s, self.compute_latency_s)
+    def serial_latency_s(self) -> float:
+        """What a fully serialized replay of the same events would take."""
         return self.io_latency_s + self.compute_latency_s
+
+    @property
+    def total_latency_s(self) -> float:
+        """Timeline makespan.  Equals ``serial_latency_s`` when every
+        event was issued through the serialized methods (no overlap)."""
+        return self.now
+
+    @property
+    def overlap_saved_s(self) -> float:
+        """Latency hidden by channel overlap (0 when fully serialized)."""
+        return max(0.0, self.serial_latency_s - self.total_latency_s)
 
     @property
     def total_energy_j(self) -> float:
@@ -123,26 +281,40 @@ class CostLedger:
             "dram_latency_s": self.dram_latency_s,
             "compute_latency_s": self.compute_latency_s,
             "total_latency_s": self.total_latency_s,
+            "serial_latency_s": self.serial_latency_s,
+            "overlap_saved_s": self.overlap_saved_s,
+            "io_stall_s": self.io_stall_s,
+            "flash_busy_s": self.flash_ch.busy_s,
+            "dram_busy_s": self.dram_ch.busy_s,
+            "compute_busy_s": self.compute_ch.busy_s,
             "flash_energy_j": self.flash_energy_j,
             "dram_energy_j": self.dram_energy_j,
             "compute_energy_j": self.compute_energy_j,
             "total_energy_j": self.total_energy_j,
             "n_flash_transfers": self.n_flash_transfers,
             "n_dram_transfers": self.n_dram_transfers,
+            "n_prefetch_fills": self.n_prefetch_fills,
+            "prefetch_flash_bytes": self.prefetch_flash_bytes,
+            "prefetch_wasted_energy_j": self.prefetch_wasted_energy_j,
         }
 
     def delta_since(self, prev: Optional[dict]) -> dict:
         cur = self.snapshot()
         if prev is None:
             return cur
-        return {k: cur[k] - prev[k] for k in cur}
+        return {k: cur[k] - prev.get(k, 0.0) for k in cur}
 
     def reset(self) -> None:
         for f in (
             "flash_bytes", "dram_bytes", "compute_ops",
             "flash_latency_s", "dram_latency_s", "compute_latency_s",
             "flash_energy_j", "dram_energy_j", "compute_energy_j",
+            "io_stall_s", "prefetch_flash_bytes",
+            "prefetch_wasted_energy_j",
         ):
             setattr(self, f, 0.0)
         self.n_flash_transfers = 0
         self.n_dram_transfers = 0
+        self.n_prefetch_fills = 0
+        for ch in (self.flash_ch, self.dram_ch, self.compute_ch):
+            ch.reset()

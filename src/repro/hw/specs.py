@@ -18,19 +18,29 @@ import dataclasses
 
 @dataclasses.dataclass(frozen=True)
 class MemoryTier:
-    """One tier of the offload hierarchy."""
+    """One tier of the offload hierarchy.
+
+    ``access_latency_s`` is a fixed per-transfer issue cost (command +
+    seek), paid once per transfer on top of the bandwidth term — the
+    knob that makes many small slice fills slower than one large fill on
+    the event timeline.  Both shipped profiles keep it at 0.0: the
+    paper's Fig. 7 bandwidth numbers are *effective* rates with access
+    overheads folded in, and the persisted Fig. 9-10 / benchmark
+    baselines are calibrated against them.
+    """
 
     name: str
     bandwidth_bytes_per_s: float
     energy_pj_per_bit: float
     capacity_bytes: float
+    access_latency_s: float = 0.0
 
     @property
     def energy_j_per_byte(self) -> float:
         return self.energy_pj_per_bit * 8 * 1e-12
 
     def transfer_latency_s(self, nbytes: float) -> float:
-        return nbytes / self.bandwidth_bytes_per_s
+        return self.access_latency_s + nbytes / self.bandwidth_bytes_per_s
 
     def transfer_energy_j(self, nbytes: float) -> float:
         return nbytes * self.energy_j_per_byte

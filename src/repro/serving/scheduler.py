@@ -70,8 +70,18 @@ class SchedulerConfig:
     max_queue: int = 64
     # Truncate prompts down to a multiple of this many tokens (0 = exact
     # lengths).  Bounds the number of distinct prefill jit traces under
-    # length-diverse workloads.
+    # length-diverse workloads.  Setting this is itself explicit consent
+    # to (up to bucket_prompts-1 tokens of) truncation — it applies to
+    # admitted prompts regardless of `truncate_prompts`, and clipped
+    # requests are flagged on telemetry either way.
     bucket_prompts: int = 0
+    # Admit over-budget prompts by clipping them to the KV budget
+    # (keeping the tail, recorded on telemetry as ``truncated``).  Off by
+    # default: the output for a clipped request is not the output for
+    # the full prompt, so silent truncation must be opted into —
+    # otherwise admission rejects any request whose full token budget
+    # (prompt + max_new_tokens) cannot fit under ``max_seq``.
+    truncate_prompts: bool = False
 
 
 @dataclasses.dataclass
@@ -110,8 +120,22 @@ class ContinuousBatchingScheduler:
 
     # --------------------------------------------------------------- intake
     def servable(self, req: Request) -> bool:
-        """Whether the request's token budget fits under the KV budget."""
-        return 1 <= req.max_new_tokens < self.engine.ecfg.max_seq - 1
+        """Whether the request's *full* token budget fits the KV budget.
+
+        Gates on ``len(prompt) + max_new_tokens``, not just the decode
+        budget — a long prompt admitted on ``max_new_tokens`` alone would
+        overflow its KV slot (or be silently truncated, which changes the
+        answer).  With ``truncate_prompts`` the prompt side is waived:
+        admission clips it to the budget and flags the request.
+        (``bucket_prompts`` rounding is a separate, explicit opt-in and
+        still applies to admitted prompts.)
+        """
+        max_seq = self.engine.ecfg.max_seq
+        if not 1 <= req.max_new_tokens < max_seq - 1:
+            return False
+        if self.cfg.truncate_prompts:
+            return True
+        return len(req.prompt) + req.max_new_tokens + 1 <= max_seq
 
     def submit(self, req: Request) -> bool:
         """Admission control: reject queue overflow and unservable sizes.
@@ -238,7 +262,11 @@ class ContinuousBatchingScheduler:
         self.telemetry.on_step(StepRecord(
             t=self.sim_time, n_active=len(active),
             miss_rate=charge.miss_rate, latency_s=step_latency,
-            energy_j=charge.ledger_delta["total_energy_j"]))
+            energy_j=charge.ledger_delta["total_energy_j"],
+            io_stall_s=max(0.0, charge.ledger_delta.get(
+                "io_stall_s", 0.0)),
+            overlap_saved_s=max(0.0, charge.ledger_delta.get(
+                "overlap_saved_s", 0.0))))
 
         for seq in active:
             tok = int(next_tokens[seq.slot])

@@ -109,8 +109,9 @@ class SliceMoEServer:
             if bad:
                 raise ValueError(
                     "unservable request(s) "
-                    f"{[r.request_id for r in bad]}: max_new_tokens must "
-                    f"satisfy 1 <= n < max_seq-1 (max_seq={self.max_seq})")
+                    f"{[r.request_id for r in bad]}: need 1 <= "
+                    "max_new_tokens and prompt_len + max_new_tokens + 1 "
+                    f"<= max_seq (max_seq={self.max_seq})")
             while self.queue:
                 sched.submit(self.queue.popleft())
             self.completions.extend(sched.run())

@@ -77,13 +77,23 @@ class RequestRecord:
 
 @dataclasses.dataclass
 class StepRecord:
-    """One batched decode step: fleet-level counters."""
+    """One batched decode step: fleet-level counters.
+
+    ``latency_s`` is the step's advance of the timeline makespan.  Under
+    the async slice-I/O timeline (``EngineConfig.async_io``) it is less
+    than the sum of the step's transfer/compute durations; the gap is
+    reported as ``overlap_saved_s`` (latency hidden by channel overlap)
+    while ``io_stall_s`` is the time the XPU sat idle waiting on slice
+    data this step.  Both are 0 under the serialized replay.
+    """
 
     t: float                 # simulated time at end of step
     n_active: int
     miss_rate: float         # expert-level fleet miss rate this step
     latency_s: float         # simulated step latency
     energy_j: float
+    io_stall_s: float = 0.0
+    overlap_saved_s: float = 0.0
 
 
 class FleetTelemetry:
@@ -153,6 +163,18 @@ class FleetTelemetry:
                 sum(s.n_active for s in self.steps) / len(self.steps)
                 if self.steps else 0.0),
         }
+        # Decode stall/overlap breakdown (async timeline; both 0 when
+        # the engine replays serialized).
+        decode_s = sum(s.latency_s for s in self.steps)
+        stall_s = sum(s.io_stall_s for s in self.steps)
+        saved_s = sum(s.overlap_saved_s for s in self.steps)
+        out["decode_io_stall_s"] = stall_s
+        out["decode_overlap_saved_s"] = saved_s
+        out["decode_io_stall_frac"] = (
+            stall_s / decode_s if decode_s > 0 else 0.0)
+        out["decode_overlap_saved_frac"] = (
+            saved_s / (decode_s + saved_s) if decode_s + saved_s > 0
+            else 0.0)
         if total_energy_j is not None:
             out["energy_per_token_j"] = (
                 total_energy_j / n_tokens if n_tokens else float("nan"))

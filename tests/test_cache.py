@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.cache import SliceCache
+from repro.core.cache import SliceCache, SliceTooLargeError
 from repro.core.slices import SliceKey
 
 
@@ -34,10 +34,41 @@ class TestBasics:
         c.access(MSB(0, 3), 10)        # evicts 1 (LRU)
         assert MSB(0, 0) in c and MSB(0, 1) not in c
 
-    def test_oversized_item_rejected(self):
+    def test_oversized_insert_raises(self):
+        """An oversized fill must be *signalled*, not silently dropped —
+        ``[]`` used to be indistinguishable from "already resident"."""
         c = SliceCache(5)
-        c.insert(MSB(0, 0), 10)
+        with pytest.raises(SliceTooLargeError):
+            c.insert(MSB(0, 0), 10)
         assert MSB(0, 0) not in c and c.used == 0
+
+    def test_oversized_access_counts_drop(self):
+        """``access(fill_on_miss=True)`` swallows the drop but counts it,
+        so callers (and epochs) can see fills that never landed."""
+        c = SliceCache(5)
+        assert not c.access(MSB(0, 0), 10)
+        assert MSB(0, 0) not in c
+        assert c.stats.n_dropped == 1 and c.stats.msb_misses == 1
+        assert not c.access(MSB(0, 0), 10)      # still a miss, still drops
+        assert c.stats.n_dropped == 2
+
+    def test_inflight_ready_times(self):
+        """In-flight fill state: ready times survive until settled or the
+        entry is evicted."""
+        c = SliceCache(20)
+        c.insert(MSB(0, 0), 10)
+        c.mark_inflight(MSB(0, 0), ready_t=3.5)
+        assert c.ready_time(MSB(0, 0)) == 3.5
+        assert c.ready_time(MSB(0, 1)) == 0.0       # nothing in flight
+        c.settle(now=2.0)                           # still flying
+        assert c.ready_time(MSB(0, 0)) == 3.5
+        c.settle(now=3.5)                           # landed
+        assert c.ready_time(MSB(0, 0)) == 0.0
+        c.mark_inflight(MSB(0, 0), ready_t=9.0)
+        c.insert(MSB(0, 1), 10)
+        c.insert(MSB(0, 2), 10)                     # evicts MSB(0, 0)
+        assert MSB(0, 0) not in c
+        assert c.ready_time(MSB(0, 0)) == 0.0       # record went with it
 
 
 class TestDBSCPolicy:

@@ -4,6 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# interpret-mode Pallas kernels: runs in the CI 'slow' job (pytest -m slow), not the fast tier-1 gate.
+pytestmark = pytest.mark.slow
 from hypothesis import given, settings, strategies as st
 
 from repro.core.amat import PAPER_CONFIGS, amat_quantize

@@ -6,6 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# jitted MoE end-to-end paths: runs in the CI 'slow' job (pytest -m slow), not the fast tier-1 gate.
+pytestmark = pytest.mark.slow
 from hypothesis import given, settings, strategies as st
 
 from repro.core.amat import MAT84, amat_quantize

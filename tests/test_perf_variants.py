@@ -12,6 +12,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# perf-variant sweeps: runs in the CI 'slow' job (pytest -m slow), not the fast tier-1 gate.
+pytestmark = pytest.mark.slow
+
 from repro.core.amat import MatConfig
 from repro.configs.base import get_config
 from repro.models.model import (decode_step, forward, init_params, prefill,

@@ -9,6 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# scheduler + engine end-to-end: runs in the CI 'slow' job (pytest -m slow), not the fast tier-1 gate.
+pytestmark = pytest.mark.slow
+
 from repro.configs.base import get_config
 from repro.core.amat import MatConfig
 from repro.core.engine import EngineConfig, PersistentEngine
@@ -179,6 +182,50 @@ class TestScheduler:
         done = sched.run()
         assert len(done) == 2
         assert sched.summary()["n_rejected"] == 2
+
+    def test_long_prompt_rejected_by_full_token_budget(self, moe_setup):
+        """Regression: admission used to gate on max_new_tokens alone, so
+        a long prompt sailed through ``servable`` and only survived by
+        being silently truncated.  The gate must consider the *full*
+        budget (prompt + new tokens) against max_seq."""
+        cfg, params = moe_setup
+        engine = PersistentEngine(cfg, params, _ecfg())   # max_seq=64
+        sched = ContinuousBatchingScheduler(
+            engine, SchedulerConfig(max_batch=1, max_queue=8))
+        long_prompt = np.random.default_rng(0).integers(
+            0, cfg.vocab_size, 60).astype(np.int32)
+        bad = Request(request_id=0, prompt=long_prompt, max_new_tokens=8)
+        assert not sched.servable(bad)
+        assert not sched.submit(bad)
+        ok = Request(request_id=1, prompt=long_prompt[:50],
+                     max_new_tokens=8)                    # 50+8+1 <= 64
+        assert sched.submit(ok)
+        done = sched.run()
+        assert [c.request_id for c in done] == [1]
+        assert len(done[0].tokens) == 8
+        assert not done[0].metrics["prompt_truncated"]
+        # the KV slot never overflowed its budget
+        assert int(np.asarray(sched.batch_cache["pos"]).max()) \
+            <= engine.ecfg.max_seq
+
+    def test_truncate_prompts_opt_in(self, moe_setup):
+        """With ``truncate_prompts`` the same long prompt is admitted,
+        clipped to the KV budget (tail kept) and flagged."""
+        cfg, params = moe_setup
+        engine = PersistentEngine(cfg, params, _ecfg())
+        sched = ContinuousBatchingScheduler(
+            engine, SchedulerConfig(max_batch=1, max_queue=8,
+                                    truncate_prompts=True))
+        long_prompt = np.random.default_rng(0).integers(
+            0, cfg.vocab_size, 60).astype(np.int32)
+        req = Request(request_id=0, prompt=long_prompt, max_new_tokens=8)
+        assert sched.submit(req)
+        done = sched.run()
+        assert len(done) == 1 and len(done[0].tokens) == 8
+        assert done[0].metrics["prompt_truncated"]
+        assert sched.telemetry.requests[0].truncated
+        assert int(np.asarray(sched.batch_cache["pos"]).max()) \
+            <= engine.ecfg.max_seq
 
     def test_unservable_request_rejected_not_fatal(self, moe_setup):
         """A request whose token budget can't fit under max_seq must be

@@ -13,6 +13,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# every architecture smoke-compiled: runs in the CI 'slow' job (pytest -m slow), not the fast tier-1 gate.
+pytestmark = pytest.mark.slow
+
 from repro.configs.base import ARCH_IDS, REPRO_IDS, get_config
 from repro.models import model as MDL
 from repro.optim import adamw as OPT

@@ -8,6 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# full-system integration: runs in the CI 'slow' job (pytest -m slow), not the fast tier-1 gate.
+pytestmark = pytest.mark.slow
+
 from repro.configs.base import get_config
 from repro.core.amat import MatConfig
 from repro.core.engine import EngineConfig, SliceMoEEngine

@@ -1,0 +1,246 @@
+"""Event-timeline ledger: channel clocks, overlap invariants, async decode.
+
+Property tests (hypothesis, with the seeded fallback shim) pin down the
+timeline algebra:
+
+* the makespan is at least every single channel's total occupancy and at
+  most the fully serialized latency,
+* the serialized (legacy) issue discipline reproduces the scalar
+  accumulator model exactly (``total == io + compute``),
+* the makespan is monotone in transfer sizes,
+* pipelined and serialized replays of the same event trace spend
+  identical energy (overlap hides latency, it does not un-spend joules),
+
+plus integration coverage: the async engine replay beats the serialized
+one on decode latency at identical energy, and prefetch outcomes
+partition into useful/late/wasted.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import SliceCache
+from repro.core.slices import SliceKey
+from repro.hw.energy import ChannelTimeline, CostLedger
+
+
+# ==========================================================================
+# ChannelTimeline basics
+# ==========================================================================
+class TestChannelTimeline:
+    def test_fifo_and_busy_accounting(self):
+        ch = ChannelTimeline("flash")
+        s0, e0 = ch.issue(0.0, 2.0)
+        assert (s0, e0) == (0.0, 2.0)
+        # issued "ready" at t=1 but the channel is busy until 2
+        s1, e1 = ch.issue(1.0, 3.0)
+        assert (s1, e1) == (2.0, 5.0)
+        # a late-ready op opens an idle gap
+        s2, e2 = ch.issue(10.0, 1.0)
+        assert (s2, e2) == (10.0, 11.0)
+        assert ch.busy_s == 6.0 and ch.busy_until == 11.0
+
+
+# ==========================================================================
+# Ledger property tests
+# ==========================================================================
+_OP = st.tuples(st.integers(0, 2),        # 0=fill, 1=dram read, 2=matmul
+                st.integers(1, 10_000),   # nbytes (or tokens for matmul)
+                st.booleans())            # chain onto the previous op's end
+_OPS = st.lists(_OP, min_size=1, max_size=40)
+
+
+def _replay_events(ops):
+    """Pipelined replay: each op optionally depends on the previous end."""
+    led = CostLedger()
+    t = 0.0
+    for kind, size, chain in ops:
+        t_ready = t if chain else 0.0
+        if kind == 0:
+            _, t = led.fill_at(t_ready, float(size))
+        elif kind == 1:
+            _, t = led.dram_read_at(t_ready, float(size))
+        else:
+            _, t = led.matmul_at(t_ready, int(size), 8, 8, 8)
+    return led
+
+
+def _replay_serialized(ops):
+    led = CostLedger()
+    for kind, size, _chain in ops:
+        if kind == 0:
+            led.miss_fill(float(size))
+        elif kind == 1:
+            led.dram_read(float(size))
+        else:
+            led.matmul(int(size), 8, 8, 8)
+    return led
+
+
+class TestLedgerProperties:
+    @settings(max_examples=60, deadline=None)
+    @given(ops=_OPS)
+    def test_makespan_bounds(self, ops):
+        led = _replay_events(ops)
+        total = led.total_latency_s
+        # >= every channel's own occupancy (nothing preempts)
+        assert total >= led.flash_ch.busy_s - 1e-15
+        assert total >= led.dram_ch.busy_s - 1e-15
+        assert total >= led.compute_ch.busy_s - 1e-15
+        assert total >= max(led.flash_latency_s, led.dram_latency_s,
+                            led.compute_latency_s) - 1e-15
+        # <= the fully serialized replay (overlap can only help)
+        assert total <= led.serial_latency_s + 1e-12
+        assert led.overlap_saved_s >= 0.0
+
+    @settings(max_examples=60, deadline=None)
+    @given(ops=_OPS)
+    def test_serialized_equals_sum(self, ops):
+        """Legacy (blocking) issue must reproduce the scalar model:
+        total latency == io + compute accumulator sums, no overlap."""
+        led = _replay_serialized(ops)
+        assert led.total_latency_s == pytest.approx(
+            led.io_latency_s + led.compute_latency_s, rel=1e-12)
+        assert led.overlap_saved_s == pytest.approx(0.0, abs=1e-15)
+        assert led.io_stall_s == 0.0
+
+    @settings(max_examples=60, deadline=None)
+    @given(ops=_OPS, idx=st.integers(0, 1_000_000),
+           scale=st.integers(2, 8))
+    def test_monotone_in_bytes(self, ops, idx, scale):
+        """Growing any one transfer never shrinks the makespan."""
+        base = _replay_events(ops).total_latency_s
+        i = idx % len(ops)
+        kind, size, chain = ops[i]
+        grown = list(ops)
+        grown[i] = (kind, size * scale, chain)
+        assert _replay_events(grown).total_latency_s >= base - 1e-12
+
+    @settings(max_examples=60, deadline=None)
+    @given(ops=_OPS)
+    def test_energy_independent_of_schedule(self, ops):
+        """Overlap hides latency but never un-spends energy."""
+        pipelined = _replay_events(ops)
+        serialized = _replay_serialized(ops)
+        assert pipelined.total_energy_j == pytest.approx(
+            serialized.total_energy_j, rel=1e-12)
+        assert pipelined.flash_bytes == serialized.flash_bytes
+        assert pipelined.dram_bytes == serialized.dram_bytes
+        assert pipelined.compute_ops == serialized.compute_ops
+
+    def test_overlap_io_compute_legacy_mode(self):
+        """overlap_io_compute=True degenerates to max(io, compute)."""
+        led = CostLedger(overlap_io_compute=True)
+        led.miss_fill(1e6)
+        led.matmul(4, 1024, 1024, 8)
+        led.dram_read(1e6)
+        assert led.total_latency_s == pytest.approx(
+            max(led.io_latency_s, led.compute_latency_s), rel=1e-12)
+
+
+# ==========================================================================
+# Epoch-level warm-vs-cold miss-rate curve
+# ==========================================================================
+_KEYS = st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7),
+                           st.booleans()),
+                 min_size=1, max_size=60)
+
+
+class TestEpochCurve:
+    @settings(max_examples=40, deadline=None)
+    @given(trace=_KEYS)
+    def test_warm_epoch_misses_less(self, trace):
+        """Replaying the identical key trace against persistent contents:
+        the warm epoch's miss rate is strictly below the cold epoch's
+        (which is > 0: first touch of each distinct key must miss)."""
+        c = SliceCache(1e12)          # no eviction pressure
+        for label in ("cold", "warm"):
+            c.begin_epoch(label)
+            for layer, expert, is_lsb in trace:
+                key = SliceKey(layer, expert, "lsb" if is_lsb else "msb")
+                c.access(key, 10.0)
+        c.end_epoch()
+        rates = dict(c.epoch_miss_rates())
+        assert rates["cold"] > 0.0
+        assert rates["warm"] == 0.0
+        # and the archive preserves epoch order
+        assert [label for label, _ in c.epoch_miss_rates()] == \
+            ["cold", "warm"]
+
+
+# ==========================================================================
+# Async engine replay (integration)
+# ==========================================================================
+@pytest.fixture(scope="module")
+def tiny_moe():
+    from repro.configs.base import get_config
+    from repro.models.model import init_params
+
+    cfg = get_config("qwen15-moe-repro")
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _decode_totals(cfg, params, **over):
+    from repro.core.amat import MatConfig
+    from repro.core.engine import EngineConfig, SliceMoEEngine
+    from repro.models.moe import RoutingPolicy
+
+    base = dict(
+        mat=MatConfig(8, 4), cache_bytes=2.5e6,
+        policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc"),
+        miss_rate_target=0.1, warmup="pcw", max_seq=64)
+    base.update(over)
+    eng = SliceMoEEngine(cfg, params, EngineConfig(**base))
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (1, 16), 0,
+                                cfg.vocab_size)
+    logits = eng.prefill(prompt)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+    _, metrics = eng.decode(first, 6)
+    return eng, metrics["decode_totals"]
+
+
+@pytest.mark.slow
+class TestAsyncEngineReplay:
+    def test_async_faster_same_energy(self, tiny_moe):
+        """The tentpole claim at engine level: the pipelined replay of
+        the identical decode trace finishes earlier than the serialized
+        one and spends exactly the same energy and bytes."""
+        cfg, params = tiny_moe
+        _, sync = _decode_totals(cfg, params, async_io=False)
+        _, asyn = _decode_totals(cfg, params, async_io=True)
+        assert asyn["total_latency_s"] < sync["total_latency_s"], \
+            (asyn["total_latency_s"], sync["total_latency_s"])
+        for k in ("total_energy_j", "flash_bytes", "dram_bytes",
+                  "compute_ops"):
+            assert asyn[k] == pytest.approx(sync[k], rel=1e-12), k
+        # the serialized replay reports no overlap; the async one does
+        assert sync["overlap_saved_s"] == pytest.approx(0.0, abs=1e-15)
+        assert asyn["overlap_saved_s"] > 0.0
+
+    def test_async_prefetch_outcomes_partition(self, tiny_moe):
+        """Every issued prefetch is classified exactly once: useful,
+        late, or wasted — and wasted energy is attributed."""
+        cfg, params = tiny_moe
+        eng, totals = _decode_totals(cfg, params, async_io=True,
+                                     prefetch_top_m=4)
+        pf = eng.prefetcher
+        assert pf.issued > 0
+        assert pf.issued == pf.useful + pf.late + pf.wasted, pf.summary()
+        assert totals["n_prefetch_fills"] == pf.issued
+        if pf.wasted:
+            assert totals["prefetch_wasted_energy_j"] > 0.0
+
+    def test_async_miss_accounting_matches_sync(self, tiny_moe):
+        """Hit/miss bookkeeping is schedule-independent: the async replay
+        of the same trace reports the same miss counts (prefetch off)."""
+        cfg, params = tiny_moe
+        eng_s, _ = _decode_totals(cfg, params, async_io=False)
+        eng_a, _ = _decode_totals(cfg, params, async_io=True)
+        assert eng_a.cache.stats.snapshot() == eng_s.cache.stats.snapshot()
