@@ -126,6 +126,25 @@ class SliceCache:
         return [(label, CacheStats(**snap).miss_rate)
                 for label, snap in self.epochs]
 
+    def epoch_counts(self) -> List[Tuple[str, int, int]]:
+        """[(label, accesses, misses)] over archived epochs.
+
+        The raw integer counts behind :meth:`epoch_miss_rates` — what the
+        trace-replay fidelity gate compares exactly (rates alone can
+        agree by coincidence while the underlying counts differ).
+        """
+        return [(label, CacheStats(**snap).accesses,
+                 CacheStats(**snap).misses)
+                for label, snap in self.epochs]
+
+    def clone(self) -> "SliceCache":
+        """Deep copy of the full cache state (contents, recency order,
+        stats windows, in-flight fills).  Used by the replay simulator to
+        fork a simulation mid-trace without disturbing the original."""
+        import copy
+
+        return copy.deepcopy(self)
+
     # ----------------------------------------------------------- internals
     def _segment(self, key: SliceKey) -> "OrderedDict[SliceKey, float]":
         if not self.slice_aware:

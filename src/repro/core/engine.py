@@ -164,6 +164,10 @@ class PersistentEngine:
         self.ledger = CostLedger(system=SYSTEM_PROFILES[ecfg.system])
         self.tracker = HotnessTracker(self.n_moe_layers, self.n_experts)
         self.requests_served = 0
+        # Optional routing-trace recorder (repro.sim.trace.TraceRecorder):
+        # when attached, every prefill's and decode step's routing arrays
+        # are captured so the run can be replayed offline without a model.
+        self.recorder = None
 
         # moe pattern positions in order (matches aux stacking order)
         self.moe_positions = [i for i, s in enumerate(cfg.block_pattern)
@@ -304,6 +308,27 @@ class PersistentEngine:
         batching — where admissions arrive many per request *completed* —
         accumulated hotness doesn't collapse with arrival rate.
         """
+        self._begin_request(label, inflight)
+
+        logits, kv_cache, aux = self._jit_prefill(
+            self.qparams, tokens=tokens, **model_kwargs)
+
+        ids = np.asarray(aux["moe"]["ids"])      # [n_periods, n_moe_pos, T, k]
+        gates = np.asarray(aux["moe"]["gates"]).astype(np.float64)
+        if self.recorder is not None:
+            self.recorder.on_prefill(ids, gates, label=label,
+                                     inflight=inflight)
+        self._charge_prefill(ids, gates)
+        info = self._finish_prefill(label)
+        return logits, kv_cache, info
+
+    # The three pieces below are the *model-free* half of prefill: they
+    # consume only routing arrays plus cache/ledger/tracker state, so the
+    # trace-replay simulator (repro.sim.replay) can drive them from a
+    # recorded or synthetic trace with zero JAX involvement while staying
+    # bit-identical to the live path above.
+    def _begin_request(self, label: Optional[str], inflight: int) -> None:
+        """Request-boundary bookkeeping: hotness aging + stats epoch."""
         if self.requests_served > 0:
             decay = self.ecfg.hotness_request_decay \
                 ** (1.0 / (1.0 + max(inflight, 0)))
@@ -312,12 +337,12 @@ class PersistentEngine:
         if label is not None:
             self.cache.begin_epoch(f"{label}/prefill")
 
-        logits, kv_cache, aux = self._jit_prefill(
-            self.qparams, tokens=tokens, **model_kwargs)
+    def _charge_prefill(self, ids: np.ndarray, gates: np.ndarray) -> None:
+        """Replay one prompt's layer-streaming fills + compute charges.
 
-        ids = np.asarray(aux["moe"]["ids"])      # [n_periods, n_moe_pos, T, k]
-        gates = np.asarray(aux["moe"]["gates"]).astype(np.float64)
-
+        ``ids``/``gates``: the prefill routing trace
+        ``[n_periods, n_moe_pos, T, k]``.
+        """
         # Layer-order streaming: for each flat moe layer (in execution
         # order), every expert selected by >=1 token is loaded high-bit.
         for period in range(ids.shape[0]):
@@ -343,6 +368,8 @@ class PersistentEngine:
                                    self.expert_macs_per_token // self.cfg.d_model,
                                    self.ecfg.mat.high_bits)
 
+    def _finish_prefill(self, label: Optional[str]) -> dict:
+        """Prefill→decode transition: warmup reshape + epoch rollover."""
         # Transition: PCW or a baseline init state.
         if self.ecfg.warmup == "pcw":
             warmup_summary = pcw_reshape(
@@ -356,8 +383,7 @@ class PersistentEngine:
             self.cache.begin_epoch(f"{label}/decode")
         else:
             self.cache.stats.reset()
-        info = {"warmup": warmup_summary, "snapshot": snapshot}
-        return logits, kv_cache, info
+        return {"warmup": warmup_summary, "snapshot": snapshot}
 
     # -------------------------------------------------------------- decode
     def _policy_state(self):
@@ -425,9 +451,21 @@ class PersistentEngine:
           ride the Flash channel behind demand fills, and only the layer
           that actually consumes a late slice stalls.
         """
+        return self.charge_step_trace(_StepTrace.from_aux(aux, slot_active))
+
+    def charge_step_trace(self, tr: "_StepTrace") -> StepCharge:
+        """Charge an already-assembled :class:`_StepTrace`.
+
+        This is the model-free entry point shared by the live engine
+        (which builds the trace from the jit aux) and the trace-replay
+        simulator (which builds it from a recorded or synthetic routing
+        trace) — both run the *identical* cache/ledger replay below.
+        """
+        if self.recorder is not None:
+            self.recorder.on_decode(tr)
         replay = self._charge_async if self.ecfg.async_io \
             else self._charge_sync
-        return replay(_StepTrace.from_aux(aux, slot_active))
+        return replay(tr)
 
     # -------------------------------------------------- shared replay bits
     def _slice_nbytes(self, key: SliceKey) -> float:

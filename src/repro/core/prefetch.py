@@ -115,6 +115,14 @@ class TransitionPrefetcher:
         order = perm[np.argsort(-scores[perm], kind="stable")]
         return candidates[order[: self.top_m]].astype(np.int64)
 
+    def clone(self) -> "TransitionPrefetcher":
+        """Deep copy (transition counts, rng state, outcome counters) so a
+        forked replay simulation keeps an independent predictor whose tie
+        -break stream continues deterministically from the fork point."""
+        import copy
+
+        return copy.deepcopy(self)
+
     # ---------------------------------------------------------- accounting
     def mark_issued(self, n: int = 1) -> None:
         self.issued += n

@@ -65,6 +65,12 @@ class HotnessTracker:
         self.counts *= decay
         self.gate_mass *= decay
 
+    def clone(self) -> "HotnessTracker":
+        """Deep copy (counts + gate mass) for forked replay simulations."""
+        import copy
+
+        return copy.deepcopy(self)
+
     def hotness(self) -> np.ndarray:
         """[L, E] combined score: frequency + gate mass."""
         c = self.counts / max(self.counts.max(), 1e-9)

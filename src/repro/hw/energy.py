@@ -298,6 +298,16 @@ class CostLedger:
             "prefetch_wasted_energy_j": self.prefetch_wasted_energy_j,
         }
 
+    def clone(self) -> "CostLedger":
+        """Deep copy of the full ledger (accumulators + channel clocks).
+
+        Lets the replay simulator fork a timeline mid-trace: the clone
+        continues issuing events independently of the original, so two
+        futures of the same simulated past can be compared."""
+        import copy
+
+        return copy.deepcopy(self)
+
     def delta_since(self, prev: Optional[dict]) -> dict:
         cur = self.snapshot()
         if prev is None:

@@ -4,6 +4,16 @@ Boots a model (fresh-init or checkpoint), wraps it in the SliceMoE server
 and runs a batch of synthetic requests through the full offload-simulated
 pipeline, printing per-request latency/energy — the end-to-end example of
 the paper's deployment scenario.
+
+Trace tooling (repro.sim):
+
+* ``--record-trace PATH`` — additionally capture the served traffic's
+  routing trace (``.npz`` or ``.jsonl``) for offline replay/autotuning.
+* ``--replay-trace PATH`` — skip the model entirely: replay a recorded
+  trace through the model-free simulator under THIS command line's
+  engine knobs (``--cache-mb``, ``--miss-target``, ``--warmup``,
+  ``--slice-mode``, ``--high-bits``/``--low-bits``, ``--routing``,
+  ``--theta``) and print the simulated report as JSON.
 """
 
 from __future__ import annotations
@@ -23,15 +33,69 @@ from repro.models.model import init_params
 from repro.serving.server import Request, SliceMoEServer
 
 
+# One CLI-flag -> engine-knob mapping serves both the live path (with
+# defaults applied) and the replay path (explicitly-passed flags only,
+# so an untouched flag replays the trace's *recorded* value).  Flags
+# default to None in argparse; the live defaults live here.
+DEFAULT_KNOBS = {
+    "high_bits": 8, "low_bits": 4, "cache_bytes": 4.0e6,
+    "policy_kind": "cache_prior", "slice_mode": "dbsc", "theta": 0.5,
+    "miss_rate_target": 0.05, "warmup": "pcw",
+}
+
+
+def cli_engine_knobs(args) -> dict:
+    """Engine knob values from the CLI; None where the flag was unset."""
+    return {
+        "high_bits": args.high_bits,
+        "low_bits": args.low_bits,
+        "cache_bytes": (None if args.cache_mb is None
+                        else args.cache_mb * 1e6),
+        "policy_kind": args.routing,
+        "slice_mode": args.slice_mode,
+        "theta": args.theta,
+        "miss_rate_target": args.miss_target,
+        "warmup": args.warmup,
+    }
+
+
 def build_engine_config(args) -> EngineConfig:
+    k = {key: (DEFAULT_KNOBS[key] if v is None else v)
+         for key, v in cli_engine_knobs(args).items()}
     return EngineConfig(
-        mat=MatConfig(args.high_bits, args.low_bits),
-        cache_bytes=args.cache_mb * 1e6,
-        policy=RoutingPolicy(kind=args.routing, slice_mode=args.slice_mode,
-                             theta=args.theta),
-        miss_rate_target=args.miss_target,
-        warmup=args.warmup,
+        mat=MatConfig(k["high_bits"], k["low_bits"]),
+        cache_bytes=k["cache_bytes"],
+        policy=RoutingPolicy(kind=k["policy_kind"],
+                             slice_mode=k["slice_mode"],
+                             theta=k["theta"]),
+        miss_rate_target=k["miss_rate_target"],
+        warmup=k["warmup"],
     )
+
+
+def run_replay(args) -> None:
+    """Model-free path: replay a recorded trace.
+
+    Knobs the user passed explicitly override the trace's recorded
+    config; everything else replays as recorded — so a bare
+    ``--replay-trace t.npz`` reproduces the live run exactly.
+    """
+    from repro.sim import Trace, replay_trace
+
+    trace = Trace.load(args.replay_trace)
+    overrides = {key: v for key, v in cli_engine_knobs(args).items()
+                 if v is not None}
+    report = replay_trace(trace, **overrides)
+    out = {
+        "trace": args.replay_trace,
+        "model": trace.meta.model,
+        "overrides": overrides,
+        **report.summary(),
+        "epoch_miss": [
+            {"epoch": label, "miss_rate": round(m, 6)}
+            for label, m in report.epoch_miss],
+    }
+    print(json.dumps(out, indent=2))
 
 
 def main():
@@ -42,19 +106,34 @@ def main():
     ap.add_argument("--n-requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--cache-mb", type=float, default=4.0)
-    ap.add_argument("--routing", default="cache_prior",
+    # Engine knobs default to None so the replay path can tell "flag
+    # passed" from "defaulted"; live serving applies DEFAULT_KNOBS.
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="DRAM cache budget in MB (live default 4.0)")
+    ap.add_argument("--routing", default=None,
                     choices=["topk", "cache_prior", "cumsum"])
-    ap.add_argument("--slice-mode", default="dbsc",
+    ap.add_argument("--slice-mode", default=None,
                     choices=["dbsc", "highbit", "lowbit", "amat_static"])
-    ap.add_argument("--warmup", default="pcw",
+    ap.add_argument("--warmup", default=None,
                     choices=["pcw", "empty", "last_layer", "random"])
-    ap.add_argument("--high-bits", type=int, default=8)
-    ap.add_argument("--low-bits", type=int, default=4)
-    ap.add_argument("--theta", type=float, default=0.5)
-    ap.add_argument("--miss-target", type=float, default=0.05)
+    ap.add_argument("--high-bits", type=int, default=None)
+    ap.add_argument("--low-bits", type=int, default=None)
+    ap.add_argument("--theta", type=float, default=None)
+    ap.add_argument("--miss-target", type=float, default=None,
+                    help="miss-rate constraint (live default 0.05)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--record-trace", default=None, metavar="PATH",
+                    help="save the served traffic's routing trace "
+                         "(.npz or .jsonl) for offline replay")
+    ap.add_argument("--replay-trace", default=None, metavar="PATH",
+                    help="model-free: replay a recorded trace under this "
+                         "command line's engine knobs and print the "
+                         "simulated report (no model is built)")
     args = ap.parse_args()
+
+    if args.replay_trace:
+        run_replay(args)
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -70,6 +149,12 @@ def main():
         cfg, params,
         engine_cfg=build_engine_config(args) if cfg.has_moe else None,
         max_seq=max_seq)
+
+    recorder = None
+    if args.record_trace:
+        from repro.sim import TraceRecorder
+
+        recorder = server.attach_recorder(TraceRecorder())
 
     rng = np.random.default_rng(args.seed)
     for rid in range(args.n_requests):
@@ -95,6 +180,13 @@ def main():
                 / max(c.metrics["cache_stats"]["msb_hits"]
                       + c.metrics["cache_stats"]["msb_misses"], 1), 4)
         print(json.dumps(line))
+
+    if recorder is not None:
+        tr = recorder.trace()
+        path = tr.save(args.record_trace)
+        print(json.dumps({"recorded_trace": path,
+                          "n_prefills": tr.n_prefills,
+                          "n_decode_steps": tr.n_decode_steps}))
 
 
 if __name__ == "__main__":

@@ -118,6 +118,17 @@ class ContinuousBatchingScheduler:
         self.sim_time = 0.0
         self._ledger_mark = engine.ledger.total_latency_s
 
+    def attach_recorder(self, recorder):
+        """Wire a :class:`repro.sim.trace.TraceRecorder` into the engine.
+
+        The engine hooks capture the replayable routing arrays; the
+        scheduler additionally annotates each prefill event with the
+        request id and tenant (which only it knows), so offline replays
+        can be segmented per request / per tenant.  Returns the recorder
+        for chaining.
+        """
+        return recorder.attach(self.engine)
+
     # --------------------------------------------------------------- intake
     def servable(self, req: Request) -> bool:
         """Whether the request's *full* token budget fits the KV budget.
@@ -209,6 +220,9 @@ class ContinuousBatchingScheduler:
         logits, kv_cache, _info = self.engine.run_prefill(
             jnp.asarray(prompt)[None], label=label,
             inflight=self.n_active())
+        if self.engine.recorder is not None:
+            self.engine.recorder.annotate_prefill(
+                request_id=req.request_id, tenant=req.tenant)
         wall = time.perf_counter() - t0
         self._advance_clock()
 

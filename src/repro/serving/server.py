@@ -76,9 +76,24 @@ class SliceMoEServer:
         self.queue: Deque[Request] = deque()
         self.completions: List[Completion] = []
         self._engine: Optional[PersistentEngine] = None
+        self._recorder = None
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def attach_recorder(self, recorder):
+        """Record the served traffic's routing trace (persistent MoE
+        serving only — a fresh-engine-per-request run has no single
+        engine whose state a trace could replay against).  The recorder
+        wires into the shared engine as soon as it exists."""
+        if not (self._moe_serving() and self.persistent):
+            raise ValueError("trace recording requires persistent MoE "
+                             "serving (has_moe + engine_cfg + "
+                             "persistent=True)")
+        self._recorder = recorder
+        if self._engine is not None:
+            recorder.attach(self._engine)
+        return recorder
 
     def _moe_serving(self) -> bool:
         return self.cfg.has_moe and self.engine_cfg is not None
@@ -95,6 +110,8 @@ class SliceMoEServer:
             ecfg = dataclasses.replace(self.engine_cfg,
                                        max_seq=self.max_seq)
             self._engine = PersistentEngine(self.cfg, self.params, ecfg)
+            if self._recorder is not None:
+                self._recorder.attach(self._engine)
         return self._engine
 
     def run(self) -> List[Completion]:

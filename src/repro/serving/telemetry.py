@@ -125,6 +125,19 @@ class FleetTelemetry:
         """Fleet miss rate per decode step, in execution order."""
         return [s.miss_rate for s in self.steps]
 
+    def energy_curve(self) -> List[float]:
+        """Per-decode-step ledger energy, in execution order.
+
+        With :meth:`miss_rate_curve`, this is the live half of the
+        trace-replay fidelity gate: a replayed trace must reproduce both
+        step-by-step (see benchmarks/sim_fidelity.py).
+        """
+        return [s.energy_j for s in self.steps]
+
+    def latency_curve(self) -> List[float]:
+        """Per-decode-step simulated latency, in execution order."""
+        return [s.latency_s for s in self.steps]
+
     def steady_state_miss_rate(self, skip_frac: float = 0.5) -> float:
         """Mean fleet miss rate over the trailing (1-skip_frac) of steps."""
         curve = self.miss_rate_curve()

@@ -33,13 +33,20 @@ from repro.serving.scheduler import Request
 
 @dataclasses.dataclass(frozen=True)
 class LengthDist:
-    """Integer length distribution: 'fixed' | 'uniform' | 'lognormal'."""
+    """Integer length distribution: 'fixed' | 'uniform' | 'lognormal'.
+
+    ``max_len`` bounds the lognormal's unbounded upper tail (a rare
+    multi-sigma draw used to exceed the scheduler's prompt+max_new
+    budget and get the whole request rejected at admission).  ``None``
+    keeps the tail unbounded.
+    """
 
     kind: str = "fixed"
     value: int = 32              # fixed: the value; lognormal: the median
     low: int = 8                 # uniform bounds
     high: int = 64
     sigma: float = 0.4           # lognormal shape
+    max_len: Optional[int] = None  # upper clip for unbounded draws
 
     def sample(self, rng: np.random.Generator) -> int:
         if self.kind == "fixed":
@@ -49,7 +56,7 @@ class LengthDist:
         if self.kind == "lognormal":
             x = rng.lognormal(mean=np.log(max(self.value, 1)),
                               sigma=self.sigma)
-            return int(np.clip(round(x), 1, None))
+            return int(np.clip(round(x), 1, self.max_len))
         raise ValueError(f"unknown length dist {self.kind!r}")
 
 
@@ -148,7 +155,8 @@ def scenario(name: str, *, n_requests: int = 16, rate: float = 2.0,
     chat = TenantSpec(
         name="chat", weight=3.0,
         prompt_len=LengthDist("uniform", low=12, high=48),
-        output_len=LengthDist("lognormal", value=16, sigma=0.5))
+        output_len=LengthDist("lognormal", value=16, sigma=0.5,
+                              max_len=64))
     summarize = TenantSpec(
         name="summarize", weight=1.0,
         prompt_len=LengthDist("uniform", low=32, high=64),

@@ -1,0 +1,345 @@
+"""Trace-driven simulator: round-tripping, seeding, replay, autotune.
+
+Fast tests run model-free (synthetic traces, numpy-only replay); the
+live-engine fidelity gate — record from a real PersistentEngine, replay,
+compare exactly — is marked slow like the other engine integrations.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving.workloads import (LengthDist, TenantSpec,
+                                     WorkloadConfig)
+from repro.sim import (ReplayEngine, SyntheticSpec, Trace, TraceRecorder,
+                       phase_shift_trace, replay_trace, tenant_mix_trace,
+                       traces_equal, transition_trace, zipf_trace)
+from repro.sim import autotune as at
+from repro.sim.replay import engine_config_from_meta
+
+SPEC = SyntheticSpec(n_moe_layers=3, n_experts=12, top_k=2)
+
+
+def small_trace(seed=0, **kw):
+    kw.setdefault("n_requests", 3)
+    kw.setdefault("prompt_len", 6)
+    kw.setdefault("decode_steps", 10)
+    return zipf_trace(SPEC, seed=seed, **kw)
+
+
+# --------------------------------------------------------------------------
+# synthetic generators
+# --------------------------------------------------------------------------
+def test_synthetic_seeding_deterministic():
+    a, b = small_trace(seed=7), small_trace(seed=7)
+    assert traces_equal(a, b)
+    assert not traces_equal(a, small_trace(seed=8))
+
+
+def test_phase_shift_changes_hotness():
+    tr = phase_shift_trace(SPEC, phases=2, requests_per_phase=1,
+                           prompt_len=4, decode_steps=40, seed=0)
+    # expert histograms of the two phases should differ materially
+    half = len(tr.events) // 2
+    def hist(events):
+        ids = np.concatenate([e.ids.reshape(-1) for e in events])
+        return np.bincount(ids, minlength=SPEC.n_experts)
+    h1, h2 = hist(tr.events[:half]), hist(tr.events[half:])
+    # cosine similarity below that of a stationary stream split in half
+    cos = h1 @ h2 / (np.linalg.norm(h1) * np.linalg.norm(h2))
+    st = small_trace(seed=0, n_requests=2, decode_steps=40)
+    s1 = hist(st.events[:len(st.events) // 2])
+    s2 = hist(st.events[len(st.events) // 2:])
+    cos_st = s1 @ s2 / (np.linalg.norm(s1) * np.linalg.norm(s2))
+    assert cos < cos_st
+
+
+def test_tenant_mix_reuses_workload_distributions():
+    wl = WorkloadConfig(
+        kind="closed_loop", n_requests=40, seed=3,
+        tenants=(TenantSpec(name="chat", weight=3.0,
+                            output_len=LengthDist("fixed", 4)),
+                 TenantSpec(name="sum", weight=1.0,
+                            output_len=LengthDist("fixed", 4))))
+    tr = tenant_mix_trace(SPEC, workload=wl)
+    tenants = [e.tenant for e in tr.events if e.kind == "prefill"]
+    assert len(tenants) == 40
+    frac_chat = tenants.count("chat") / len(tenants)
+    assert 0.55 <= frac_chat <= 0.92      # 3:1 mix within tolerance
+    # identical seed => identical stream
+    assert traces_equal(tr, tenant_mix_trace(SPEC, workload=wl))
+
+
+def test_transition_structure_is_prefetchable():
+    """Markov routing must be materially more prefetchable than Zipf.
+
+    A tiny cache keeps the predictor's residency filter out of the
+    comparison (with a warm cache, correctly-predicted hot experts are
+    resident, so the prefetch slot is spent elsewhere and 'accuracy'
+    measures the cache, not the routing structure)."""
+    kw = dict(n_requests=2, prompt_len=8, decode_steps=100, seed=0)
+    structured = transition_trace(SPEC, hot_targets=1,
+                                  concentration=0.95, **kw)
+    random_ish = zipf_trace(SPEC, **kw)
+    accs = {}
+    for name, tr in (("markov", structured), ("zipf", random_ish)):
+        rep = replay_trace(tr, prefetch_top_m=2, warmup="empty",
+                           cache_bytes=0.05 * SPEC.store_bytes())
+        accs[name] = rep.prefetch["accuracy"]
+    assert accs["markov"] > accs["zipf"] + 0.1, accs
+
+
+# --------------------------------------------------------------------------
+# serialization
+# --------------------------------------------------------------------------
+def test_roundtrip_npz_jsonl_parity(tmp_path):
+    tr = small_trace(seed=5)
+    p_npz = tr.save(str(tmp_path / "t.npz"))
+    p_jsonl = tr.save(str(tmp_path / "t.jsonl"))
+    a, b = Trace.load(p_npz), Trace.load(p_jsonl)
+    assert traces_equal(tr, a)
+    assert traces_equal(a, b)
+    # replay determinism across formats and across repeated replays
+    reps = [replay_trace(x) for x in (tr, a, b, tr)]
+    for r in reps[1:]:
+        assert r.ledger == reps[0].ledger
+        assert r.miss_curve == reps[0].miss_curve
+        assert r.epoch_counts == reps[0].epoch_counts
+
+
+def test_save_unknown_extension_raises(tmp_path):
+    with pytest.raises(ValueError):
+        small_trace().save(str(tmp_path / "t.csv"))
+
+
+# --------------------------------------------------------------------------
+# replay
+# --------------------------------------------------------------------------
+def test_replay_epoch_structure():
+    tr = small_trace(n_requests=2)
+    rep = replay_trace(tr)
+    labels = [label for label, _a, _m in rep.epoch_counts]
+    assert labels == ["req0/prefill", "req0/decode",
+                      "req1/prefill", "req1/decode"]
+    assert rep.n_prefills == 2
+    assert rep.n_decode_steps == 20
+    assert len(rep.miss_curve) == 20
+    assert rep.decode_accesses > 0
+
+
+def test_replay_warm_cache_beats_cold_warmup():
+    tr = small_trace(n_requests=4, decode_steps=20)
+    warm = replay_trace(tr)                       # pcw default
+    cold = replay_trace(tr, warmup="empty")
+    assert warm.decode_miss_rate < cold.decode_miss_rate
+    assert warm.total_energy_j < cold.total_energy_j
+
+
+def test_replay_capacity_monotone():
+    tr = small_trace(n_requests=3, decode_steps=20)
+    base = tr.meta.engine["cache_bytes"]
+    misses = [replay_trace(tr, cache_bytes=base * s).decode_miss_rate
+              for s in (0.5, 1.0, 4.0)]
+    assert misses[0] >= misses[1] >= misses[2]
+    assert misses[0] > misses[2]
+
+
+def test_replay_bit_plan_changes_bytes():
+    tr = small_trace()
+    mat84 = replay_trace(tr)
+    mat63 = replay_trace(tr, high_bits=6, low_bits=3)
+    assert mat63.ledger["flash_bytes"] < mat84.ledger["flash_bytes"]
+
+
+def test_replay_engine_rejects_live_api():
+    eng = ReplayEngine(small_trace().meta)
+    with pytest.raises(TypeError):
+        eng.run_prefill(None)
+    with pytest.raises(TypeError):
+        eng.decode_batch(None, None)
+
+
+def test_engine_config_from_meta_rejects_unknown_knob():
+    meta = small_trace().meta
+    with pytest.raises(KeyError):
+        engine_config_from_meta(meta, cache_byte=1e6)   # typo'd knob
+    with pytest.raises(KeyError):
+        SPEC.meta(not_a_knob=1)
+
+
+def test_clone_forks_are_isolated():
+    tr = small_trace(n_requests=4, decode_steps=12)
+    cut = len(tr.events) // 2
+    eng = ReplayEngine(tr.meta)
+    eng.consume_all(tr.events[:cut])
+    fork = eng.clone()
+    # both futures replay the same remainder -> identical reports...
+    rep_a = eng.consume_all(tr.events[cut:]).finish()
+    rep_b = fork.consume_all(tr.events[cut:]).finish()
+    assert rep_a.ledger == rep_b.ledger
+    assert rep_a.miss_curve == rep_b.miss_curve
+    assert rep_a.epoch_counts == rep_b.epoch_counts
+    # ...and match an unforked straight-through replay exactly
+    rep_c = replay_trace(tr)
+    assert rep_a.ledger == rep_c.ledger
+    assert rep_a.miss_curve == rep_c.miss_curve
+    # diverging one fork must not disturb the other (state isolation)
+    fork2 = ReplayEngine(tr.meta)
+    fork2.consume_all(tr.events[:cut])
+    fork3 = fork2.clone()
+    before = fork2.ledger.snapshot()
+    fork3.consume_all(tr.events[cut:])
+    assert fork2.ledger.snapshot() == before
+
+
+# --------------------------------------------------------------------------
+# autotune
+# --------------------------------------------------------------------------
+def test_grid_cartesian_product():
+    g = at.grid(cache_bytes=[1e6, 2e6], warmup=["pcw", "empty"],
+                async_io=[False, True])
+    assert len(g) == 8
+    assert {frozenset(d.items()) for d in g} == \
+        {frozenset(d.items()) for d in g}          # all distinct
+    assert all(set(d) == {"cache_bytes", "warmup", "async_io"} for d in g)
+
+
+def test_sweep_pareto_and_slo():
+    tr = small_trace(n_requests=3, decode_steps=16)
+    base = tr.meta.engine["cache_bytes"]
+    policies = [{}] + at.grid(cache_bytes=[base * 2, base * 6],
+                              warmup=["pcw", "empty"])
+    results = at.sweep(tr, policies)
+    assert len(results) == 5
+    frontier = at.pareto_frontier(results)
+    assert frontier
+    # no frontier member may dominate another
+    for a in frontier:
+        for b in frontier:
+            if a is b:
+                continue
+            assert not (a.energy_j <= b.energy_j
+                        and a.latency_s <= b.latency_s
+                        and a.miss_rate <= b.miss_rate
+                        and (a.energy_j < b.energy_j
+                             or a.latency_s < b.latency_s
+                             or a.miss_rate < b.miss_rate))
+    slo = sorted(r.miss_rate for r in results)[2]  # attainable SLO
+    best = at.best_under_slo(results, slo)
+    assert best is not None and best.miss_rate <= slo
+    assert all(best.energy_j <= r.energy_j for r in results
+               if r.meets_slo(slo))
+
+
+def test_successive_halving_resume_is_exact():
+    """A halving survivor's metrics equal a from-scratch full replay —
+    the resumed state is the state, not an approximation."""
+    tr = small_trace(n_requests=4, decode_steps=12)
+    base = tr.meta.engine["cache_bytes"]
+    policies = [("small", {"cache_bytes": base * 0.5}),
+                ("default", {}),
+                ("big", {"cache_bytes": base * 4}),
+                ("big-empty", {"cache_bytes": base * 4,
+                               "warmup": "empty"})]
+    halved = at.sweep(tr, policies, successive_halving=True,
+                      min_frac=0.25)
+    assert len(halved) == 4
+    full = {r.name: r for r in at.sweep(tr, policies)}
+    for r in halved:
+        if r.partial:
+            assert r.events_consumed < len(tr.events)
+            continue
+        assert r.events_consumed == len(tr.events)
+        assert r.energy_j == full[r.name].energy_j
+        assert r.miss_rate == full[r.name].miss_rate
+    assert any(not r.partial for r in halved)
+
+
+# --------------------------------------------------------------------------
+# workloads satellite: bounded lognormal draws
+# --------------------------------------------------------------------------
+def test_lengthdist_lognormal_max_len_clips_tail():
+    rng = np.random.default_rng(0)
+    heavy = LengthDist("lognormal", value=32, sigma=3.0, max_len=48)
+    draws = [heavy.sample(rng) for _ in range(500)]
+    assert max(draws) <= 48 and min(draws) >= 1
+    # the same tail unbounded demonstrably exceeds the budget
+    rng = np.random.default_rng(0)
+    unbounded = LengthDist("lognormal", value=32, sigma=3.0)
+    assert max(unbounded.sample(rng) for _ in range(500)) > 48
+
+
+def test_lengthdist_max_len_keeps_requests_servable():
+    """Regression: with max_len under the scheduler budget, no generated
+    request can exceed prompt+max_new; before, a tail draw could."""
+    from repro.serving.workloads import generate
+
+    wl = WorkloadConfig(
+        kind="closed_loop", n_requests=64, seed=1,
+        tenants=(TenantSpec(
+            prompt_len=LengthDist("lognormal", value=24, sigma=2.0,
+                                  max_len=32),
+            output_len=LengthDist("lognormal", value=8, sigma=2.0,
+                                  max_len=15)),))
+    for r in generate(wl, vocab_size=128):
+        assert len(r.prompt) + r.max_new_tokens + 1 <= 48
+
+
+# --------------------------------------------------------------------------
+# live fidelity gate (slow: real engine + jit)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("async_io,prefetch",
+                         [(False, None), (True, 4)])
+def test_live_record_replay_fidelity(async_io, prefetch, tmp_path):
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.core.amat import MatConfig
+    from repro.core.engine import EngineConfig, PersistentEngine
+    from repro.models.model import init_params
+    from repro.models.moe import RoutingPolicy
+    from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                         SchedulerConfig)
+    from repro.serving.workloads import generate
+
+    cfg = dataclasses.replace(get_config("qwen15-moe-repro"), n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = PersistentEngine(cfg, params, EngineConfig(
+        mat=MatConfig(8, 4), cache_bytes=1.0e6,
+        policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc"),
+        miss_rate_target=0.1, warmup="pcw", max_seq=64,
+        async_io=async_io, prefetch_top_m=prefetch))
+    sched = ContinuousBatchingScheduler(
+        engine, SchedulerConfig(max_batch=2, max_queue=8))
+    rec = sched.attach_recorder(TraceRecorder())
+    wl = WorkloadConfig(
+        kind="closed_loop", n_requests=3, seed=0,
+        tenants=(TenantSpec(prompt_len=LengthDist("fixed", 12),
+                            output_len=LengthDist("fixed", 6)),))
+    for r in generate(wl, cfg.vocab_size):
+        sched.submit(r)
+    sched.run()
+
+    trace = rec.trace()
+    assert trace.n_prefills == 3
+    # request ids + tenants annotated by the scheduler
+    pf = [e for e in trace.events if e.kind == "prefill"]
+    assert sorted(e.request_id for e in pf) == [0, 1, 2]
+
+    # round trip through disk, then replay: exact live reproduction
+    loaded = Trace.load(trace.save(str(tmp_path / "live.npz")))
+    rep = replay_trace(loaded)
+    assert rep.miss_curve == sched.telemetry.miss_rate_curve()
+    assert rep.energy_curve == sched.telemetry.energy_curve()
+    assert rep.epoch_counts == engine.cache.epoch_counts()
+    live = engine.ledger.snapshot()
+    for key in ("total_energy_j", "total_latency_s", "flash_bytes",
+                "dram_bytes", "compute_ops", "n_flash_transfers",
+                "n_prefetch_fills"):
+        a, b = rep.ledger[key], live[key]
+        assert a == b or abs(a - b) <= 1e-6 * max(abs(a), abs(b)), \
+            (key, a, b)
+    if prefetch:
+        assert rep.prefetch == engine.prefetcher.summary()
