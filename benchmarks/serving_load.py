@@ -63,13 +63,14 @@ MAX_SEQ = 64
 
 
 def _engine_cfg(quant_execution: bool = False, *, async_io: bool = False,
-                prefetch_top_m=None) -> EngineConfig:
+                prefetch_top_m=None, ep_shards: int = 1) -> EngineConfig:
     return EngineConfig(
         mat=MatConfig(8, 4), cache_bytes=CACHE_BYTES,
         policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc",
                              quant_execution=quant_execution),
         miss_rate_target=0.1, warmup="pcw", max_seq=MAX_SEQ,
-        async_io=async_io, prefetch_top_m=prefetch_top_m)
+        async_io=async_io, prefetch_top_m=prefetch_top_m,
+        ep_shards=ep_shards)
 
 
 def _workload(n_requests: int, seed: int, *, kind: str = "closed_loop",
@@ -87,9 +88,10 @@ def _workload(n_requests: int, seed: int, *, kind: str = "closed_loop",
 def run_cell(cfg, params, *, max_batch: int, n_requests: int,
              kind: str = "closed_loop", rate: float = 2.0,
              quant_execution: bool = False, async_io: bool = False,
-             prefetch_top_m=None):
+             prefetch_top_m=None, ep_shards: int = 1):
     engine = PersistentEngine(cfg, params, _engine_cfg(
-        quant_execution, async_io=async_io, prefetch_top_m=prefetch_top_m))
+        quant_execution, async_io=async_io, prefetch_top_m=prefetch_top_m,
+        ep_shards=ep_shards))
     sched = ContinuousBatchingScheduler(
         engine, SchedulerConfig(max_batch=max_batch,
                                 max_queue=n_requests + 1))
@@ -182,6 +184,16 @@ def _check_against_baseline(payload: dict, *, quick: bool,
         cur = payload["warm_vs_cold"].get(k)
         if cur is None or not _close(v, cur):
             mismatches.append(("warm_vs_cold", k, v, cur))
+    # EP scaling rows are deterministic too: gate them like the
+    # serialized cells (scalar metrics only).
+    for ep, row in prev.get("ep_scaling", {}).items():
+        cur_row = payload.get("ep_scaling", {}).get(ep)
+        for k, v in row.items():
+            if not isinstance(v, (int, float)):
+                continue
+            cur = None if cur_row is None else cur_row.get(k)
+            if cur is None or not _close(v, cur):
+                mismatches.append((f"ep_scaling[{ep}]", k, v, cur))
     assert not mismatches, \
         f"serialized path diverged from persisted baseline: {mismatches}"
     print(f"baseline check: serialized cells reproduce {path} "
@@ -323,6 +335,55 @@ def main(quick: bool = False) -> None:
           "faster than serialized at identical energy, prefetch mostly "
           "wasted under stochastic routing")
 
+    print("\n=== expert-parallel sharding: ep ∈ {1, 2, 4} ===")
+    # Same saturated workload and async timeline; the only variable is
+    # how many shards the experts (and their DRAM slice caches +
+    # Flash/DRAM channels) are partitioned across.  Shard timelines
+    # progress independently, so per-token latency drops with ep while
+    # the all-to-all token dispatch shows up as interconnect bytes and
+    # energy (charged, reported, and zero at ep=1).
+    ep_values = [1, 2] if quick else [1, 2, 4]
+    ep_rows = {}
+    for ep in ep_values:
+        s, eng = run_cell(cfg, params, max_batch=mb_async,
+                          n_requests=n_requests, async_io=True,
+                          ep_shards=ep)
+        snap = eng.ledger.snapshot()
+        ep_rows[ep] = {
+            "throughput_tok_per_s": s["throughput_tok_per_s"],
+            "per_token_p50_s": s["per_token_p50_s"],
+            "energy_per_token_j": s["energy_per_token_j"],
+            "steady_miss_rate": s["steady_state_miss_rate"],
+            "ici_bytes": snap["ici_bytes"],
+            "ici_energy_j": snap["ici_energy_j"],
+        }
+        if s.get("per_shard"):
+            ep_rows[ep]["per_shard_miss"] = [
+                round(r["miss_rate"], 4) for r in s["per_shard"]]
+        sink.add(f"ep[{ep}]", mb_async, s["throughput_tok_per_s"],
+                 s["ttft_p50_s"], s["ttft_p95_s"], s["per_token_p50_s"],
+                 s["steady_state_miss_rate"], s["energy_per_token_j"],
+                 s["mean_batch_occupancy"])
+        extra = "" if ep == 1 else (
+            f"  a2a={snap['ici_bytes']/1e6:.2f} MB "
+            f"({snap['ici_energy_j']*1e3:.4f} mJ)  "
+            f"shard_miss={ep_rows[ep].get('per_shard_miss')}")
+        print(f"{'ep=' + str(ep):>12}: "
+              f"{s['throughput_tok_per_s']:8.1f} tok/s  "
+              f"per-token p50={s['per_token_p50_s']*1e6:7.1f} us  "
+              f"E/tok={s['energy_per_token_j']*1e3:.4f} mJ{extra}")
+    # Acceptance: shard-parallel timelines must beat the single-device
+    # run on per-token p50 latency, with all-to-all charged at ep > 1
+    # (and never charged at ep = 1).
+    assert ep_rows[1]["ici_bytes"] == 0.0, ep_rows[1]
+    for ep in ep_values[1:]:
+        assert ep_rows[ep]["per_token_p50_s"] \
+            < ep_rows[1]["per_token_p50_s"], (ep, ep_rows)
+        assert ep_rows[ep]["ici_bytes"] > 0 \
+            and ep_rows[ep]["ici_energy_j"] > 0, (ep, ep_rows)
+    print("claims verified: per-token p50 improves at every ep > 1, "
+          "all-to-all bytes/energy charged and reported")
+
     print("\n=== dense-dequant vs quantized-execution expert FFN ===")
     # Same workload/scheduler; the only variable is whether the jitted
     # steps materialize dense expert weights or run the batched-expert
@@ -368,6 +429,7 @@ def main(quick: bool = False) -> None:
         "dense_vs_quant_execution": dict(
             qe_rows, weight_bytes_reduction_x=reduction),
         "sync_vs_async_timeline": timeline_rows,
+        "ep_scaling": {str(ep): row for ep, row in ep_rows.items()},
     }
     _check_against_baseline(payload, quick=quick)
     if not quick:

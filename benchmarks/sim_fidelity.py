@@ -39,6 +39,7 @@ import json
 import time
 
 import jax
+import numpy as np
 
 from benchmarks.common import BENCH_DIR, RESULTS, json_record, report
 from repro.configs.base import get_config
@@ -50,7 +51,8 @@ from repro.serving.scheduler import (ContinuousBatchingScheduler,
                                      SchedulerConfig)
 from repro.serving.workloads import (LengthDist, TenantSpec,
                                      WorkloadConfig, generate)
-from repro.sim import Trace, TraceRecorder, replay_trace, traces_equal
+from repro.sim import (ReplayEngine, Trace, TraceRecorder, replay_trace,
+                       traces_equal)
 from repro.sim import autotune as at
 
 ARCH = "qwen15-moe-repro"
@@ -61,16 +63,18 @@ MAX_SEQ = 64
 MISS_SLO = 0.05
 
 
-def _engine_cfg() -> EngineConfig:
-    return EngineConfig(
+def _engine_cfg(**overrides) -> EngineConfig:
+    kw = dict(
         mat=MatConfig(8, 4), cache_bytes=CACHE_BYTES,
         policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc"),
         miss_rate_target=0.1, warmup="pcw", max_seq=MAX_SEQ)
+    kw.update(overrides)
+    return EngineConfig(**kw)
 
 
-def _record_live(cfg, params, n_requests: int):
+def _record_live(cfg, params, n_requests: int, **ecfg_overrides):
     """Serve a closed-loop workload live, recording its routing trace."""
-    engine = PersistentEngine(cfg, params, _engine_cfg())
+    engine = PersistentEngine(cfg, params, _engine_cfg(**ecfg_overrides))
     sched = ContinuousBatchingScheduler(
         engine, SchedulerConfig(max_batch=1, max_queue=n_requests + 1))
     rec = sched.attach_recorder(TraceRecorder())
@@ -92,6 +96,9 @@ def _record_live(cfg, params, n_requests: int):
         "miss_curve": sched.telemetry.miss_rate_curve(),
         "energy_curve": sched.telemetry.energy_curve(),
         "epoch_counts": engine.cache.epoch_counts(),
+        "per_shard_epoch_counts": (
+            engine.cache.per_shard_epoch_counts()
+            if hasattr(engine.cache, "per_shard_epoch_counts") else None),
         "ledger": engine.ledger.snapshot(),
         "wall_s": wall,
         "steps_per_s": len(sched.telemetry.steps) / decode_wall,
@@ -115,7 +122,8 @@ def _check_against_baseline(payload: dict, *, quick: bool,
     if prev.get("n_requests") != payload["n_requests"]:
         return                      # different sweep size, incomparable
     mismatches = []
-    for section in ("default_replay", "best_under_slo"):
+    for section in ("default_replay", "best_under_slo", "cumsum_replay",
+                    "ep2_replay"):
         for k, v in prev.get(section, {}).items():
             cur = payload[section].get(k)
             if isinstance(v, (int, float)) and (
@@ -177,6 +185,60 @@ def main(quick: bool = False) -> None:
     assert ratio >= 100.0, \
         f"replay only {ratio:.1f}x live (acceptance needs >= 100x)"
 
+    # --- charge-path variant gates: the PR-5 charge fixes (prefill
+    # active masking under cumsum, EP sharding) must keep live and
+    # simulated accounting identical under the configs that exercise
+    # them — otherwise the two paths silently fork.
+    n_small = 2 if quick else 3
+
+    print("\n=== cumsum-routing fidelity (prefill active mask) ===")
+    cum_trace, cum_live = _record_live(
+        cfg, params, n_small,
+        policy=RoutingPolicy(kind="cumsum", slice_mode="dbsc",
+                             cumsum_tau=0.05, cumsum_kmax=8))
+    pf = next(e for e in cum_trace.events if e.kind == "prefill")
+    assert pf.active is not None \
+        and not bool(np.asarray(pf.active).all()), \
+        "cumsum prefill emitted no deactivated slots"
+    cum_rep = replay_trace(cum_trace)
+    assert cum_rep.epoch_counts == cum_live["epoch_counts"], \
+        (cum_rep.epoch_counts, cum_live["epoch_counts"])
+    assert cum_rep.miss_curve == cum_live["miss_curve"]
+    for key in ("total_energy_j", "total_latency_s"):
+        assert _close(cum_rep.ledger[key], cum_live["ledger"][key]), key
+    print(f"cumsum: prefill active frac "
+          f"{float(np.asarray(pf.active).mean()):.3f}; replay == live "
+          f"(epochs exact)")
+
+    print("\n=== expert-parallel fidelity: ep=2 live vs replay, "
+          "ep=1 sharded == single-device ===")
+    ep_trace, ep_live = _record_live(cfg, params, n_small, ep_shards=2,
+                                     async_io=True)
+    ep_rep = replay_trace(ep_trace)
+    assert ep_rep.per_shard_epoch_counts \
+        == ep_live["per_shard_epoch_counts"], "per-shard miss counts drifted"
+    for key in ("total_energy_j", "total_latency_s", "ici_bytes",
+                "ici_energy_j"):
+        assert _close(ep_rep.ledger[key], ep_live["ledger"][key]), key
+    assert ep_live["ledger"]["ici_bytes"] > 0, \
+        "ep=2 charged no all-to-all traffic"
+    print(f"ep=2: per-shard miss counts exact over both shards; "
+          f"a2a {ep_live['ledger']['ici_bytes']/1e3:.1f} kB charged")
+
+    # ep=1 equivalence (acceptance): the sharded cache/ledger machinery
+    # forced onto the recorded single-device trace reproduces the plain
+    # replay exactly — per-epoch miss counts identical, energy/latency
+    # within rtol 1e-6.
+    forced = ReplayEngine(t_npz.meta).force_sharded(1)
+    forced.consume_all(t_npz.events)
+    frep = forced.finish()
+    assert frep.epoch_counts == live["epoch_counts"]
+    assert frep.miss_curve == live["miss_curve"]
+    for key in ("total_energy_j", "total_latency_s"):
+        assert _close(frep.ledger[key], live["ledger"][key]), key
+    print("ep=1: sharded engine reproduces the single-device run "
+          "exactly (epochs exact, energy/latency rtol<=1e-6)")
+
     # --- autotune: sweep cache budget x warmup x bit plan x prefetch
     # over the recorded trace; the frontier must contain a config that
     # meets the 5% decode-miss SLO at lower energy than the default.
@@ -190,7 +252,9 @@ def main(quick: bool = False) -> None:
                  ("cache=4MB,prefetch4",
                   {"cache_bytes": 4.0e6, "prefetch_top_m": 4}),
                  ("cache=4MB,async",
-                  {"cache_bytes": 4.0e6, "async_io": True})]
+                  {"cache_bytes": 4.0e6, "async_io": True}),
+                 ("cache=4MB,ep2",
+                  {"cache_bytes": 4.0e6, "ep_shards": 2})]
     t0 = time.perf_counter()
     results = at.sweep(t_npz, policies, miss_slo=MISS_SLO)
     sweep_wall = time.perf_counter() - t0
@@ -224,6 +288,17 @@ def main(quick: bool = False) -> None:
             "miss_rate": best.miss_rate,
             "energy_j": best.energy_j,
             "latency_s": best.latency_s,
+        },
+        "cumsum_replay": {
+            "miss_rate": cum_rep.decode_miss_rate,
+            "energy_j": cum_rep.total_energy_j,
+            "latency_s": cum_rep.total_latency_s,
+        },
+        "ep2_replay": {
+            "miss_rate": ep_rep.decode_miss_rate,
+            "energy_j": ep_rep.total_energy_j,
+            "latency_s": ep_rep.total_latency_s,
+            "ici_bytes": ep_rep.ledger["ici_bytes"],
         },
         "pareto": [r.name for r in frontier],
         "replay_speedup_x": ratio,

@@ -84,6 +84,20 @@ class CacheStats:
 class SliceCache:
     """Byte-capacity cache with the DBSC two-segment policy."""
 
+    # Single-device cache: one shard holding every expert.  The
+    # expert-parallel wrapper (repro.core.shard.ShardedSliceCache)
+    # overrides these so shard-agnostic callers (PCW reshape, the init
+    # states) can ask "does this slice's *owning* shard have room"
+    # without knowing whether the cache is partitioned.
+    n_shards: int = 1
+
+    def shard_index(self, key: SliceKey) -> int:
+        return 0
+
+    def can_fit(self, key: SliceKey, nbytes: float) -> bool:
+        """Whether ``key`` fits in its owning shard without eviction."""
+        return self.used + nbytes <= self.capacity
+
     def __init__(self, capacity_bytes: float, *, slice_aware: bool = True):
         self.capacity = float(capacity_bytes)
         self.slice_aware = slice_aware

@@ -47,9 +47,12 @@ from repro.configs.base import ModelConfig
 from repro.core.amat import MatConfig
 from repro.core.cache import SliceCache
 from repro.core.routing import MissRateController
+from repro.core.shard import (ShardedSliceCache, all_to_all_bytes,
+                              expert_placement, home_shard_of_token,
+                              remote_selection_mask, shard_of_expert)
 from repro.core.slices import ExpertSliceStore, SliceKey, quantize_moe_params
 from repro.core.warmup import (HotnessTracker, INIT_STATES, pcw_reshape)
-from repro.hw.energy import CostLedger
+from repro.hw.energy import CostLedger, ShardedCostLedger
 from repro.hw.specs import SYSTEM_PROFILES
 from repro.models.moe import RoutingPolicy
 from repro.models import model as MDL
@@ -81,10 +84,26 @@ class EngineConfig:
     # Cross-request hotness aging applied at each request boundary by the
     # persistent engine (1.0 = never forget, 0.0 = per-request hotness).
     hotness_request_decay: float = 0.5
+    # Expert-parallel sharding: partition the experts of every MoE layer
+    # across this many shards (round-robin on the expert id, the mesh
+    # `model` axis placement).  Each shard owns its own slice cache
+    # segment (cache_bytes / ep_shards — iso aggregate DRAM) and its own
+    # Flash/DRAM/XPU channel clocks; token dispatch to remote experts is
+    # charged on the interconnect channel.  1 = the single-device model.
+    ep_shards: int = 1
 
-    def cache(self) -> SliceCache:
+    def cache(self):
         slice_aware = self.policy.slice_mode == "dbsc" and not self.fused_slices
+        if self.ep_shards > 1:
+            return ShardedSliceCache(self.cache_bytes, self.ep_shards,
+                                     slice_aware=slice_aware)
         return SliceCache(self.cache_bytes, slice_aware=slice_aware)
+
+    def ledger(self):
+        system = SYSTEM_PROFILES[self.system]
+        if self.ep_shards > 1:
+            return ShardedCostLedger(system, self.ep_shards)
+        return CostLedger(system=system)
 
 
 @dataclasses.dataclass
@@ -161,7 +180,7 @@ class PersistentEngine:
         self.n_experts = cfg.moe.n_experts
 
         self.cache = ecfg.cache()
-        self.ledger = CostLedger(system=SYSTEM_PROFILES[ecfg.system])
+        self.ledger = ecfg.ledger()
         self.tracker = HotnessTracker(self.n_moe_layers, self.n_experts)
         self.requests_served = 0
         # Optional routing-trace recorder (repro.sim.trace.TraceRecorder):
@@ -199,9 +218,18 @@ class PersistentEngine:
         # every expert high-bit — use_lsb defaults to all-ones inside
         # the kernel path).
         qe = ecfg.policy.quant_execution
+        # Prefill routing follows the configured policy when it is
+        # state-free (cumsum): cumulative-threshold selection deactivates
+        # most of the k_max slots, and the charge path must see that
+        # `active` mask or it over-charges fills and skews PCW hotness.
+        # Compute stays high-bit either way (the paper's prefill
+        # discipline); stateful kinds (cache_prior, buddy) need residency
+        # masks that don't exist yet at prefill and keep natural top-k.
+        prefill_policy = ecfg.policy if ecfg.policy.kind == "cumsum" \
+            else None
         self._jit_prefill = jax.jit(partial(
             MDL.prefill, cfg=cfg, max_seq=ecfg.max_seq, collect_trace=True,
-            mat=ecfg.mat, quant_execution=qe))
+            mat=ecfg.mat, quant_execution=qe, policy=prefill_policy))
         self._jit_decode = jax.jit(partial(
             MDL.decode_step, cfg=cfg, collect_trace=True,
             policy=ecfg.policy, mat=ecfg.mat, quant_execution=qe))
@@ -247,6 +275,35 @@ class PersistentEngine:
         return expert_weight_step_bytes(
             n_codes, n_groups, quant_execution=quant_execution,
             dense_itemsize=jnp.dtype(self.cfg.dtype).itemsize)
+
+    def shard_breakdown(self) -> Optional[List[dict]]:
+        """Per-shard serving breakdown (None on a single-device engine).
+
+        One row per shard: lifetime cache accesses/misses (archived
+        epochs + the open window), Flash/DRAM traffic, energy and the
+        shard's timeline makespan — the numbers the EP telemetry and the
+        serving benchmark report.
+        """
+        if not isinstance(self.ledger, ShardedCostLedger) \
+                or not isinstance(self.cache, ShardedSliceCache):
+            return None
+        rows = []
+        counts = self.cache.per_shard_counts()
+        placement = expert_placement(self.n_experts, self.ledger.n_shards)
+        for sid, led in enumerate(self.ledger.shards):
+            acc, miss = counts[sid]
+            rows.append({
+                "shard": sid,
+                "experts": np.nonzero(placement == sid)[0].tolist(),
+                "accesses": acc,
+                "misses": miss,
+                "miss_rate": miss / max(acc, 1),
+                "flash_bytes": led.flash_bytes,
+                "dram_bytes": led.dram_bytes,
+                "energy_j": led.total_energy_j,
+                "makespan_s": led.now,
+            })
+        return rows
 
     # --------------------------------------------------- per-request state
     def new_controller(self) -> Optional[MissRateController]:
@@ -315,10 +372,19 @@ class PersistentEngine:
 
         ids = np.asarray(aux["moe"]["ids"])      # [n_periods, n_moe_pos, T, k]
         gates = np.asarray(aux["moe"]["gates"]).astype(np.float64)
+        # `active` exists when prefill ran a routing policy (cumsum):
+        # deactivated slots must not charge fills or count as hotness.
+        # An all-True mask carries no information — normalize it to None
+        # so recorded traces don't serialize a redundant bool array per
+        # prompt (replay semantics are identical).
+        active = (np.asarray(aux["moe"]["active"], bool)
+                  if "active" in aux["moe"] else None)
+        if active is not None and active.all():
+            active = None
         if self.recorder is not None:
-            self.recorder.on_prefill(ids, gates, label=label,
-                                     inflight=inflight)
-        self._charge_prefill(ids, gates)
+            self.recorder.on_prefill(ids, gates, active=active,
+                                     label=label, inflight=inflight)
+        self._charge_prefill(ids, gates, active)
         info = self._finish_prefill(label)
         return logits, kv_cache, info
 
@@ -337,36 +403,56 @@ class PersistentEngine:
         if label is not None:
             self.cache.begin_epoch(f"{label}/prefill")
 
-    def _charge_prefill(self, ids: np.ndarray, gates: np.ndarray) -> None:
+    def _charge_prefill(self, ids: np.ndarray, gates: np.ndarray,
+                        active: Optional[np.ndarray] = None) -> None:
         """Replay one prompt's layer-streaming fills + compute charges.
 
-        ``ids``/``gates``: the prefill routing trace
-        ``[n_periods, n_moe_pos, T, k]``.
+        ``ids``/``gates``/``active``: the prefill routing trace
+        ``[n_periods, n_moe_pos, T, k]``.  ``active`` (None = all slots)
+        masks deactivated selections — under cumsum routing most of the
+        ``k_max`` slots carry zero gates and must charge neither fills
+        nor hotness (mirrors ``_layer_demand``'s ``act2d`` handling).
         """
+        if active is None:
+            active = np.ones(ids.shape, bool)
         # Layer-order streaming: for each flat moe layer (in execution
-        # order), every expert selected by >=1 token is loaded high-bit.
+        # order), every expert *actively* selected by >=1 token is loaded
+        # high-bit.
         for period in range(ids.shape[0]):
             for pidx, pos in enumerate(self.moe_positions):
                 lidx = self.layer_map[(pos, period)]
-                l_ids, l_gates = ids[period, pidx], gates[period, pidx]
-                self.tracker.observe(lidx, l_ids, l_gates)
-                used = np.unique(l_ids.reshape(-1))
+                a2d = active[period, pidx]                       # [T, k]
+                sel_ids = ids[period, pidx][a2d]
+                sel_gates = gates[period, pidx][a2d]
+                self.tracker.observe(lidx, sel_ids, sel_gates)
+                # All-to-all: prompt tokens live round-robin across
+                # shards; selections landing on remote experts pay
+                # dispatch + combine bytes (zero on a single device).
+                nb_a2a, _ = self._a2a_layer_demand(a2d, ids[period, pidx])
+                if nb_a2a > 0:
+                    self.ledger.ici_transfer(nb_a2a)
+                used = np.unique(sel_ids)
                 for e in used:
+                    led = self._ledger_for(int(e))
                     for kind in ("msb", "lsb"):   # prefill is high-bit
                         key = SliceKey(lidx, int(e), kind)
                         nb = self.store.slice_bytes(key)
                         hit = self.cache.access(key, nb)
                         if hit or key in self.cache:
                             if not hit:           # fill landed
-                                self.ledger.miss_fill(nb)
-                            self.ledger.dram_read(nb)
+                                led.miss_fill(nb)
+                            led.dram_read(nb)
                         else:                     # dropped: direct stream
-                            self.ledger.flash_stream(nb)
-                # prefill compute: all routed tokens, high precision
-                t_routed = l_ids.size
-                self.ledger.matmul(t_routed, self.cfg.d_model,
-                                   self.expert_macs_per_token // self.cfg.d_model,
-                                   self.ecfg.mat.high_bits)
+                            led.flash_stream(nb)
+                # prefill compute: all actively routed tokens, high
+                # precision, split over the shards owning the experts
+                for sid, led in enumerate(self._shard_ledgers()):
+                    t_s = sel_ids.size if self._n_shards() == 1 else \
+                        int(np.count_nonzero(shard_of_expert(
+                            sel_ids, self._n_shards()) == sid))
+                    led.matmul(t_s, self.cfg.d_model,
+                               self.expert_macs_per_token // self.cfg.d_model,
+                               self.ecfg.mat.high_bits)
 
     def _finish_prefill(self, label: Optional[str]) -> dict:
         """Prefill→decode transition: warmup reshape + epoch rollover."""
@@ -467,6 +553,67 @@ class PersistentEngine:
             else self._charge_sync
         return replay(tr)
 
+    # -------------------------------------------------- shard routing bits
+    # All four helpers dispatch on the *ledger object*, not on the
+    # config, so a test/benchmark can swap sharded components onto an
+    # engine (force-sharded at ep=1) and exercise the identical path.
+    def _shard_ledgers(self) -> List[CostLedger]:
+        led = self.ledger
+        if isinstance(led, ShardedCostLedger):
+            return led.shards
+        return [led]
+
+    def _n_shards(self) -> int:
+        led = self.ledger
+        return led.n_shards if isinstance(led, ShardedCostLedger) else 1
+
+    def _ledger_for(self, expert: int) -> CostLedger:
+        """The cost ledger owning ``expert``'s slices (round-robin)."""
+        led = self.ledger
+        if isinstance(led, ShardedCostLedger):
+            return led.shards[shard_of_expert(expert, led.n_shards)]
+        return led
+
+    def _compute_frontier(self) -> float:
+        led = self.ledger
+        if isinstance(led, ShardedCostLedger):
+            return led.compute_frontier()
+        return led.compute_ch.busy_until
+
+    def _segment_capacity(self, key: SliceKey) -> float:
+        """Capacity of the cache segment that would hold ``key`` — the
+        owning shard's slice of the budget under EP, the whole cache
+        otherwise (the "would this fill be dropped" bound)."""
+        if isinstance(self.cache, ShardedSliceCache):
+            return self.cache.shard(key).capacity
+        return self.cache.capacity
+
+    def _a2a_layer_demand(self, act2d: np.ndarray, ids2d: np.ndarray):
+        """All-to-all demand for one layer's ``[T, k]`` routing:
+        ``(bytes, remote_experts)``.  Each active selection whose expert
+        lives on a different shard than its token moves its activation
+        out and the partial result back; ``remote_experts`` is the set
+        of experts with at least one such selection (their matmuls wait
+        on the dispatch).  ``(0.0, frozenset())`` on a single device —
+        the common path skips the index arithmetic entirely."""
+        n = self._n_shards()
+        if n == 1:
+            return 0.0, frozenset()
+        rows, _ = np.nonzero(act2d)
+        sel = ids2d[act2d]
+        remote = remote_selection_mask(rows, sel, n)
+        if not remote.any():
+            return 0.0, frozenset()
+        return (all_to_all_bytes(rows, sel, self.cfg.d_model, n),
+                frozenset(int(e) for e in np.unique(sel[remote])))
+
+    def _layer_a2a_demand(self, tr: "_StepTrace", period: int, pidx: int):
+        if self._n_shards() == 1:
+            return 0.0, frozenset()
+        return self._a2a_layer_demand(
+            tr.active[period, pidx] & tr.slot_mask[:, None],
+            tr.ids[period, pidx])
+
     # -------------------------------------------------- shared replay bits
     def _slice_nbytes(self, key: SliceKey) -> float:
         if self.ecfg.fused_slices:
@@ -555,14 +702,20 @@ class PersistentEngine:
                     for e in predicted:
                         key = SliceKey(lidx, int(e), "msb")
                         nb = self._slice_nbytes(key)
-                        if key not in self.cache and nb <= self.cache.capacity:
-                            self.ledger.miss_fill(nb, prefetch=True)
+                        if key not in self.cache \
+                                and nb <= self._segment_capacity(key):
+                            self._ledger_for(int(e)).miss_fill(
+                                nb, prefetch=True)
                             self.cache.insert(key, nb)
                             issued.add(int(e))
                     self.prefetcher.mark_issued(len(issued))
                 flat_ids, flat_gates, msb_demand, lsb_wanted, tok_per_e = \
                     self._layer_demand(tr, period, pidx)
                 self.tracker.observe(lidx, flat_ids, flat_gates)
+                # All-to-all token dispatch to remote experts (EP only).
+                nb_a2a, _ = self._layer_a2a_demand(tr, period, pidx)
+                if nb_a2a > 0:
+                    self.ledger.ici_transfer(nb_a2a)
                 if self.prefetcher is not None:
                     if prev_used is not None:
                         self.prefetcher.observe(lidx, prev_used, flat_ids)
@@ -570,13 +723,14 @@ class PersistentEngine:
                         self.prefetcher.mark_useful(len(demanded & issued))
                         for e in issued - demanded:
                             self.prefetcher.mark_wasted()
-                            self.ledger.mark_prefetch_wasted(
+                            self._ledger_for(e).mark_prefetch_wasted(
                                 self._slice_nbytes(SliceKey(lidx, e, "msb")))
                     prev_used = flat_ids
 
                 missed_expert = np.zeros(self.n_experts, bool)
                 for e in msb_demand:
                     e = int(e)
+                    led = self._ledger_for(e)
                     key = SliceKey(lidx, e, "msb")
                     nb = self._slice_nbytes(key)
                     hit = self.cache.access(key, nb)
@@ -585,11 +739,11 @@ class PersistentEngine:
                         tr.misses += 1
                         missed_expert[e] = True
                         if key in self.cache:      # fill landed
-                            self.ledger.miss_fill(nb)
+                            led.miss_fill(nb)
                         else:                      # dropped: direct stream
-                            self.ledger.flash_stream(nb)
+                            led.flash_stream(nb)
                     if hit or key in self.cache:
-                        self.ledger.dram_read(nb)
+                        led.dram_read(nb)
                     wants_lsb = e in lsb_wanted \
                         and not self.ecfg.fused_slices
                     lsb_available = False
@@ -605,25 +759,45 @@ class PersistentEngine:
                             missed_expert[e] = True
                             if self.ecfg.policy.fetch_lsb_on_miss:
                                 if lkey in self.cache:
-                                    self.ledger.miss_fill(lnb)
+                                    led.miss_fill(lnb)
                                 else:
-                                    self.ledger.flash_stream(lnb)
+                                    led.flash_stream(lnb)
                         if lhit or self.ecfg.policy.fetch_lsb_on_miss:
                             if lhit or lkey in self.cache:
-                                self.ledger.dram_read(lnb)
+                                led.dram_read(lnb)
                             lsb_available = True
-                    self.ledger.matmul(
+                    led.matmul(
                         int(tok_per_e[e]), self.cfg.d_model,
                         self.expert_macs_per_token // self.cfg.d_model,
                         self._expert_bits(lsb_available))
                 self._attribute_slot_misses(tr, period, pidx, missed_expert)
-        # Non-expert resident weights: one pass per decode step, amortized
-        # over every active sequence in the batch.
-        n_active_tokens = int(tr.slot_mask.sum())
-        self.ledger.dram_read(self.resident_bytes)
-        self.ledger.matmul(max(n_active_tokens, 1), self.cfg.d_model,
-                           int(self.resident_bytes / self.cfg.d_model) + 1, 8)
+        # Non-expert resident weights: one pass per decode step per shard
+        # (replicated dense weights), the batch's active tokens split
+        # data-parallel across shards.
+        self._charge_resident_sync(tr)
         return self._step_charge(tr, base)
+
+    def _resident_token_share(self, tr: "_StepTrace", sid: int) -> int:
+        """Active tokens shard ``sid`` runs the dense (non-expert) layers
+        for: slots are data-parallel round-robin across shards."""
+        n = self._n_shards()
+        if n == 1:
+            return int(tr.slot_mask.sum())
+        active_slots = np.nonzero(tr.slot_mask)[0]
+        return int(np.count_nonzero(
+            home_shard_of_token(active_slots, n) == sid))
+
+    def _charge_resident_sync(self, tr: "_StepTrace") -> None:
+        n = self._n_shards()
+        for sid, led in enumerate(self._shard_ledgers()):
+            share = self._resident_token_share(tr, sid)
+            if n == 1:
+                share = max(share, 1)   # legacy single-device floor
+            elif share == 0:
+                continue    # no tokens homed here: no dense pass to run
+            led.dram_read(self.resident_bytes)
+            led.matmul(share, self.cfg.d_model,
+                       int(self.resident_bytes / self.cfg.d_model) + 1, 8)
 
     # ------------------------------------------- pipelined (async) replay
     def _charge_async(self, tr: "_StepTrace") -> StepCharge:
@@ -649,20 +823,37 @@ class PersistentEngine:
         The resident (non-expert) weight stream for the step is issued
         once behind the expert reads and overlaps expert compute — the
         double-buffering win the serialized model cannot express.
+
+        Under expert parallelism every per-expert chain issues on the
+        *owning shard's* channel clocks, so the shards' expert pipelines
+        progress independently and the step's latency is the max over
+        shard timelines plus the all-to-all dispatch: routing at
+        ``t_route`` first pays the layer's dispatch bytes on the shared
+        interconnect channel, and each remote expert's matmul waits for
+        both its slice data and the dispatched activations.
         """
-        led = self.ledger
-        base = led.snapshot()
-        t_step = led.compute_ch.busy_until
+        base = self.ledger.snapshot()
+        t_step = self._compute_frontier()
         prev_used = None
         # prefetches in flight: key -> (ready_t, nbytes), per target layer
         pending: dict = {}
         for period in range(tr.P):
             for pidx, pos in enumerate(self.moe_positions):
                 lidx = self.layer_map[(pos, period)]
-                t_route = max(t_step, led.compute_ch.busy_until)
+                t_route = max(t_step, self._compute_frontier())
                 flat_ids, flat_gates, msb_demand, lsb_wanted, tok_per_e = \
                     self._layer_demand(tr, period, pidx)
                 self.tracker.observe(lidx, flat_ids, flat_gates)
+                # All-to-all token dispatch for this layer, issued the
+                # moment routing is known; only experts that actually
+                # receive remote tokens additionally wait for it
+                # (t_disp) — purely local expert chains do not.
+                nb_a2a, remote_experts = self._layer_a2a_demand(
+                    tr, period, pidx)
+                t_disp = t_route
+                if nb_a2a > 0:
+                    _, t_disp = self.ledger.ici_transfer_at(t_route,
+                                                            nb_a2a)
 
                 # --- prefetch usefulness for THIS layer (issued at l-1),
                 # judged before demand charging mutates the cache.  The
@@ -674,7 +865,8 @@ class PersistentEngine:
                 for key, (ready_t, p_nb) in pending.pop(lidx, {}).items():
                     if key not in self.cache:     # evicted before use
                         self.prefetcher.mark_wasted()
-                        led.mark_prefetch_wasted(p_nb)
+                        self._ledger_for(key.expert).mark_prefetch_wasted(
+                            p_nb)
                     elif key.expert in demanded:
                         if ready_t <= t_route:
                             self.prefetcher.mark_useful()
@@ -682,11 +874,13 @@ class PersistentEngine:
                             self.prefetcher.mark_late()
                     else:
                         self.prefetcher.mark_wasted()
-                        led.mark_prefetch_wasted(p_nb)
+                        self._ledger_for(key.expert).mark_prefetch_wasted(
+                            p_nb)
 
                 missed_expert = np.zeros(self.n_experts, bool)
                 for e in msb_demand:
                     e = int(e)
+                    led = self._ledger_for(e)
                     key = SliceKey(lidx, e, "msb")
                     nb = self._slice_nbytes(key)
                     hit = self.cache.access(key, nb)
@@ -733,11 +927,13 @@ class PersistentEngine:
                                 t_data = max(t_data, t_lsb)
                                 lsb_available = True
                     led.matmul_at(
-                        t_data, int(tok_per_e[e]), self.cfg.d_model,
+                        max(t_data, t_disp) if e in remote_experts
+                        else t_data,
+                        int(tok_per_e[e]), self.cfg.d_model,
                         self.expert_macs_per_token // self.cfg.d_model,
                         self._expert_bits(lsb_available))
                 # --- learn + issue prefetch for the NEXT layer, behind
-                # this layer's demand fills on the Flash channel.
+                # this layer's demand fills on each shard's Flash channel.
                 if self.prefetcher is not None:
                     if prev_used is not None:
                         self.prefetcher.observe(lidx, prev_used, flat_ids)
@@ -750,9 +946,11 @@ class PersistentEngine:
                         for e in predicted:
                             key = SliceKey(lidx + 1, int(e), "msb")
                             nb = self._slice_nbytes(key)
-                            if key in self.cache or nb > self.cache.capacity:
+                            if key in self.cache \
+                                    or nb > self._segment_capacity(key):
                                 continue
-                            _, end = led.fill_at(t_route, nb, prefetch=True)
+                            _, end = self._ledger_for(int(e)).fill_at(
+                                t_route, nb, prefetch=True)
                             self.cache.insert(key, nb)
                             self.cache.mark_inflight(key, end)
                             pending.setdefault(lidx + 1, {})[key] = (end, nb)
@@ -764,12 +962,21 @@ class PersistentEngine:
         # issued == useful + late + wasted holds per step.
         assert not pending, f"unconsumed prefetch bookkeeping: {pending}"
         # Resident (non-expert) weights stream behind the expert reads
-        # and overlap expert compute; the dense step compute waits on them.
-        n_active_tokens = int(tr.slot_mask.sum())
-        _, res_ready = led.dram_read_at(t_step, self.resident_bytes)
-        led.matmul_at(res_ready, max(n_active_tokens, 1), self.cfg.d_model,
-                      int(self.resident_bytes / self.cfg.d_model) + 1, 8)
-        self.cache.settle(led.now)
+        # and overlap expert compute; the dense step compute waits on
+        # them.  Replicated per shard, tokens split data-parallel; a
+        # shard with no tokens homed on it runs no dense pass this step.
+        n_sh = self._n_shards()
+        for sid, led in enumerate(self._shard_ledgers()):
+            share = self._resident_token_share(tr, sid)
+            if n_sh == 1:
+                share = max(share, 1)   # legacy single-device floor
+            elif share == 0:
+                continue
+            _, res_ready = led.dram_read_at(t_step, self.resident_bytes)
+            led.matmul_at(res_ready, share, self.cfg.d_model,
+                          int(self.resident_bytes / self.cfg.d_model) + 1,
+                          8)
+        self.cache.settle(self.ledger.now)
         return self._step_charge(tr, base)
 
 

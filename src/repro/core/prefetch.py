@@ -73,14 +73,24 @@ class TransitionPrefetcher:
         self.late = 0
         self.wasted = 0
 
+    def _valid_ids(self, experts: np.ndarray) -> np.ndarray:
+        """Unique in-range expert ids.  ``mask_routing`` emits the
+        sentinel id ``n_experts`` for padding slots; indexing the
+        transition counts with it used to raise IndexError, so masked
+        slots are dropped here instead."""
+        ids = np.unique(np.asarray(experts).reshape(-1))
+        return ids[(ids >= 0) & (ids < self.n_experts)]
+
     # --------------------------------------------------------------- learn
     def observe(self, layer: int, prev_experts: np.ndarray,
                 cur_experts: np.ndarray) -> None:
         """Record a (layer-1 -> layer) transition from a routing trace."""
         if layer <= 0 or layer > self.counts.shape[0]:
             return
-        pe = np.unique(prev_experts.reshape(-1))
-        ce = np.unique(cur_experts.reshape(-1))
+        pe = self._valid_ids(prev_experts)
+        ce = self._valid_ids(cur_experts)
+        if pe.size == 0 or ce.size == 0:
+            return
         self.counts[layer - 1][np.ix_(pe, ce)] += 1.0
 
     # -------------------------------------------------------------- predict
@@ -100,9 +110,9 @@ class TransitionPrefetcher:
         # "predict" for a layer that does not exist.
         if layer < 0 or layer >= self.n_layers - 1:
             return np.empty(0, np.int64)
-        if cur_experts.size == 0:
+        ce = self._valid_ids(cur_experts)
+        if ce.size == 0:
             return np.empty(0, np.int64)
-        ce = np.unique(cur_experts.reshape(-1))
         scores = self.counts[layer][ce].sum(axis=0)
         candidates = np.arange(self.n_experts)
         if resident is not None:

@@ -1,0 +1,297 @@
+"""Expert-parallel sharding: placement + the per-shard slice cache set.
+
+Expert parallelism partitions the experts of every MoE layer across
+``ep`` shards along the mesh ``model`` axis; each shard owns the DRAM
+slice cache (and, in :mod:`repro.hw.energy`, the Flash/DRAM channel
+clocks) for its experts.  Placement is a **pure function of the expert
+id** — round-robin ``expert % ep`` — so:
+
+* a routing trace recorded on a single device replays under *any*
+  ``ep_shards`` (the trace stores expert ids, never device ids), which
+  is what makes EP a sweepable axis in :mod:`repro.sim.autotune`;
+* every layer spreads its experts evenly across shards (contiguous
+  blocks would, too, but round-robin also balances the common
+  low-id-biased synthetic streams);
+* the live engine, the replay simulator and the telemetry all agree on
+  ownership without exchanging any state.
+
+:class:`ShardedSliceCache` wraps ``ep`` independent
+:class:`~repro.core.cache.SliceCache` instances (each holding
+``capacity_bytes / ep`` — the aggregate DRAM budget is *iso* with the
+single-device run, split in proportion to each shard's expert
+population) behind the exact :class:`SliceCache` surface the engine's
+charge path, PCW reshape and the policy-state builder consume.  Routing
+is by key; stats/epochs aggregate across shards on read while the
+per-shard windows stay addressable for the EP fidelity gate and the
+serving telemetry breakdown.
+
+Tokens also have a home shard (the dense, non-expert half of the model
+runs data-parallel over the same devices): decode slot ``b`` and
+prefill position ``t`` live on shard ``b % ep`` / ``t % ep``.  A
+selection whose expert lives elsewhere pays all-to-all dispatch bytes —
+charged by the engine on the interconnect channel, computed here by
+:func:`all_to_all_bytes`.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.cache import CacheStats, SliceCache
+from repro.core.slices import SliceKey
+
+__all__ = ["shard_of_expert", "expert_placement", "home_shard_of_token",
+           "remote_selection_mask", "all_to_all_bytes",
+           "ShardedSliceCache"]
+
+
+def shard_of_expert(expert, n_shards: int):
+    """Owning shard of ``expert``: round-robin, pure in the expert id.
+
+    Accepts a scalar (returns int) or an id ndarray (returns the
+    elementwise placement) — every ownership decision in the engine,
+    replay and telemetry goes through this one function.
+    """
+    if isinstance(expert, np.ndarray):
+        return expert % int(n_shards)
+    return int(expert) % int(n_shards)
+
+
+def expert_placement(n_experts: int, n_shards: int) -> np.ndarray:
+    """[E] int array mapping every expert id to its owning shard."""
+    return shard_of_expert(np.arange(n_experts, dtype=np.int64), n_shards)
+
+
+def home_shard_of_token(token_idx, n_shards: int):
+    """Home shard of a decode slot / prompt position: the dense
+    (non-expert) half of the model runs data-parallel round-robin over
+    the same shards.  Scalar or ndarray, like :func:`shard_of_expert`."""
+    return shard_of_expert(token_idx, n_shards)
+
+
+def remote_selection_mask(token_idx: np.ndarray, expert_ids: np.ndarray,
+                          n_shards: int) -> np.ndarray:
+    """Bool mask over flat parallel (token, expert) selections: True
+    where the token's home shard (``token_idx % n_shards``) differs
+    from the expert's owner, i.e. the selection pays all-to-all."""
+    if n_shards <= 1 or token_idx.size == 0:
+        return np.zeros(token_idx.shape, bool)
+    return home_shard_of_token(token_idx, n_shards) \
+        != shard_of_expert(expert_ids, n_shards)
+
+
+def all_to_all_bytes(token_idx: np.ndarray, expert_ids: np.ndarray,
+                     d_model: int, n_shards: int,
+                     itemsize: float = 1.0) -> float:
+    """Dispatch + combine bytes for one layer's routed selections.
+
+    ``token_idx``/``expert_ids``: flat parallel arrays, one entry per
+    *active* (token, slot) selection.  Each remote selection (see
+    :func:`remote_selection_mask`) moves its ``d_model`` activation to
+    the expert's shard and the result back (2x).  Activations travel at
+    ``itemsize`` bytes/element (int8 by default, matching the engine's
+    INT8 non-expert traffic convention).
+    """
+    remote = remote_selection_mask(token_idx, expert_ids, n_shards)
+    return 2.0 * d_model * itemsize * float(np.count_nonzero(remote))
+
+
+class _AggregateStats:
+    """Read/reset view over the per-shard :class:`CacheStats` windows.
+
+    Mirrors the pieces of ``CacheStats`` the engine, scheduler and
+    benchmarks touch on ``cache.stats`` (snapshot / reset / the derived
+    counters); mutation happens inside each shard's own ``access``.
+    """
+
+    def __init__(self, shards: List[SliceCache]):
+        self._shards = shards
+
+    def snapshot(self) -> dict:
+        out = self._shards[0].stats.snapshot()
+        for s in self._shards[1:]:
+            snap = s.stats.snapshot()
+            for k in out:
+                out[k] += snap[k]
+        return out
+
+    def reset(self) -> None:
+        for s in self._shards:
+            s.stats.reset()
+
+    def __getattr__(self, name):
+        # Derived counters (accesses, misses, miss_rate, msb_misses, ...)
+        # come from a summed CacheStats built on demand.
+        return getattr(CacheStats(**self.snapshot()), name)
+
+
+class ShardedSliceCache:
+    """``ep`` per-shard :class:`SliceCache` instances behind one surface.
+
+    Every key-addressed operation routes to the owning shard
+    (:func:`shard_of_expert` on ``key.expert``); aggregate reads
+    (``used``, ``residency``, ``stats``, ``epochs``) combine shards.
+    Capacity is split evenly: each shard holds ``capacity_bytes /
+    n_shards`` and only ever sees keys it owns, so LRU/eviction pressure
+    is strictly shard-local — exactly the deployment question EP poses
+    (a hot shard cannot borrow a cold shard's DRAM).
+    """
+
+    def __init__(self, capacity_bytes: float, n_shards: int, *,
+                 slice_aware: bool = True):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = int(n_shards)
+        self.slice_aware = slice_aware
+        self.shards: List[SliceCache] = [
+            SliceCache(capacity_bytes / self.n_shards,
+                       slice_aware=slice_aware)
+            for _ in range(self.n_shards)]
+
+    # ------------------------------------------------------------ routing
+    def shard_index(self, key: SliceKey) -> int:
+        return shard_of_expert(key.expert, self.n_shards)
+
+    def shard(self, key: SliceKey) -> SliceCache:
+        return self.shards[self.shard_index(key)]
+
+    # ----------------------------------------------------- aggregate state
+    @property
+    def capacity(self) -> float:
+        return sum(s.capacity for s in self.shards)
+
+    @property
+    def used(self) -> float:
+        return sum(s.used for s in self.shards)
+
+    @property
+    def stats(self) -> _AggregateStats:
+        return _AggregateStats(self.shards)
+
+    def __contains__(self, key: SliceKey) -> bool:
+        return key in self.shard(key)
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.shards)
+
+    def contains(self, key: SliceKey) -> bool:
+        return key in self
+
+    def can_fit(self, key: SliceKey, nbytes: float) -> bool:
+        s = self.shard(key)
+        return s.used + nbytes <= s.capacity
+
+    # ------------------------------------------------------------- mutate
+    def access(self, key: SliceKey, nbytes: float,
+               *, fill_on_miss: bool = True) -> bool:
+        return self.shard(key).access(key, nbytes,
+                                      fill_on_miss=fill_on_miss)
+
+    def insert(self, key: SliceKey, nbytes: float) -> List[SliceKey]:
+        return self.shard(key).insert(key, nbytes)
+
+    def evict(self, key: SliceKey) -> bool:
+        return self.shard(key).evict(key)
+
+    def evict_where(self, pred) -> List[SliceKey]:
+        out: List[SliceKey] = []
+        for s in self.shards:
+            out.extend(s.evict_where(pred))
+        return out
+
+    def reorder_by(self, ranking) -> None:
+        for s in self.shards:
+            s.reorder_by(ranking)
+
+    def clear(self) -> None:
+        for s in self.shards:
+            s.clear()
+
+    # --------------------------------------------------- in-flight fills
+    def mark_inflight(self, key: SliceKey, ready_t: float) -> None:
+        self.shard(key).mark_inflight(key, ready_t)
+
+    def ready_time(self, key: SliceKey, default: float = 0.0) -> float:
+        return self.shard(key).ready_time(key, default)
+
+    def settle(self, now: float) -> None:
+        for s in self.shards:
+            s.settle(now)
+
+    # ------------------------------------------------------------- reads
+    def resident_keys(self) -> List[SliceKey]:
+        out: List[SliceKey] = []
+        for s in self.shards:
+            out.extend(s.resident_keys())
+        return out
+
+    def residency(self, n_layers: int, n_experts: int):
+        msb = np.zeros((n_layers, n_experts), bool)
+        lsb = np.zeros((n_layers, n_experts), bool)
+        for s in self.shards:
+            m, l = s.residency(n_layers, n_experts)
+            msb |= m
+            lsb |= l
+        return msb, lsb
+
+    # ------------------------------------------------------------- epochs
+    # begin/end fan out so every shard's counter window rolls over at the
+    # same request boundary; per-label aggregation sums the windows.
+    def begin_epoch(self, label: str) -> None:
+        for s in self.shards:
+            s.begin_epoch(label)
+
+    def end_epoch(self) -> None:
+        for s in self.shards:
+            s.end_epoch()
+
+    @property
+    def epochs(self) -> List[Tuple[str, dict]]:
+        """Aggregated ``[(label, summed stats dict)]`` across shards."""
+        if not self.shards[0].epochs:
+            return []
+        out: List[Tuple[str, dict]] = []
+        for i, (label, snap) in enumerate(self.shards[0].epochs):
+            agg = dict(snap)
+            for s in self.shards[1:]:
+                other_label, other = s.epochs[i]
+                assert other_label == label, \
+                    f"shard epoch skew: {other_label!r} != {label!r}"
+                for k in agg:
+                    agg[k] += other[k]
+            out.append((label, agg))
+        return out
+
+    def epoch_miss_rates(self) -> List[Tuple[str, float]]:
+        return [(label, CacheStats(**snap).miss_rate)
+                for label, snap in self.epochs]
+
+    def epoch_counts(self) -> List[Tuple[str, int, int]]:
+        return [(label, CacheStats(**snap).accesses,
+                 CacheStats(**snap).misses)
+                for label, snap in self.epochs]
+
+    def per_shard_epoch_counts(self) -> List[List[Tuple[str, int, int]]]:
+        """Per-shard ``epoch_counts`` — the EP fidelity gate's unit."""
+        return [s.epoch_counts() for s in self.shards]
+
+    def per_shard_counts(self) -> List[Tuple[int, int]]:
+        """Lifetime (accesses, misses) per shard: archived epochs plus
+        the open window."""
+        out = []
+        for s in self.shards:
+            acc = s.stats.accesses
+            miss = s.stats.misses
+            for _, snap in s.epochs:
+                st = CacheStats(**snap)
+                acc += st.accesses
+                miss += st.misses
+            out.append((acc, miss))
+        return out
+
+    def clone(self) -> "ShardedSliceCache":
+        import copy
+
+        return copy.deepcopy(self)

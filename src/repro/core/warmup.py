@@ -45,10 +45,20 @@ class HotnessTracker:
 
     def observe(self, layer: int, expert_ids: np.ndarray,
                 gates: np.ndarray) -> None:
-        """expert_ids/gates: [T, k] for the tokens routed this call."""
-        np.add.at(self.counts[layer], expert_ids.reshape(-1), 1.0)
-        np.add.at(self.gate_mass[layer], expert_ids.reshape(-1),
-                  gates.reshape(-1))
+        """expert_ids/gates: [T, k] for the tokens routed this call.
+
+        Out-of-range ids are dropped, not counted: ``mask_routing``
+        redirects padding slots to the sentinel id ``n_experts``, which
+        used to raise IndexError from ``np.add.at`` when a caller passed
+        unfiltered routing arrays.
+        """
+        ids = np.asarray(expert_ids).reshape(-1)
+        g = np.asarray(gates).reshape(-1)
+        valid = (ids >= 0) & (ids < self.n_experts)
+        if not valid.all():
+            ids, g = ids[valid], g[valid]
+        np.add.at(self.counts[layer], ids, 1.0)
+        np.add.at(self.gate_mass[layer], ids, g)
 
     def step_decay(self) -> None:
         self.counts *= self.decay
@@ -98,29 +108,41 @@ def pcw_reshape(cache: SliceCache, store: ExpertSliceStore,
     evicted_msb = cache.evict_where(
         lambda k: k.kind == "msb" and hot[k.layer, k.expert] < msb_thresh)
 
-    # 3) hotness-aligned recency for the survivors.
-    ranking: Dict[SliceKey, float] = {
-        k: float(hot[k.layer, k.expert]) for k in cache.resident_keys()}
-    cache.reorder_by(ranking)
-
-    # 4) fill freed space with the hottest missing MSB slices (these bytes
+    # 3) fill freed space with the hottest missing MSB slices (these bytes
     # were already streamed through DRAM during prefill; reshaping keeps
     # them instead of dropping them — no extra Flash traffic is charged).
     # Every MSB slice is the same size, so the first one that doesn't fit
-    # ends the scan — no point walking the remaining L*E entries against
-    # a full cache.
+    # marks its shard full; the scan ends once every shard is full (for
+    # the single-device cache that is the first non-fit, as before).
     order = np.argsort(-flat)
     installed = 0
     nb = store.msb_bytes_per_expert
+    full_shards: set = set()
     for idx in order:
-        if cache.used + nb > cache.capacity:
+        if len(full_shards) >= cache.n_shards:
             break
         lidx, e = divmod(int(idx), E)
         key = SliceKey(lidx, e, "msb")
+        sid = cache.shard_index(key)
+        if sid in full_shards:
+            continue
+        if not cache.can_fit(key, nb):
+            full_shards.add(sid)
+            continue
         if key in cache:
             continue
         cache.insert(key, nb)
         installed += 1
+
+    # 4) hotness-aligned recency over the FULL final population —
+    # survivors and installs together.  Re-ranking must run *after* the
+    # install loop: inserting into an already-reordered cache appended
+    # every installed slice at the recency tail, so installs (added
+    # hottest-first, hottest nearest the LRU head) outranked every
+    # survivor regardless of hotness.
+    ranking: Dict[SliceKey, float] = {
+        k: float(hot[k.layer, k.expert]) for k in cache.resident_keys()}
+    cache.reorder_by(ranking)
 
     return {
         "evicted_lsb": len(evicted_lsb),
@@ -146,7 +168,7 @@ def init_last_layer(cache: SliceCache, store: ExpertSliceStore,
         for kind in ("msb", "lsb"):
             key = SliceKey(last, e, kind)
             nb = store.slice_bytes(key)
-            if cache.used + nb <= cache.capacity:
+            if cache.can_fit(key, nb):
                 cache.insert(key, nb)
 
 
@@ -158,8 +180,10 @@ def init_random(cache: SliceCache, store: ExpertSliceStore, *,
     rng.shuffle(keys)
     for key in keys:
         nb = store.slice_bytes(key)
-        if cache.used + nb > cache.capacity:
-            break
+        if not cache.can_fit(key, nb):
+            if cache.n_shards == 1:
+                break
+            continue
         cache.insert(key, nb)
 
 

@@ -138,12 +138,21 @@ class CostLedger:
     prefetch_flash_bytes: float = 0.0
     prefetch_wasted_energy_j: float = 0.0
 
+    # interconnect (all-to-all token dispatch under expert parallelism;
+    # zero on every single-device run)
+    ici_bytes: float = 0.0
+    ici_latency_s: float = 0.0
+    ici_energy_j: float = 0.0
+    n_ici_transfers: int = 0
+    ici_ch: ChannelTimeline = dataclasses.field(
+        default_factory=lambda: ChannelTimeline("ici"))
+
     # ------------------------------------------------------------ timeline
     @property
     def now(self) -> float:
         """The timeline frontier: completion time of the latest event."""
         return max(self.flash_ch.busy_until, self.dram_ch.busy_until,
-                   self.compute_ch.busy_until)
+                   self.compute_ch.busy_until, self.ici_ch.busy_until)
 
     def _io_ready(self) -> float:
         if self.overlap_io_compute:
@@ -214,6 +223,24 @@ class CostLedger:
         self.io_stall_s += max(0.0, t_ready - self.compute_ch.busy_until)
         return self.compute_ch.issue(t_ready, dur)
 
+    def ici_transfer_at(self, t_ready: float,
+                        nbytes: float) -> Tuple[float, float]:
+        """Shard-to-shard transfer (all-to-all token dispatch + combine)
+        on the interconnect channel.  Uses the system's ``interconnect``
+        tier; falls back to the DRAM tier's rates when the profile
+        defines none (single-device profiles never issue these)."""
+        tier = self.system.interconnect or self.system.dram
+        self.ici_bytes += nbytes
+        self.n_ici_transfers += 1
+        dur = tier.transfer_latency_s(nbytes)
+        self.ici_latency_s += dur
+        self.ici_energy_j += tier.transfer_energy_j(nbytes)
+        return self.ici_ch.issue(t_ready, dur)
+
+    def ici_transfer(self, nbytes: float) -> None:
+        """Serialized-issue interconnect transfer (blocking)."""
+        self.ici_transfer_at(self._io_ready(), nbytes)
+
     def mark_prefetch_wasted(self, nbytes: float) -> None:
         """Attribute an already-charged prefetch fill as wasted: the
         predicted slice was never demanded by (or landed too late for)
@@ -250,7 +277,8 @@ class CostLedger:
     # -------------------------------------------------------------- summary
     @property
     def io_latency_s(self) -> float:
-        return self.flash_latency_s + self.dram_latency_s
+        return self.flash_latency_s + self.dram_latency_s \
+            + self.ici_latency_s
 
     @property
     def serial_latency_s(self) -> float:
@@ -270,7 +298,8 @@ class CostLedger:
 
     @property
     def total_energy_j(self) -> float:
-        return self.flash_energy_j + self.dram_energy_j + self.compute_energy_j
+        return self.flash_energy_j + self.dram_energy_j \
+            + self.compute_energy_j + self.ici_energy_j
 
     def snapshot(self) -> dict:
         return {
@@ -287,6 +316,7 @@ class CostLedger:
             "flash_busy_s": self.flash_ch.busy_s,
             "dram_busy_s": self.dram_ch.busy_s,
             "compute_busy_s": self.compute_ch.busy_s,
+            "ici_busy_s": self.ici_ch.busy_s,
             "flash_energy_j": self.flash_energy_j,
             "dram_energy_j": self.dram_energy_j,
             "compute_energy_j": self.compute_energy_j,
@@ -296,6 +326,10 @@ class CostLedger:
             "n_prefetch_fills": self.n_prefetch_fills,
             "prefetch_flash_bytes": self.prefetch_flash_bytes,
             "prefetch_wasted_energy_j": self.prefetch_wasted_energy_j,
+            "ici_bytes": self.ici_bytes,
+            "ici_latency_s": self.ici_latency_s,
+            "ici_energy_j": self.ici_energy_j,
+            "n_ici_transfers": self.n_ici_transfers,
         }
 
     def clone(self) -> "CostLedger":
@@ -321,10 +355,136 @@ class CostLedger:
             "flash_energy_j", "dram_energy_j", "compute_energy_j",
             "io_stall_s", "prefetch_flash_bytes",
             "prefetch_wasted_energy_j",
+            "ici_bytes", "ici_latency_s", "ici_energy_j",
         ):
             setattr(self, f, 0.0)
         self.n_flash_transfers = 0
         self.n_dram_transfers = 0
         self.n_prefetch_fills = 0
-        for ch in (self.flash_ch, self.dram_ch, self.compute_ch):
+        self.n_ici_transfers = 0
+        for ch in (self.flash_ch, self.dram_ch, self.compute_ch,
+                   self.ici_ch):
             ch.reset()
+
+
+class ShardedCostLedger:
+    """Expert-parallel cost ledger: one :class:`CostLedger` per shard
+    plus a shared interconnect sub-ledger for all-to-all token dispatch.
+
+    Each shard carries its own Flash/DRAM/XPU channel clocks, so the
+    per-step latency of an expert-parallel decode is the *max* over the
+    shard timelines (shards progress independently) rather than the sum
+    a single-device timeline would charge — that makespan semantics is
+    the whole point of EP sharding in this cost model.  Energy and
+    traffic accumulators simply sum across shards (energy is
+    time-independent; partitioning hides latency, it does not un-spend
+    joules), and the all-to-all bytes/energy live on the interconnect
+    sub-ledger's ``ici_*`` accumulators.
+
+    The aggregate exposes the same read API the engine, scheduler and
+    benchmarks use on a plain :class:`CostLedger` (``snapshot`` /
+    ``delta_since`` / ``total_latency_s`` / ``total_energy_j`` / ...);
+    write traffic goes to the per-shard ledgers via :attr:`shards` (the
+    engine routes each expert's events to its owning shard) and to
+    :meth:`ici_transfer` / :meth:`ici_transfer_at` for dispatch bytes.
+    With one shard and no interconnect events every aggregate equals the
+    single ledger's value exactly — the ``ep_shards=1`` equivalence the
+    fidelity benchmark asserts.
+    """
+
+    def __init__(self, system: SystemSpec, n_shards: int):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.system = system
+        self.n_shards = int(n_shards)
+        self.shards = [CostLedger(system=system)
+                       for _ in range(self.n_shards)]
+        # Dedicated sub-ledger for the shared interconnect channel; its
+        # flash/dram/compute channels never see an event.
+        self.ici = CostLedger(system=system)
+
+    # ------------------------------------------------------------ routing
+    def shard_for(self, shard: int) -> CostLedger:
+        return self.shards[shard]
+
+    def ici_transfer_at(self, t_ready: float, nbytes: float):
+        return self.ici.ici_transfer_at(t_ready, nbytes)
+
+    def ici_transfer(self, nbytes: float) -> None:
+        self.ici.ici_transfer(nbytes)
+
+    # ----------------------------------------------------------- timeline
+    @property
+    def now(self) -> float:
+        """Makespan frontier: the latest completion over every shard's
+        channels and the interconnect."""
+        return max([led.now for led in self.shards] + [self.ici.now])
+
+    def compute_frontier(self) -> float:
+        """Latest compute-channel completion across shards — the instant
+        a step's (globally synchronized) routing can be derived."""
+        return max(led.compute_ch.busy_until for led in self.shards)
+
+    # ------------------------------------------------------------ summary
+    @property
+    def total_latency_s(self) -> float:
+        return self.now
+
+    @property
+    def serial_latency_s(self) -> float:
+        """What a fully serialized single-device replay of every shard's
+        events (plus the dispatch traffic) would take."""
+        return sum(led.serial_latency_s for led in self.shards) \
+            + self.ici.ici_latency_s
+
+    @property
+    def overlap_saved_s(self) -> float:
+        return max(0.0, self.serial_latency_s - self.total_latency_s)
+
+    @property
+    def total_energy_j(self) -> float:
+        return sum(led.total_energy_j for led in self.shards) \
+            + self.ici.total_energy_j
+
+    @property
+    def prefetch_wasted_energy_j(self) -> float:
+        return sum(led.prefetch_wasted_energy_j for led in self.shards)
+
+    @property
+    def io_stall_s(self) -> float:
+        return sum(led.io_stall_s for led in self.shards)
+
+    def snapshot(self) -> dict:
+        """Aggregate snapshot: accumulators summed across shards (and the
+        interconnect), makespan-derived fields recomputed from the
+        aggregate timelines."""
+        out = self.shards[0].snapshot()
+        # The ici sub-ledger's flash/dram/compute accumulators are always
+        # zero, so folding its full snapshot in adds only the ici_* keys.
+        for led in self.shards[1:] + [self.ici]:
+            snap = led.snapshot()
+            for k in out:
+                out[k] += snap[k]
+        out["total_latency_s"] = self.total_latency_s
+        out["serial_latency_s"] = self.serial_latency_s
+        out["overlap_saved_s"] = self.overlap_saved_s
+        return out
+
+    def per_shard_snapshots(self) -> list:
+        return [led.snapshot() for led in self.shards]
+
+    def delta_since(self, prev: Optional[dict]) -> dict:
+        cur = self.snapshot()
+        if prev is None:
+            return cur
+        return {k: cur[k] - prev.get(k, 0.0) for k in cur}
+
+    def clone(self) -> "ShardedCostLedger":
+        import copy
+
+        return copy.deepcopy(self)
+
+    def reset(self) -> None:
+        for led in self.shards:
+            led.reset()
+        self.ici.reset()

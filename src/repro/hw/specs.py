@@ -14,6 +14,7 @@ Two profiles:
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,12 +69,20 @@ class ComputeSpec:
 
 @dataclasses.dataclass(frozen=True)
 class SystemSpec:
-    """A full offload system: compute + fast tier (cache) + slow tier."""
+    """A full offload system: compute + fast tier (cache) + slow tier.
+
+    ``interconnect`` models the device-to-device link the expert-parallel
+    serving mode charges all-to-all token dispatch on (``None`` keeps the
+    cost model single-device; the sharded ledger falls back to the DRAM
+    tier's rates if asked anyway).  Its ``capacity_bytes`` is
+    meaningless for a link and set to ``inf``.
+    """
 
     name: str
     compute: ComputeSpec
     dram: MemoryTier        # the expert-cache tier
     flash: MemoryTier       # the backing store (miss target)
+    interconnect: Optional[MemoryTier] = None   # shard-to-shard link
 
     @property
     def miss_penalty_ratio_bw(self) -> float:
@@ -107,6 +116,16 @@ MOBILE_SOC = SystemSpec(
         bandwidth_bytes_per_s=10e9 / 8,    # 10 Gbps -> 1.25 GB/s
         energy_pj_per_bit=103.0,
         capacity_bytes=128 * 2**30,
+    ),
+    # Die-to-die NoC/D2D link for the multi-die expert-parallel variant
+    # of the SoC: faster than Flash, slower and costlier per bit than
+    # on-die LPDDR (UCIe-class effective rates; a modeling choice, the
+    # paper's single-device figures never touch it).
+    interconnect=MemoryTier(
+        name="d2d_link",
+        bandwidth_bytes_per_s=32e9,
+        energy_pj_per_bit=2.0,
+        capacity_bytes=float("inf"),
     ),
 )
 
@@ -162,6 +181,14 @@ TPU_OFFLOAD = SystemSpec(
         bandwidth_bytes_per_s=32e9,   # PCIe gen4 x16-ish effective
         energy_pj_per_bit=15.0,
         capacity_bytes=512 * 2**30,
+    ),
+    # One ICI link per chip (v5e: 50 GB/s/link); all-to-all dispatch in
+    # the expert-parallel mode is charged at the per-link rate.
+    interconnect=MemoryTier(
+        name="ici",
+        bandwidth_bytes_per_s=50e9,
+        energy_pj_per_bit=0.5,
+        capacity_bytes=float("inf"),
     ),
 )
 

@@ -40,7 +40,8 @@ from repro.serving.server import Request, SliceMoEServer
 DEFAULT_KNOBS = {
     "high_bits": 8, "low_bits": 4, "cache_bytes": 4.0e6,
     "policy_kind": "cache_prior", "slice_mode": "dbsc", "theta": 0.5,
-    "miss_rate_target": 0.05, "warmup": "pcw",
+    "miss_rate_target": 0.05, "warmup": "pcw", "async_io": False,
+    "ep_shards": 1,
 }
 
 
@@ -56,6 +57,8 @@ def cli_engine_knobs(args) -> dict:
         "theta": args.theta,
         "miss_rate_target": args.miss_target,
         "warmup": args.warmup,
+        "async_io": args.async_io,
+        "ep_shards": args.ep_shards,
     }
 
 
@@ -70,6 +73,8 @@ def build_engine_config(args) -> EngineConfig:
                              theta=k["theta"]),
         miss_rate_target=k["miss_rate_target"],
         warmup=k["warmup"],
+        async_io=k["async_io"],
+        ep_shards=k["ep_shards"],
     )
 
 
@@ -121,6 +126,18 @@ def main():
     ap.add_argument("--theta", type=float, default=None)
     ap.add_argument("--miss-target", type=float, default=None,
                     help="miss-rate constraint (live default 0.05)")
+    ap.add_argument("--async-io", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="asynchronous slice-I/O decode timeline "
+                         "(live default: serialized; --no-async-io "
+                         "forces a recorded async trace back to the "
+                         "serialized replay)")
+    ap.add_argument("--ep-shards", type=int, default=None,
+                    help="expert-parallel shards: partition experts and "
+                         "their DRAM slice caches round-robin across "
+                         "this many shards, charging all-to-all token "
+                         "dispatch on the interconnect channel (live "
+                         "default 1 = single device)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--record-trace", default=None, metavar="PATH",
                     help="save the served traffic's routing trace "
@@ -180,6 +197,20 @@ def main():
                 / max(c.metrics["cache_stats"]["msb_hits"]
                       + c.metrics["cache_stats"]["msb_misses"], 1), 4)
         print(json.dumps(line))
+
+    engine = getattr(server, "_engine", None)
+    if engine is not None and hasattr(engine, "shard_breakdown"):
+        breakdown = engine.shard_breakdown()
+        if breakdown is not None:
+            print(json.dumps({"per_shard": [
+                {k: round(v, 6) if isinstance(v, float) else v
+                 for k, v in row.items() if k != "experts"}
+                for row in breakdown]}))
+            snap = engine.ledger.snapshot()
+            print(json.dumps({
+                "all_to_all_bytes": snap["ici_bytes"],
+                "all_to_all_energy_mJ": round(
+                    snap["ici_energy_j"] * 1e3, 6)}))
 
     if recorder is not None:
         tr = recorder.trace()

@@ -207,7 +207,7 @@ def _cross_attn_block(p: dict, x: jax.Array, enc_k: jax.Array,
 def _ffn_block(p: dict, x: jax.Array, cfg: ModelConfig, spec: BlockSpec, *,
                collect, use_lsb=None, gate_override=None,
                policy=None, policy_state=None, mat=None, token_mask=None,
-               quant_execution=None):
+               quant_execution=None, force_high_bit=False):
     aux = None
     if spec.ffn == "dense":
         h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
@@ -219,7 +219,8 @@ def _ffn_block(p: dict, x: jax.Array, cfg: ModelConfig, spec: BlockSpec, *,
             p["moe"], h.reshape(-1, d), cfg.moe,
             use_lsb=use_lsb, gate_override=gate_override,
             policy=policy, policy_state=policy_state, mat=mat,
-            token_mask=token_mask, quant_execution=quant_execution)
+            token_mask=token_mask, quant_execution=quant_execution,
+            force_high_bit=force_high_bit)
         x = x + y.reshape(b, s, d)
         if not collect:
             aux = {"aux_loss": aux["aux_loss"],
@@ -460,8 +461,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
             max_seq: int, *, prefix_embeds=None, encoder_frames=None,
             collect_trace: bool = False, use_window: bool = False,
-            mat=None, quant_execution: Optional[bool] = None):
-    """Forward over the prompt, returning (last-token logits, cache, aux)."""
+            mat=None, quant_execution: Optional[bool] = None,
+            policy=None):
+    """Forward over the prompt, returning (last-token logits, cache, aux).
+
+    ``policy``: optional *state-free* RoutingPolicy (e.g. cumsum) to
+    route the prompt with — selection and the aux trace (ids/gates/
+    active/critical) follow the policy, while compute stays high-bit for
+    every routed expert (the engine's prefill discipline).  Stateful
+    kinds needing residency masks cannot run here.
+    """
     x = embed_inputs(params, cfg, tokens, prefix_embeds)
     b, s, d = x.shape
     positions = jnp.arange(s)[None, :]
@@ -508,7 +517,9 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 cache_entries[key] = {"state": state,
                                       "conv": conv_tail.astype(dtype)}
             x, aux = _ffn_block(p, x, cfg, spec, collect=collect_trace,
-                                mat=mat, quant_execution=quant_execution)
+                                mat=mat, quant_execution=quant_execution,
+                                policy=policy,
+                                force_high_bit=policy is not None)
             if aux is not None:
                 auxes.append(aux)
         stacked = {}

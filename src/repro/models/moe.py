@@ -240,6 +240,7 @@ def moe_apply(
     deterministic: bool = True,
     rng: Optional[jax.Array] = None,
     quant_execution: Optional[bool] = None,  # None -> policy decides
+    force_high_bit: bool = False,  # prefill: policy routes, compute hi-bit
 ):
     """Full MoE layer.  Returns (y [T, d], aux: dict).
 
@@ -312,8 +313,16 @@ def moe_apply(
             lsb_needed = jnp.zeros((cfg.n_experts,), bool)
         else:  # dbsc
             use_lsb = lsb_needed
-            if not policy.fetch_lsb_on_miss:
+            # Prefill threads a state-free policy with no policy_state;
+            # the residency intersection only applies during decode.
+            if not policy.fetch_lsb_on_miss and policy_state is not None:
                 use_lsb = lsb_needed & policy_state["cached_lsb"]
+        if force_high_bit:
+            # Prefill discipline: the configured policy picks *which*
+            # experts run (and emits the active/critical trace), but
+            # every routed expert computes MSB+LSB.  use_lsb=None takes
+            # the exact full-dequant path the policy-free prefill took.
+            use_lsb = None
     else:
         p = probs
         if not deterministic and cfg.router_noise > 0 and rng is not None:
@@ -389,7 +398,10 @@ def moe_apply(
         aux["critical"] = critical
         aux["msb_needed"] = msb_needed
         aux["lsb_needed"] = lsb_needed
-        aux["use_lsb"] = use_lsb
+        # force_high_bit clears use_lsb to None for compute; the trace
+        # reports what actually ran (all experts high-bit).
+        aux["use_lsb"] = use_lsb if use_lsb is not None \
+            else jnp.ones((cfg.n_experts,), bool)
         aux["active"] = active if active is not None \
             else jnp.ones(ids.shape, bool)
     return y, aux

@@ -345,5 +345,6 @@ class ContinuousBatchingScheduler:
         return self.completions
 
     def summary(self, **kw) -> dict:
+        kw.setdefault("per_shard", self.engine.shard_breakdown())
         return self.telemetry.summary(
             total_energy_j=self.engine.ledger.total_energy_j, **kw)

@@ -147,7 +147,12 @@ class FleetTelemetry:
         return sum(tail) / len(tail)
 
     def summary(self, *, total_energy_j: Optional[float] = None,
-                wall_s: Optional[float] = None) -> dict:
+                wall_s: Optional[float] = None,
+                per_shard: Optional[list] = None) -> dict:
+        """Fleet aggregates.  ``per_shard`` (expert-parallel engines
+        only) is the engine's shard breakdown — per-shard cache
+        miss/energy/makespan rows — attached verbatim under
+        ``"per_shard"``."""
         done = self.completed()
         ttfts = [r.ttft for r in done]
         per_tok = [r.per_token_s for r in done if r.n_generated > 1]
@@ -201,6 +206,8 @@ class FleetTelemetry:
                 + r.n_generated
         if len(per_tenant) > 1:
             out["tokens_per_tenant"] = per_tenant
+        if per_shard is not None:
+            out["per_shard"] = per_shard
         return out
 
 

@@ -96,10 +96,15 @@ def engine_config_from_meta(meta: TraceMeta, **overrides) -> EngineConfig:
 
     Override keys are the flat ``TraceMeta.engine`` knob names
     (``cache_bytes``, ``high_bits``, ``low_bits``, ``slice_mode``,
-    ``warmup``, ``prefetch_top_m``, ``async_io``, ...).  Unknown keys
-    raise, so a sweep axis typo can't silently evaluate the default.
+    ``warmup``, ``prefetch_top_m``, ``async_io``, ``ep_shards``, ...).
+    Unknown keys raise, so a sweep axis typo can't silently evaluate the
+    default.  ``ep_shards`` is sweepable on *any* trace — including one
+    recorded before the knob existed (it defaults to 1) — because expert
+    placement is a pure function of the expert ids the trace already
+    carries.
     """
     e = dict(meta.engine)
+    e.setdefault("ep_shards", 1)    # traces recorded before EP existed
     unknown = set(overrides) - set(e)
     if unknown:
         raise KeyError(f"unknown engine override(s) {sorted(unknown)}; "
@@ -121,6 +126,7 @@ def engine_config_from_meta(meta: TraceMeta, **overrides) -> EngineConfig:
         prefetch_top_m=e["prefetch_top_m"],
         async_io=bool(e["async_io"]),
         hotness_request_decay=float(e["hotness_request_decay"]),
+        ep_shards=int(e["ep_shards"]),
     )
 
 
@@ -141,6 +147,9 @@ class ReplayReport:
     alpha_curve: List[float]
     wall_s: float                      # host time, all events
     decode_wall_s: float               # host time, decode events only
+    # Expert-parallel replays only: per-shard [(label, accesses, misses)]
+    # epoch windows (None on single-device replays).
+    per_shard_epoch_counts: Optional[list] = None
 
     @property
     def decode_miss_rate(self) -> float:
@@ -205,7 +214,7 @@ class ReplayEngine(PersistentEngine):
         self.expert_macs_per_token = meta.expert_macs_per_token
 
         self.cache = ecfg.cache()
-        self.ledger = CostLedger(system=SYSTEM_PROFILES[ecfg.system])
+        self.ledger = ecfg.ledger()
         self.tracker = HotnessTracker(self.n_moe_layers, self.n_experts)
         self.requests_served = 0
         self.recorder = None
@@ -233,6 +242,30 @@ class ReplayEngine(PersistentEngine):
         self._decode_misses = 0
         self._finished = False
 
+    # --------------------------------------------------------- test hook
+    def force_sharded(self, n_shards: int = 1) -> "ReplayEngine":
+        """Swap in the expert-parallel cache/ledger machinery at an
+        arbitrary shard count *without* touching the config.
+
+        The charge path dispatches on the component types, so forcing
+        ``n_shards=1`` runs the full sharded code over a single shard —
+        the equivalence the fidelity benchmark asserts against the plain
+        single-device components.  Must be called before any event is
+        consumed (it rebuilds cache and ledger empty).
+        """
+        from repro.core.shard import ShardedSliceCache
+        from repro.hw.energy import ShardedCostLedger
+
+        if self.requests_served or self._miss_curve:
+            raise RuntimeError("force_sharded must precede consumption")
+        slice_aware = self.ecfg.policy.slice_mode == "dbsc" \
+            and not self.ecfg.fused_slices
+        self.cache = ShardedSliceCache(self.ecfg.cache_bytes, n_shards,
+                                       slice_aware=slice_aware)
+        self.ledger = ShardedCostLedger(
+            SYSTEM_PROFILES[self.ecfg.system], n_shards)
+        return self
+
     # ------------------------------------------------- disabled live API
     def run_prefill(self, *a, **k):          # pragma: no cover - guard
         raise TypeError("ReplayEngine is trace-driven; feed events via "
@@ -248,8 +281,10 @@ class ReplayEngine(PersistentEngine):
         t0 = time.perf_counter()
         if event.kind == "prefill":
             self._begin_request(event.label, event.inflight)
-            self._charge_prefill(np.asarray(event.ids),
-                                 np.asarray(event.gates))
+            active = getattr(event, "active", None)
+            self._charge_prefill(
+                np.asarray(event.ids), np.asarray(event.gates),
+                None if active is None else np.asarray(active, bool))
             self._finish_prefill(event.label)
             self.controller = self.new_controller()
             self._n_prefills += 1
@@ -307,7 +342,11 @@ class ReplayEngine(PersistentEngine):
                       if self.prefetcher is not None else None),
             alpha_curve=list(self._alpha_curve),
             wall_s=self.wall_s,
-            decode_wall_s=self.decode_wall_s)
+            decode_wall_s=self.decode_wall_s,
+            per_shard_epoch_counts=(
+                self.cache.per_shard_epoch_counts()
+                if hasattr(self.cache, "per_shard_epoch_counts")
+                else None))
 
     # --------------------------------------------------------------- fork
     def clone(self) -> "ReplayEngine":

@@ -87,6 +87,7 @@ class SyntheticSpec:
             "lsb_keep_frac": 0.125, "system": self.system,
             "fused_slices": False, "prefetch_top_m": None,
             "async_io": False, "hotness_request_decay": 0.5,
+            "ep_shards": 1,
         }
         unknown = set(engine_overrides) - set(engine)
         if unknown:

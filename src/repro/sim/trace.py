@@ -107,17 +107,26 @@ class TraceMeta:
 
 @dataclasses.dataclass
 class PrefillEvent:
-    """One admitted request's prompt routing + boundary metadata."""
+    """One admitted request's prompt routing + boundary metadata.
+
+    ``active`` (optional, None = every slot) records the routing
+    policy's slot-activation mask — under cumsum prefill most of the
+    ``k_max`` slots are deactivated and the charge path must skip them.
+    Traces recorded before the field existed load with ``active=None``
+    and replay as all-active, exactly as they were charged live.
+    """
 
     ids: np.ndarray            # [n_periods, n_moe_pos, T, k] int
     gates: np.ndarray          # float64, same shape
+    active: Optional[np.ndarray] = None    # bool, same shape (or None)
     label: Optional[str] = None
     inflight: int = 0
     request_id: Optional[int] = None
     tenant: str = "default"
 
     kind = "prefill"
-    _array_fields = ("ids", "gates")
+    _array_fields = ("ids", "gates", "active")
+    _optional_array_fields = ("active",)   # absent in pre-EP traces
 
 
 @dataclasses.dataclass
@@ -185,6 +194,8 @@ class Trace:
             for f in dataclasses.fields(ev):
                 v = getattr(ev, f.name)
                 if f.name in ev._array_fields:
+                    if v is None:        # optional array (e.g. active)
+                        continue
                     arrays[f"e{i:06d}_{f.name}"] = np.asarray(
                         v, _ARRAY_DTYPES[f.name])
                 else:
@@ -205,10 +216,18 @@ class Trace:
             events = []
             for i, sc in enumerate(scalars):
                 etype = _EVENT_TYPES[sc.pop("kind")]
+                optional = getattr(etype, "_optional_array_fields", ())
                 kw = dict(sc)
                 for f in etype._array_fields:
-                    kw[f] = np.asarray(z[f"e{i:06d}_{f}"],
-                                       _ARRAY_DTYPES[f])
+                    name = f"e{i:06d}_{f}"
+                    if name in z.files:
+                        kw[f] = np.asarray(z[name], _ARRAY_DTYPES[f])
+                    elif f not in optional:
+                        # fail fast with the missing array's name (a
+                        # truncated/corrupt file), as before the
+                        # optional-field support landed
+                        kw[f] = np.asarray(z[name], _ARRAY_DTYPES[f])
+                    # absent optional arrays keep their None default
                 events.append(etype(**kw))
         return cls(meta=meta, events=events)
 
@@ -223,7 +242,8 @@ class Trace:
                     if fld.name in ev._array_fields:
                         # tolist(): Python scalars; float repr round-trips
                         # exactly through json, keeping jsonl==npz parity.
-                        line[fld.name] = np.asarray(v).tolist()
+                        line[fld.name] = None if v is None \
+                            else np.asarray(v).tolist()
                     else:
                         line[fld.name] = v
                 f.write(json.dumps(line) + "\n")
@@ -243,7 +263,10 @@ class Trace:
                     meta = TraceMeta.from_dict(d)
                     continue
                 etype = _EVENT_TYPES[t]
+                optional = getattr(etype, "_optional_array_fields", ())
                 for fld in etype._array_fields:
+                    if fld in optional and d.get(fld) is None:
+                        continue        # absent/null: keep None default
                     d[fld] = np.asarray(d[fld], _ARRAY_DTYPES[fld])
                 events.append(etype(**d))
         if meta is None:
@@ -261,7 +284,10 @@ def traces_equal(a: Trace, b: Trace) -> bool:
         for f in dataclasses.fields(ea):
             va, vb = getattr(ea, f.name), getattr(eb, f.name)
             if f.name in ea._array_fields:
-                if not np.array_equal(np.asarray(va), np.asarray(vb)):
+                if (va is None) != (vb is None):
+                    return False
+                if va is not None and not np.array_equal(
+                        np.asarray(va), np.asarray(vb)):
                     return False
             elif va != vb:
                 return False
@@ -304,6 +330,7 @@ def engine_meta(engine) -> TraceMeta:
             "prefetch_top_m": ecfg.prefetch_top_m,
             "async_io": ecfg.async_io,
             "hotness_request_decay": ecfg.hotness_request_decay,
+            "ep_shards": ecfg.ep_shards,
         },
     )
 
@@ -331,10 +358,13 @@ class TraceRecorder:
 
     # ----------------------------------------------------------- callbacks
     def on_prefill(self, ids: np.ndarray, gates: np.ndarray, *,
+                   active: Optional[np.ndarray] = None,
                    label: Optional[str] = None, inflight: int = 0) -> None:
         self.events.append(PrefillEvent(
             ids=np.array(ids, _ARRAY_DTYPES["ids"]),
             gates=np.array(gates, _ARRAY_DTYPES["gates"]),
+            active=(None if active is None
+                    else np.array(active, _ARRAY_DTYPES["active"])),
             label=label, inflight=int(inflight)))
 
     def on_decode(self, tr) -> None:
