@@ -22,7 +22,7 @@ import traceback
 
 BENCH_NAMES = ["table1_amat", "fig8_accuracy", "fig9_energy",
                "fig10_warmup", "ablations", "roofline", "kernels_micro",
-               "serving_load", "sim_fidelity"]
+               "serving_load", "sim_fidelity", "controller_soak"]
 
 
 def _run_inline(name: str, quick: bool) -> None:

@@ -1,0 +1,32 @@
+"""Online SLO control: closed-loop policy adaptation for serving.
+
+The subsystem that holds SliceMoE's miss-rate constraint *live*, when
+tenant mixes and expert hotness shift and no static config is right for
+long (ROADMAP item 4).  Three pieces:
+
+* :mod:`repro.control.signals` — per-tenant sliding windows over the
+  charge-path counters (miss rate, low-bit fraction) and the serving
+  telemetry stream (TTFT, per-token latency, energy/token).
+* :mod:`repro.control.partition` — :class:`TenantPartitionedCache`, the
+  slice cache split into per-tenant byte-budget segments with shared
+  lookup visibility but isolated eviction domains (the resizable
+  analogue of the per-shard split in :mod:`repro.core.shard`).
+* :mod:`repro.control.controller` — :class:`SLOController`, the
+  decision loop: HOBBIT-style bit-plan demotion/promotion, partition
+  resizing and admission throttling, each bounded by hysteresis and
+  cooldown.
+
+Enabled via ``EngineConfig.controller``; see docs/control.md for the
+loop diagram and the replay-fidelity argument (every cache-affecting
+decision is a pure function of the charge-path stream, so a recorded
+controller run replays bit-identically through
+:mod:`repro.sim.replay`).
+"""
+
+from repro.control.controller import (ControllerConfig, SLOController,
+                                      TenantSLO)
+from repro.control.partition import TenantPartitionedCache
+from repro.control.signals import SlidingWindow, TenantSignals
+
+__all__ = ["ControllerConfig", "SLOController", "TenantSLO",
+           "TenantPartitionedCache", "SlidingWindow", "TenantSignals"]

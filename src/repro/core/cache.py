@@ -98,6 +98,12 @@ class SliceCache:
         """Whether ``key`` fits in its owning shard without eviction."""
         return self.used + nbytes <= self.capacity
 
+    def set_active_tenant(self, tenant) -> None:
+        """Tenant-attribution hint for fills.  No-op here: the flat cache
+        has no per-tenant segments.  The engine calls this unconditionally
+        on its charge path; :class:`repro.control.partition.
+        TenantPartitionedCache` overrides it to route fills."""
+
     def __init__(self, capacity_bytes: float, *, slice_aware: bool = True):
         self.capacity = float(capacity_bytes)
         self.slice_aware = slice_aware

@@ -91,9 +91,29 @@ class EngineConfig:
     # Flash/DRAM/XPU channel clocks; token dispatch to remote experts is
     # charged on the interconnect channel.  1 = the single-device model.
     ep_shards: int = 1
+    # Prefetch confidence floor: a layer transition must have been
+    # observed at least this many times before the prefetcher issues
+    # fills for it (0 = issue from the smoothing prior immediately).
+    # Suppresses cold-start blind fills that burn Flash energy.
+    prefetch_min_obs: int = 0
+    # Online SLO controller (repro.control.controller.ControllerConfig):
+    # per-tenant closed-loop bit-plan / cache-partition / admission
+    # adaptation.  None = static policy (everything above as configured).
+    controller: Optional["ControllerConfig"] = None
 
     def cache(self):
         slice_aware = self.policy.slice_mode == "dbsc" and not self.fused_slices
+        if self.controller is not None and self.controller.partition:
+            if self.ep_shards > 1:
+                raise ValueError(
+                    "controller cache partitioning and ep_shards > 1 are "
+                    "mutually exclusive: the DRAM budget cannot be split "
+                    "along both the tenant and the placement axis")
+            from repro.control.partition import TenantPartitionedCache
+            return TenantPartitionedCache(
+                self.cache_bytes, sorted(self.controller.slos),
+                shared_frac=self.controller.shared_frac,
+                slice_aware=slice_aware)
         if self.ep_shards > 1:
             return ShardedSliceCache(self.cache_bytes, self.ep_shards,
                                      slice_aware=slice_aware)
@@ -115,6 +135,10 @@ class StepCharge:
     misses: int
     per_slot_miss: np.ndarray             # [B] selection-weighted miss rate
     ledger_delta: dict                    # cost delta for this step
+    # Per-tenant charge-path counters {tenant: {tokens, accesses, misses,
+    # critical, critical_low}} — the SLO controller's input signal.  None
+    # unless slot tenants were supplied or a controller is attached.
+    per_tenant: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -134,13 +158,26 @@ class _StepTrace:
     slot_misses: np.ndarray
     accesses: int = 0
     misses: int = 0
+    # Tenant attribution: [T] tenant names (None entries = unattributed
+    # slots).  Recorded into traces; drives the controller's per-tenant
+    # signals and the partitioned cache's fill routing.
+    slot_tenants: Optional[list] = None
+    # Controller bit plan for this step: [T] int8, 0 = full AMAT plan,
+    # 1 = demoted to MSB-only.  Set by the engine *after* the recorder
+    # sees the trace (the plan is recomputed on replay, never recorded).
+    slot_bit_level: Optional[np.ndarray] = None
+    # Accuracy-proxy counters (mutated during replay, controller-only):
+    # per-slot critical selections, and those served at low precision.
+    slot_critical: Optional[np.ndarray] = None
+    slot_critical_low: Optional[np.ndarray] = None
 
     @property
     def P(self) -> int:
         return self.ids.shape[0]
 
     @classmethod
-    def from_aux(cls, aux, slot_active: Optional[np.ndarray]) -> "_StepTrace":
+    def from_aux(cls, aux, slot_active: Optional[np.ndarray],
+                 slot_tenants: Optional[list] = None) -> "_StepTrace":
         ids = np.asarray(aux["moe"]["ids"])            # [P, npos, T, k]
         T = ids.shape[2]
         slot_mask = np.ones(T, bool) if slot_active is None \
@@ -153,6 +190,7 @@ class _StepTrace:
             slot_mask=slot_mask,
             slot_accesses=np.zeros(T, np.int64),
             slot_misses=np.zeros(T, np.int64),
+            slot_tenants=slot_tenants,
         )
 
 
@@ -197,7 +235,18 @@ class PersistentEngine:
             from repro.core.prefetch import TransitionPrefetcher
             self.prefetcher = TransitionPrefetcher(
                 self.n_moe_layers, self.n_experts,
-                top_m=ecfg.prefetch_top_m)
+                top_m=ecfg.prefetch_top_m,
+                min_transitions=ecfg.prefetch_min_obs)
+
+        # Online SLO controller: closed-loop bit-plan / cache-partition
+        # adaptation.  Named slo_controller (not controller) because the
+        # per-request MissRateController occupies that name on the
+        # single-request engine and the replay simulator.
+        self.slo_controller = None
+        if ecfg.controller is not None:
+            from repro.control.controller import SLOController
+            self.slo_controller = SLOController(
+                ecfg.controller, cache_bytes=ecfg.cache_bytes)
 
         # BuddyMoE offline calibration (policy.kind == 'buddy'): nearest
         # expert by weight cosine similarity, per (position, period).
@@ -347,6 +396,7 @@ class PersistentEngine:
     # ------------------------------------------------------------- prefill
     def run_prefill(self, tokens: jax.Array, *,
                     label: Optional[str] = None, inflight: int = 0,
+                    tenant: str = "default",
                     **model_kwargs):
         """Prefill one request against the warm shared cache.
 
@@ -364,8 +414,12 @@ class PersistentEngine:
         exponent is scaled by ``1/(1+inflight)`` so that under concurrent
         batching — where admissions arrive many per request *completed* —
         accumulated hotness doesn't collapse with arrival rate.
+
+        ``tenant``: attribution for this request's cache fills (prefill
+        streaming *and* the warmup reshape installs) under a
+        tenant-partitioned cache; ignored otherwise.
         """
-        self._begin_request(label, inflight)
+        self._begin_request(label, inflight, tenant=tenant)
 
         logits, kv_cache, aux = self._jit_prefill(
             self.qparams, tokens=tokens, **model_kwargs)
@@ -383,7 +437,8 @@ class PersistentEngine:
             active = None
         if self.recorder is not None:
             self.recorder.on_prefill(ids, gates, active=active,
-                                     label=label, inflight=inflight)
+                                     label=label, inflight=inflight,
+                                     tenant=tenant)
         self._charge_prefill(ids, gates, active)
         info = self._finish_prefill(label)
         return logits, kv_cache, info
@@ -393,8 +448,15 @@ class PersistentEngine:
     # trace-replay simulator (repro.sim.replay) can drive them from a
     # recorded or synthetic trace with zero JAX involvement while staying
     # bit-identical to the live path above.
-    def _begin_request(self, label: Optional[str], inflight: int) -> None:
-        """Request-boundary bookkeeping: hotness aging + stats epoch."""
+    def _begin_request(self, label: Optional[str], inflight: int,
+                       tenant: str = "default") -> None:
+        """Request-boundary bookkeeping: hotness aging + stats epoch.
+
+        Also points the cache's fill attribution at the admitting
+        request's tenant (sticky until the next request / decode-step
+        override) — prefill fills and the PCW reshape land in that
+        tenant's segment under a partitioned cache."""
+        self.cache.set_active_tenant(tenant)
         if self.requests_served > 0:
             decay = self.ecfg.hotness_request_decay \
                 ** (1.0 / (1.0 + max(inflight, 0)))
@@ -494,13 +556,16 @@ class PersistentEngine:
     def decode_batch(self, token: jax.Array, kv_cache: dict, *,
                      alpha: float = 0.0,
                      slot_active: Optional[np.ndarray] = None,
+                     slot_tenants: Optional[list] = None,
                      **model_kwargs):
         """One batched decode step for the scheduler.
 
         ``token``: [B] int32 (padding slots carry an arbitrary token);
         ``slot_active``: [B] bool — padding slots are masked out of MoE
         routing inside the jitted step (no expert capacity consumed, no
-        trace entries) and excluded from cache/cost accounting.
+        trace entries) and excluded from cache/cost accounting;
+        ``slot_tenants``: [B] tenant names (None entries allowed) for
+        per-tenant charge attribution and the SLO controller's signals.
 
         Returns ``(logits [B, V], kv_cache, StepCharge)``.
         """
@@ -511,11 +576,13 @@ class PersistentEngine:
             self.qparams, token=token, cache=kv_cache,
             policy_state=ps, alpha=jnp.float32(alpha),
             token_mask=mask, **model_kwargs)
-        charge = self.charge_decode_step(aux, slot_active=slot_active)
+        charge = self.charge_decode_step(aux, slot_active=slot_active,
+                                         slot_tenants=slot_tenants)
         return logits, kv_cache, charge
 
     def charge_decode_step(self, aux,
-                           slot_active: Optional[np.ndarray] = None
+                           slot_active: Optional[np.ndarray] = None,
+                           slot_tenants: Optional[list] = None
                            ) -> StepCharge:
         """Replay one decode step's slice demand into cache + ledger.
 
@@ -537,7 +604,8 @@ class PersistentEngine:
           ride the Flash channel behind demand fills, and only the layer
           that actually consumes a late slice stalls.
         """
-        return self.charge_step_trace(_StepTrace.from_aux(aux, slot_active))
+        return self.charge_step_trace(
+            _StepTrace.from_aux(aux, slot_active, slot_tenants))
 
     def charge_step_trace(self, tr: "_StepTrace") -> StepCharge:
         """Charge an already-assembled :class:`_StepTrace`.
@@ -546,12 +614,35 @@ class PersistentEngine:
         (which builds the trace from the jit aux) and the trace-replay
         simulator (which builds it from a recorded or synthetic routing
         trace) — both run the *identical* cache/ledger replay below.
+
+        The SLO controller is applied entirely inside this function —
+        plan the step's bit levels after the recorder captures the raw
+        trace, observe/actuate after the charge — and consumes only
+        charge-path counters, so a recorded run replays through the same
+        controller decisions bit-identically (the fidelity gate in
+        benchmarks/controller_soak.py).
         """
         if self.recorder is not None:
             self.recorder.on_decode(tr)
+        ctl = self.slo_controller
+        T = tr.slot_mask.shape[0]
+        if ctl is not None:
+            tr.slot_bit_level = ctl.plan_bits(tr.slot_tenants, T)
+        # Accuracy-proxy counters run controller or not, so a *static*
+        # config's low-bit exposure is measurable on the same accounting
+        # the controller is judged by (benchmarks/controller_soak.py).
+        tr.slot_critical = np.zeros(T, np.int64)
+        tr.slot_critical_low = np.zeros(T, np.int64)
         replay = self._charge_async if self.ecfg.async_io \
             else self._charge_sync
-        return replay(tr)
+        charge = replay(tr)
+        if ctl is not None:
+            actions = ctl.observe_step(charge.per_tenant or {},
+                                       charge.ledger_delta)
+            budgets = actions.get("budgets")
+            if budgets and hasattr(self.cache, "set_budgets"):
+                self.cache.set_budgets(budgets)
+        return charge
 
     # -------------------------------------------------- shard routing bits
     # All four helpers dispatch on the *ledger object*, not on the
@@ -582,11 +673,36 @@ class PersistentEngine:
 
     def _segment_capacity(self, key: SliceKey) -> float:
         """Capacity of the cache segment that would hold ``key`` — the
-        owning shard's slice of the budget under EP, the whole cache
+        owning shard's slice of the budget under EP, the currently
+        targeted tenant segment under partitioning, the whole cache
         otherwise (the "would this fill be dropped" bound)."""
         if isinstance(self.cache, ShardedSliceCache):
             return self.cache.shard(key).capacity
+        if self._partitioned:
+            return self.cache.fill_capacity()
         return self.cache.capacity
+
+    @property
+    def _partitioned(self) -> bool:
+        """Whether the cache routes fills into per-tenant segments."""
+        return hasattr(self.cache, "set_budgets")
+
+    def _expert_owner(self, tr: "_StepTrace", period: int, pidx: int):
+        """expert id -> tenant whose segment a miss fill charges: the
+        first active slot (in slot-index order — deterministic, so replay
+        agrees) selecting that expert.  None when fills are unattributed
+        (no tenants, or cache not partitioned)."""
+        if tr.slot_tenants is None or not self._partitioned:
+            return None
+        owner: dict = {}
+        act2d = tr.active[period, pidx] & tr.slot_mask[:, None]
+        for b in np.nonzero(tr.slot_mask)[0]:
+            t = tr.slot_tenants[b]
+            if t is None:
+                continue
+            for e in tr.ids[period, pidx][b][act2d[b]]:
+                owner.setdefault(int(e), t)
+        return owner
 
     def _a2a_layer_demand(self, act2d: np.ndarray, ids2d: np.ndarray):
         """All-to-all demand for one layer's ``[T, k]`` routing:
@@ -631,14 +747,32 @@ class PersistentEngine:
         flat_ids = tr.ids[period, pidx][act2d]
         flat_gates = tr.gates[period, pidx][act2d]
         msb_demand = np.unique(flat_ids)
+        crit2d = act2d & tr.critical[period, pidx]
+        demoted = None if tr.slot_bit_level is None \
+            else tr.slot_bit_level > 0                            # [T]
         if mode == "highbit":
             lsb_wanted = set(int(e) for e in msb_demand)
         elif mode in ("lowbit", "amat_static"):
             lsb_wanted = set()
-        else:   # dbsc
-            crit_ids = tr.ids[period, pidx][
-                act2d & tr.critical[period, pidx]]
+        else:   # dbsc — a controller-demoted slot stops demanding LSBs
+            # (AMAT truncation: its MSB slice is already a valid low-bit
+            # tensor).  An expert critically selected by *any* kept slot
+            # still wants its LSB.
+            kept2d = crit2d if demoted is None \
+                else crit2d & ~demoted[:, None]
+            crit_ids = tr.ids[period, pidx][kept2d]
             lsb_wanted = set(int(e) for e in np.unique(crit_ids))
+        if tr.slot_critical is not None:
+            # Accuracy proxy, plan-level: a demoted slot's critical
+            # selections all count as served-low even when another slot
+            # kept the expert's LSB resident (conservative overcount —
+            # the guard promotes slightly early, never late).
+            tr.slot_critical += crit2d.sum(axis=1)
+            if mode in ("lowbit", "amat_static"):
+                tr.slot_critical_low += crit2d.sum(axis=1)
+            elif mode == "dbsc" and demoted is not None:
+                tr.slot_critical_low += \
+                    (crit2d & demoted[:, None]).sum(axis=1)
         tok_per_e = np.bincount(flat_ids, minlength=self.n_experts)
         return flat_ids, flat_gates, msb_demand, lsb_wanted, tok_per_e
 
@@ -671,6 +805,28 @@ class PersistentEngine:
             tr.slot_accesses[b] += sel.size
             tr.slot_misses[b] += int(missed_expert[sel].sum())
 
+    def _per_tenant_counts(self, tr: "_StepTrace") -> Optional[dict]:
+        """Aggregate the per-slot replay counters by tenant (slots with
+        no tenant fall under "default")."""
+        if tr.slot_tenants is None and self.slo_controller is None:
+            return None
+        out: dict = {}
+        for b in np.nonzero(tr.slot_mask)[0]:
+            t = "default"
+            if tr.slot_tenants is not None \
+                    and tr.slot_tenants[b] is not None:
+                t = tr.slot_tenants[b]
+            row = out.setdefault(t, {"tokens": 0, "accesses": 0,
+                                     "misses": 0, "critical": 0,
+                                     "critical_low": 0})
+            row["tokens"] += 1
+            row["accesses"] += int(tr.slot_accesses[b])
+            row["misses"] += int(tr.slot_misses[b])
+            if tr.slot_critical is not None:
+                row["critical"] += int(tr.slot_critical[b])
+                row["critical_low"] += int(tr.slot_critical_low[b])
+        return out
+
     def _step_charge(self, tr: "_StepTrace", base: dict) -> StepCharge:
         return StepCharge(
             miss_rate=tr.misses / max(tr.accesses, 1),
@@ -678,6 +834,7 @@ class PersistentEngine:
             misses=tr.misses,
             per_slot_miss=tr.slot_misses / np.maximum(tr.slot_accesses, 1),
             ledger_delta=self.ledger.delta_since(base),
+            per_tenant=self._per_tenant_counts(tr),
         )
 
     # -------------------------------------------- serialized (sync) replay
@@ -692,6 +849,8 @@ class PersistentEngine:
                 # Residency-filtered, so every prediction is a real fill.
                 issued = None
                 if self.prefetcher is not None and prev_used is not None:
+                    if self._partitioned:   # speculative: shared segment
+                        self.cache.set_active_tenant(None)
                     predicted = self.prefetcher.predict(
                         lidx - 1, prev_used,
                         resident=self._msb_resident_row(lidx))
@@ -727,9 +886,12 @@ class PersistentEngine:
                                 self._slice_nbytes(SliceKey(lidx, e, "msb")))
                     prev_used = flat_ids
 
+                owner = self._expert_owner(tr, period, pidx)
                 missed_expert = np.zeros(self.n_experts, bool)
                 for e in msb_demand:
                     e = int(e)
+                    if owner is not None:
+                        self.cache.set_active_tenant(owner.get(e))
                     led = self._ledger_for(e)
                     key = SliceKey(lidx, e, "msb")
                     nb = self._slice_nbytes(key)
@@ -877,9 +1039,12 @@ class PersistentEngine:
                         self._ledger_for(key.expert).mark_prefetch_wasted(
                             p_nb)
 
+                owner = self._expert_owner(tr, period, pidx)
                 missed_expert = np.zeros(self.n_experts, bool)
                 for e in msb_demand:
                     e = int(e)
+                    if owner is not None:
+                        self.cache.set_active_tenant(owner.get(e))
                     led = self._ledger_for(e)
                     key = SliceKey(lidx, e, "msb")
                     nb = self._slice_nbytes(key)
@@ -939,6 +1104,8 @@ class PersistentEngine:
                         self.prefetcher.observe(lidx, prev_used, flat_ids)
                     prev_used = flat_ids
                     if lidx + 1 < self.n_moe_layers:
+                        if self._partitioned:   # speculative: shared seg
+                            self.cache.set_active_tenant(None)
                         predicted = self.prefetcher.predict(
                             lidx, flat_ids,
                             resident=self._msb_resident_row(lidx + 1))

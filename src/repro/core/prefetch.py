@@ -61,12 +61,21 @@ class TransitionPrefetcher:
     top_m: int = 4
     smoothing: float = 0.1
     seed: int = 0
+    # Confidence floor: a layer transition must have been observed at
+    # least this many times before predict() issues for it.  With 0 the
+    # cold predictor guesses from the uniform smoothing prior — near-
+    # random fills that burn Flash energy with ~no chance of saving a
+    # miss (the paper's §2.1 "frequent prefetch failures").
+    min_transitions: int = 0
 
     def __post_init__(self):
         # counts[l, i, j]: expert i used at layer l, expert j at layer l+1
         self.counts = np.full(
             (max(self.n_layers - 1, 1), self.n_experts, self.n_experts),
             self.smoothing)
+        # obs[l]: observed (layer l -> l+1) transition events — the
+        # confidence-floor denominator (smoothing prior excluded).
+        self.obs = np.zeros(max(self.n_layers - 1, 1), np.int64)
         self._rng = np.random.default_rng(self.seed)
         self.issued = 0
         self.useful = 0
@@ -92,6 +101,7 @@ class TransitionPrefetcher:
         if pe.size == 0 or ce.size == 0:
             return
         self.counts[layer - 1][np.ix_(pe, ce)] += 1.0
+        self.obs[layer - 1] += 1
 
     # -------------------------------------------------------------- predict
     def predict(self, layer: int, cur_experts: np.ndarray,
@@ -109,6 +119,10 @@ class TransitionPrefetcher:
         # to one transition matrix, so a 1-layer model would otherwise
         # "predict" for a layer that does not exist.
         if layer < 0 or layer >= self.n_layers - 1:
+            return np.empty(0, np.int64)
+        # Confidence floor: stay silent until this transition has enough
+        # real observations that the scores are no longer the prior.
+        if self.obs[layer] < self.min_transitions:
             return np.empty(0, np.int64)
         ce = self._valid_ids(cur_experts)
         if ce.size == 0:
@@ -157,4 +171,6 @@ class TransitionPrefetcher:
             "late": self.late,
             "wasted": self.wasted,
             "accuracy": self.accuracy,
+            "min_transitions": self.min_transitions,
+            "observed_transitions": int(self.obs.sum()),
         }

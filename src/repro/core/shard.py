@@ -183,6 +183,9 @@ class ShardedSliceCache:
         s = self.shard(key)
         return s.used + nbytes <= s.capacity
 
+    def set_active_tenant(self, tenant) -> None:
+        """No-op (see :meth:`SliceCache.set_active_tenant`)."""
+
     # ------------------------------------------------------------- mutate
     def access(self, key: SliceKey, nbytes: float,
                *, fill_on_miss: bool = True) -> bool:

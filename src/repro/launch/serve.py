@@ -41,8 +41,28 @@ DEFAULT_KNOBS = {
     "high_bits": 8, "low_bits": 4, "cache_bytes": 4.0e6,
     "policy_kind": "cache_prior", "slice_mode": "dbsc", "theta": 0.5,
     "miss_rate_target": 0.05, "warmup": "pcw", "async_io": False,
-    "ep_shards": 1,
+    "ep_shards": 1, "controller": None,
 }
+
+
+def parse_controller(spec):
+    """``--controller`` value -> ControllerConfig.
+
+    Accepts inline JSON (a string starting with ``{``) or a path to a
+    JSON file; either way the payload is a
+    :class:`repro.control.ControllerConfig` dict, e.g.
+    ``{"slos": {"premium": {"miss_rate": 0.05}}}``.
+    """
+    if spec is None:
+        return None
+    from repro.control import ControllerConfig
+
+    if spec.lstrip().startswith("{"):
+        payload = json.loads(spec)
+    else:
+        with open(spec) as f:
+            payload = json.load(f)
+    return ControllerConfig.from_dict(payload)
 
 
 def cli_engine_knobs(args) -> dict:
@@ -59,6 +79,7 @@ def cli_engine_knobs(args) -> dict:
         "warmup": args.warmup,
         "async_io": args.async_io,
         "ep_shards": args.ep_shards,
+        "controller": parse_controller(args.controller),
     }
 
 
@@ -75,6 +96,7 @@ def build_engine_config(args) -> EngineConfig:
         warmup=k["warmup"],
         async_io=k["async_io"],
         ep_shards=k["ep_shards"],
+        controller=k["controller"],
     )
 
 
@@ -94,7 +116,8 @@ def run_replay(args) -> None:
     out = {
         "trace": args.replay_trace,
         "model": trace.meta.model,
-        "overrides": overrides,
+        "overrides": {key: (v.to_dict() if hasattr(v, "to_dict") else v)
+                      for key, v in overrides.items()},
         **report.summary(),
         "epoch_miss": [
             {"epoch": label, "miss_rate": round(m, 6)}
@@ -138,6 +161,13 @@ def main():
                          "this many shards, charging all-to-all token "
                          "dispatch on the interconnect channel (live "
                          "default 1 = single device)")
+    ap.add_argument("--controller", default=None, metavar="JSON|PATH",
+                    help="enable the closed-loop SLO controller "
+                         "(repro.control): inline ControllerConfig JSON "
+                         "or a path to a JSON file, e.g. "
+                         "'{\"slos\": {\"default\": "
+                         "{\"miss_rate\": 0.05}}}'.  Applies to live "
+                         "serving and (as an override) to --replay-trace")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--record-trace", default=None, metavar="PATH",
                     help="save the served traffic's routing trace "
@@ -199,6 +229,10 @@ def main():
         print(json.dumps(line))
 
     engine = getattr(server, "_engine", None)
+    if engine is not None \
+            and getattr(engine, "slo_controller", None) is not None:
+        print(json.dumps(
+            {"controller": engine.slo_controller.summary()}))
     if engine is not None and hasattr(engine, "shard_breakdown"):
         breakdown = engine.shard_breakdown()
         if breakdown is not None:

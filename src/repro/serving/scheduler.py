@@ -35,7 +35,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -82,6 +82,12 @@ class SchedulerConfig:
     # otherwise admission rejects any request whose full token budget
     # (prompt + max_new_tokens) cannot fit under ``max_seq``.
     truncate_prompts: bool = False
+    # Admission-control hook: called with the Request at submit time;
+    # returning False rejects it (recorded on telemetry like any other
+    # rejection).  When None and the engine carries an SLO controller
+    # (EngineConfig.controller), the controller's admit_request is wired
+    # in automatically — its throttle actuator needs a say in admission.
+    admission_hook: Optional[Callable[["Request"], bool]] = None
 
 
 @dataclasses.dataclass
@@ -117,6 +123,14 @@ class ContinuousBatchingScheduler:
         self.completions: List[Completion] = []
         self.sim_time = 0.0
         self._ledger_mark = engine.ledger.total_latency_s
+        self._admission_hook = self.cfg.admission_hook
+        ctl = getattr(engine, "slo_controller", None)
+        if ctl is not None:
+            # Close the loop: the controller reads live telemetry (TTFT,
+            # step records) and, absent an explicit hook, gates admission.
+            ctl.attach_telemetry(self.telemetry)
+            if self._admission_hook is None:
+                self._admission_hook = ctl.admit_request
 
     def attach_recorder(self, recorder):
         """Wire a :class:`repro.sim.trace.TraceRecorder` into the engine.
@@ -160,6 +174,10 @@ class ContinuousBatchingScheduler:
             prompt_len=len(req.prompt),
             arrival_t=getattr(req, "arrival_time", 0.0))
         if len(self.queue) >= self.cfg.max_queue or not self.servable(req):
+            self.telemetry.on_reject(record)
+            return False
+        if self._admission_hook is not None \
+                and not self._admission_hook(req):
             self.telemetry.on_reject(record)
             return False
         self.telemetry.on_submit(record)
@@ -219,7 +237,7 @@ class ContinuousBatchingScheduler:
         label = f"req{req.request_id}" if self.cfg.max_batch == 1 else None
         logits, kv_cache, _info = self.engine.run_prefill(
             jnp.asarray(prompt)[None], label=label,
-            inflight=self.n_active())
+            inflight=self.n_active(), tenant=req.tenant)
         if self.engine.recorder is not None:
             self.engine.recorder.annotate_prefill(
                 request_id=req.request_id, tenant=req.tenant)
@@ -261,15 +279,18 @@ class ContinuousBatchingScheduler:
             return
         tokens = np.zeros(self.cfg.max_batch, np.int32)
         slot_mask = np.zeros(self.cfg.max_batch, bool)
+        slot_tenants: List[Optional[str]] = [None] * self.cfg.max_batch
         for seq in active:
             tokens[seq.slot] = seq.last_token
             slot_mask[seq.slot] = True
+            slot_tenants[seq.slot] = seq.request.tenant
         alphas = [seq.alpha for seq in active]
         alpha = float(np.mean(alphas)) if alphas else 0.0
 
         logits, self.batch_cache, charge = self.engine.decode_batch(
             jnp.asarray(tokens), self.batch_cache,
-            alpha=alpha, slot_active=slot_mask)
+            alpha=alpha, slot_active=slot_mask,
+            slot_tenants=slot_tenants)
         next_tokens = np.asarray(
             jnp.argmax(logits, axis=-1).astype(jnp.int32))
         step_latency = self._advance_clock()
@@ -280,7 +301,8 @@ class ContinuousBatchingScheduler:
             io_stall_s=max(0.0, charge.ledger_delta.get(
                 "io_stall_s", 0.0)),
             overlap_saved_s=max(0.0, charge.ledger_delta.get(
-                "overlap_saved_s", 0.0))))
+                "overlap_saved_s", 0.0)),
+            per_tenant=charge.per_tenant))
 
         for seq in active:
             tok = int(next_tokens[seq.slot])
@@ -288,6 +310,7 @@ class ContinuousBatchingScheduler:
             seq.last_token = tok
             if len(seq.generated) == 1:
                 seq.record.first_token_t = self.sim_time
+                self.telemetry.on_first_token(seq.record)
             seq.record.n_generated = len(seq.generated)
             slot_miss = float(charge.per_slot_miss[seq.slot])
             seq.record.miss_sum += slot_miss

@@ -94,6 +94,11 @@ class StepRecord:
     energy_j: float
     io_stall_s: float = 0.0
     overlap_saved_s: float = 0.0
+    # Per-tenant charge counters for the step (tenant -> {tokens,
+    # accesses, misses, critical, critical_low}), populated when the
+    # engine attributes its charge path (slot tenants known).  Feeds the
+    # always-on per-tenant summary breakdown and the SLO controller.
+    per_tenant: Optional[Dict[str, dict]] = None
 
 
 class FleetTelemetry:
@@ -103,18 +108,41 @@ class FleetTelemetry:
         self.requests: Dict[int, RequestRecord] = {}
         self.steps: List[StepRecord] = []
         self.rejected: List[int] = []
+        # Listeners (e.g. repro.control.SLOController) receive the same
+        # records as they land; each listener method is optional.
+        self.listeners: List[object] = []
+
+    def add_listener(self, listener: object) -> object:
+        """Forward on_submit/on_first_token/on_step events to ``listener``
+        (any missing method is skipped).  Returns the listener."""
+        self.listeners.append(listener)
+        return listener
+
+    def _emit(self, method: str, record) -> None:
+        for lst in self.listeners:
+            fn = getattr(lst, method, None)
+            if fn is not None:
+                fn(record)
 
     # ------------------------------------------------------------ recording
     def on_submit(self, record: RequestRecord) -> None:
         self.requests[record.request_id] = record
+        self._emit("on_submit", record)
 
     def on_reject(self, record: RequestRecord) -> None:
         record.rejected = True
         self.requests[record.request_id] = record
         self.rejected.append(record.request_id)
 
+    def on_first_token(self, record: RequestRecord) -> None:
+        """Called by the scheduler the step a request's first token lands
+        (record.first_token_t is already set) — TTFT is observable here,
+        not at finish, which is what admission control needs."""
+        self._emit("on_first_token", record)
+
     def on_step(self, record: StepRecord) -> None:
         self.steps.append(record)
+        self._emit("on_step", record)
 
     # ----------------------------------------------------------- aggregates
     def completed(self) -> List[RequestRecord]:
@@ -206,16 +234,73 @@ class FleetTelemetry:
                 + r.n_generated
         if len(per_tenant) > 1:
             out["tokens_per_tenant"] = per_tenant
+        out["per_tenant"] = self.per_tenant_summary()
         if per_shard is not None:
             out["per_shard"] = per_shard
+        return out
+
+    def per_tenant_summary(self) -> Dict[str, dict]:
+        """Per-tenant breakdown: request-level percentiles always, plus
+        charge-attributed miss rate and energy when the steps carry
+        ``per_tenant`` counters (energy is split by the tenant's token
+        share of each step — the only attribution a shared batched step
+        admits)."""
+        groups: Dict[str, List[RequestRecord]] = {}
+        for r in self.completed():
+            groups.setdefault(r.tenant, []).append(r)
+        out: Dict[str, dict] = {}
+        for tenant in sorted(groups):
+            rs = groups[tenant]
+            ttfts = [r.ttft for r in rs]
+            per_tok = [r.per_token_s for r in rs if r.n_generated > 1]
+            out[tenant] = {
+                "n_requests": len(rs),
+                "n_tokens": sum(r.n_generated for r in rs),
+                "ttft_p50_s": percentile(ttfts, 50),
+                "ttft_p95_s": percentile(ttfts, 95),
+                "per_token_p50_s": percentile(per_tok, 50),
+                "per_token_p95_s": percentile(per_tok, 95),
+                "mean_miss_rate": (
+                    sum(r.mean_miss_rate for r in rs) / len(rs)),
+            }
+        acc: Dict[str, int] = {}
+        miss: Dict[str, int] = {}
+        energy: Dict[str, float] = {}
+        for s in self.steps:
+            if not s.per_tenant:
+                continue
+            step_tokens = sum(int(row.get("tokens", 0))
+                              for row in s.per_tenant.values())
+            for tenant, row in s.per_tenant.items():
+                acc[tenant] = acc.get(tenant, 0) \
+                    + int(row.get("accesses", 0))
+                miss[tenant] = miss.get(tenant, 0) \
+                    + int(row.get("misses", 0))
+                if step_tokens > 0:
+                    energy[tenant] = energy.get(tenant, 0.0) + \
+                        s.energy_j * int(row.get("tokens", 0)) / step_tokens
+        for tenant, cell in out.items():
+            if acc.get(tenant):
+                cell["charged_miss_rate"] = miss[tenant] / acc[tenant]
+            if tenant in energy and cell["n_tokens"]:
+                cell["energy_per_token_j"] = \
+                    energy[tenant] / cell["n_tokens"]
         return out
 
 
 def format_summary(s: dict, title: str = "serving summary") -> str:
     lines = [f"--- {title} ---"]
-    for k, v in s.items():
-        if isinstance(v, float):
-            lines.append(f"  {k:>26}: {v:.6g}")
-        else:
-            lines.append(f"  {k:>26}: {v}")
+
+    def _emit(d: dict, indent: int) -> None:
+        pad = " " * indent
+        for k, v in d.items():
+            if isinstance(v, dict):
+                lines.append(f"{pad}{k:>26}:")
+                _emit(v, indent + 2)
+            elif isinstance(v, float):
+                lines.append(f"{pad}{k:>26}: {v:.6g}")
+            else:
+                lines.append(f"{pad}{k:>26}: {v}")
+
+    _emit(s, 2)
     return "\n".join(lines)

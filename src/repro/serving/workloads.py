@@ -149,6 +149,30 @@ def generate(cfg: WorkloadConfig, vocab_size: int,
     return out
 
 
+def generate_phased(phases: Sequence[WorkloadConfig], vocab_size: int,
+                    *, gap_s: float = 0.0) -> List[Request]:
+    """Concatenate per-phase streams into one phase-shifting workload.
+
+    Each phase is a full :class:`WorkloadConfig` (its own tenant mix,
+    arrival process and seed); phase ``k``'s arrivals are offset to start
+    ``gap_s`` after the last arrival of phase ``k-1``, and request ids
+    continue across phases.  This is how the SLO-controller soak builds
+    traffic whose tenant mix *changes* mid-run — the case a static
+    config cannot be right for on both sides of the shift.
+    """
+    out: List[Request] = []
+    t0 = 0.0
+    start_id = 0
+    for cfg in phases:
+        reqs = generate(cfg, vocab_size, start_id=start_id)
+        for r in reqs:
+            r.arrival_time = float(r.arrival_time) + t0
+        out.extend(reqs)
+        start_id += len(reqs)
+        t0 = (max(r.arrival_time for r in reqs) if reqs else t0) + gap_s
+    return out
+
+
 def scenario(name: str, *, n_requests: int = 16, rate: float = 2.0,
              seed: int = 0) -> WorkloadConfig:
     """Named presets used by benchmarks and examples."""

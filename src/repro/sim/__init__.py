@@ -22,8 +22,8 @@ from repro.sim.trace import (DecodeEvent, PrefillEvent, Trace, TraceMeta,
 from repro.sim.replay import (ReplayEngine, ReplayReport, TraceSliceStore,
                               engine_config_from_meta, replay_trace)
 from repro.sim.synthetic import (SyntheticSpec, phase_shift_trace,
-                                 tenant_mix_trace, transition_trace,
-                                 zipf_trace)
+                                 tenant_mix_trace, tenant_phase_trace,
+                                 transition_trace, zipf_trace)
 from repro.sim import autotune
 
 __all__ = [
@@ -32,6 +32,6 @@ __all__ = [
     "ReplayEngine", "ReplayReport", "TraceSliceStore",
     "engine_config_from_meta", "replay_trace",
     "SyntheticSpec", "zipf_trace", "phase_shift_trace",
-    "tenant_mix_trace", "transition_trace",
+    "tenant_mix_trace", "tenant_phase_trace", "transition_trace",
     "autotune",
 ]

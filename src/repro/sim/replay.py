@@ -105,11 +105,17 @@ def engine_config_from_meta(meta: TraceMeta, **overrides) -> EngineConfig:
     """
     e = dict(meta.engine)
     e.setdefault("ep_shards", 1)    # traces recorded before EP existed
+    e.setdefault("prefetch_min_obs", 0)   # pre-confidence-floor traces
+    e.setdefault("controller", None)      # pre-controller traces
     unknown = set(overrides) - set(e)
     if unknown:
         raise KeyError(f"unknown engine override(s) {sorted(unknown)}; "
                        f"valid knobs: {sorted(e)}")
     e.update(overrides)
+    ctl = e["controller"]
+    if ctl is not None and not hasattr(ctl, "slos"):
+        from repro.control.controller import ControllerConfig
+        ctl = ControllerConfig.from_dict(ctl)
     return EngineConfig(
         mat=MatConfig(int(e["high_bits"]), int(e["low_bits"]),
                       meta.group_size),
@@ -127,6 +133,8 @@ def engine_config_from_meta(meta: TraceMeta, **overrides) -> EngineConfig:
         async_io=bool(e["async_io"]),
         hotness_request_decay=float(e["hotness_request_decay"]),
         ep_shards=int(e["ep_shards"]),
+        prefetch_min_obs=int(e["prefetch_min_obs"]),
+        controller=ctl,
     )
 
 
@@ -150,6 +158,11 @@ class ReplayReport:
     # Expert-parallel replays only: per-shard [(label, accesses, misses)]
     # epoch windows (None on single-device replays).
     per_shard_epoch_counts: Optional[list] = None
+    # Controller / tenant-attributed replays only: one
+    # ``StepCharge.per_tenant`` dict per decode step (None otherwise),
+    # plus the final controller summary.
+    per_tenant_rows: Optional[List[dict]] = None
+    controller_summary: Optional[dict] = None
 
     @property
     def decode_miss_rate(self) -> float:
@@ -181,6 +194,8 @@ class ReplayReport:
             "alpha_final": self.alpha_curve[-1] if self.alpha_curve
             else 0.0,
             **({"prefetch": self.prefetch} if self.prefetch else {}),
+            **({"controller": self.controller_summary}
+               if self.controller_summary else {}),
         }
 
 
@@ -224,7 +239,17 @@ class ReplayEngine(PersistentEngine):
             from repro.core.prefetch import TransitionPrefetcher
             self.prefetcher = TransitionPrefetcher(
                 self.n_moe_layers, self.n_experts,
-                top_m=ecfg.prefetch_top_m)
+                top_m=ecfg.prefetch_top_m,
+                min_transitions=ecfg.prefetch_min_obs)
+
+        # Closed-loop SLO controller: its bit/partition decisions consume
+        # only charge-path counters, so the replayed decision sequence is
+        # identical to the live one (the control-loop fidelity gate).
+        self.slo_controller = None
+        if ecfg.controller is not None:
+            from repro.control.controller import SLOController
+            self.slo_controller = SLOController(
+                ecfg.controller, cache_bytes=ecfg.cache_bytes)
 
         # Open-loop controller (see module docstring): tracks what alpha
         # the live controller would command given the replayed miss
@@ -240,6 +265,7 @@ class ReplayEngine(PersistentEngine):
         self._alpha_curve: List[float] = []
         self._decode_accesses = 0
         self._decode_misses = 0
+        self._per_tenant_rows: List[dict] = []
         self._finished = False
 
     # --------------------------------------------------------- test hook
@@ -280,7 +306,8 @@ class ReplayEngine(PersistentEngine):
         """Replay one recorded event through the live charge path."""
         t0 = time.perf_counter()
         if event.kind == "prefill":
-            self._begin_request(event.label, event.inflight)
+            self._begin_request(event.label, event.inflight,
+                                tenant=getattr(event, "tenant", "default"))
             active = getattr(event, "active", None)
             self._charge_prefill(
                 np.asarray(event.ids), np.asarray(event.gates),
@@ -297,13 +324,16 @@ class ReplayEngine(PersistentEngine):
                 critical=np.asarray(event.critical, bool),
                 slot_mask=slot_mask,
                 slot_accesses=np.zeros(slot_mask.shape[0], np.int64),
-                slot_misses=np.zeros(slot_mask.shape[0], np.int64))
+                slot_misses=np.zeros(slot_mask.shape[0], np.int64),
+                slot_tenants=getattr(event, "slot_tenants", None))
             charge = self.charge_step_trace(tr)
             self._miss_curve.append(charge.miss_rate)
             self._energy_curve.append(
                 charge.ledger_delta["total_energy_j"])
             self._decode_accesses += charge.accesses
             self._decode_misses += charge.misses
+            if charge.per_tenant is not None:
+                self._per_tenant_rows.append(charge.per_tenant)
             alpha = 0.0
             if self.controller is not None:
                 alpha = self.controller.update(charge.miss_rate)
@@ -346,7 +376,12 @@ class ReplayEngine(PersistentEngine):
             per_shard_epoch_counts=(
                 self.cache.per_shard_epoch_counts()
                 if hasattr(self.cache, "per_shard_epoch_counts")
-                else None))
+                else None),
+            per_tenant_rows=(list(self._per_tenant_rows)
+                             if self._per_tenant_rows else None),
+            controller_summary=(self.slo_controller.summary()
+                                if self.slo_controller is not None
+                                else None))
 
     # --------------------------------------------------------------- fork
     def clone(self) -> "ReplayEngine":
@@ -364,8 +399,10 @@ class ReplayEngine(PersistentEngine):
         new.prefetcher = (self.prefetcher.clone()
                           if self.prefetcher is not None else None)
         new.controller = copy.deepcopy(self.controller)
+        new.slo_controller = copy.deepcopy(self.slo_controller)
         new.recorder = None
-        for f in ("_miss_curve", "_energy_curve", "_alpha_curve"):
+        for f in ("_miss_curve", "_energy_curve", "_alpha_curve",
+                  "_per_tenant_rows"):
             setattr(new, f, list(getattr(self, f)))
         return new
 

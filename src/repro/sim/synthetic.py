@@ -34,7 +34,7 @@ import numpy as np
 from repro.sim.trace import DecodeEvent, PrefillEvent, Trace, TraceMeta
 
 __all__ = ["SyntheticSpec", "zipf_trace", "phase_shift_trace",
-           "tenant_mix_trace", "transition_trace"]
+           "tenant_mix_trace", "tenant_phase_trace", "transition_trace"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,7 +87,7 @@ class SyntheticSpec:
             "lsb_keep_frac": 0.125, "system": self.system,
             "fused_slices": False, "prefetch_top_m": None,
             "async_io": False, "hotness_request_decay": 0.5,
-            "ep_shards": 1,
+            "ep_shards": 1, "prefetch_min_obs": 0, "controller": None,
         }
         unknown = set(engine_overrides) - set(engine)
         if unknown:
@@ -164,7 +164,7 @@ def _append_request(events: List, rng: np.random.Generator,
         ids, gates, active, critical = _draw_block(rng, spec, probs, 1)
         events.append(DecodeEvent(
             ids=ids, gates=gates, active=active, critical=critical,
-            slot_mask=np.ones(1, bool)))
+            slot_mask=np.ones(1, bool), slot_tenants=[tenant]))
 
 
 # --------------------------------------------------------------------------
@@ -234,6 +234,57 @@ def tenant_mix_trace(spec: SyntheticSpec = SyntheticSpec(), *,
             decode_steps=req.max_new_tokens,
             label=f"req{req.request_id}", request_id=req.request_id,
             tenant=req.tenant)
+    return Trace(meta=spec.meta(**(engine_overrides or {})),
+                 events=events)
+
+
+def tenant_phase_trace(spec: SyntheticSpec = SyntheticSpec(), *,
+                       tenants=None,
+                       phases: int = 3, requests_per_phase: int = 4,
+                       prompt_len: int = 16, decode_steps: int = 32,
+                       zipf_a: float = 1.2, seed: int = 0,
+                       engine_overrides: Optional[dict] = None) -> Trace:
+    """Phase-shifting multi-tenant stream — the SLO-controller soak.
+
+    Combines :func:`phase_shift_trace` (base hotness redrawn every
+    phase) with weighted tenant attribution: each request's tenant is
+    drawn from ``tenants`` and its hotness is the phase base rotated by
+    the tenant's stable crc32 offset — so tenants contend for different
+    expert neighborhoods *and* every phase boundary invalidates all of
+    them at once.  ``tenants`` is either one name -> weight dict
+    (default ``{"premium": 1.0, "batch": 2.0}``) or a sequence of
+    ``phases`` such dicts, shifting the *mix itself* at each boundary —
+    the traffic shape no static config can be right for on both sides.
+    Decode events carry ``slot_tenants``, so the controller (live or
+    replayed) sees per-tenant signals.  Labels are ``ph{phase}/req{rid}``.
+    """
+    if tenants is None:
+        tenants = {"premium": 1.0, "batch": 2.0}
+    if isinstance(tenants, dict):
+        per_phase = [dict(tenants)] * phases
+    else:
+        per_phase = [dict(mix) for mix in tenants]
+        if len(per_phase) != phases:
+            raise ValueError(
+                f"got {len(per_phase)} tenant mixes for {phases} phases")
+    rng = np.random.default_rng(seed)
+    events: List = []
+    rid = 0
+    for ph in range(phases):
+        mix = per_phase[ph]
+        names = sorted(mix)
+        weights = np.array([mix[t] for t in names], np.float64)
+        weights = weights / weights.sum()
+        base = _layer_probs(rng, spec, zipf_a)
+        for _ in range(requests_per_phase):
+            tenant = names[int(rng.choice(len(names), p=weights))]
+            offset = zlib.crc32(tenant.encode()) % spec.n_experts
+            probs = np.roll(base, offset, axis=1)
+            _append_request(
+                events, rng, spec, probs, prompt_len=prompt_len,
+                decode_steps=decode_steps,
+                label=f"ph{ph}/req{rid}", request_id=rid, tenant=tenant)
+            rid += 1
     return Trace(meta=spec.meta(**(engine_overrides or {})),
                  events=events)
 

@@ -131,13 +131,21 @@ class PrefillEvent:
 
 @dataclasses.dataclass
 class DecodeEvent:
-    """One batched decode step's routing arrays."""
+    """One batched decode step's routing arrays.
+
+    ``slot_tenants`` (optional) carries per-slot tenant attribution —
+    the SLO controller's input signal.  It records the step's *inputs*
+    only; the controller's bit plan is deliberately NOT recorded, so a
+    replay recomputes it from the same stream (the control-loop
+    fidelity gate).  Pre-controller traces load with ``None``.
+    """
 
     ids: np.ndarray            # [n_periods, n_moe_pos, T, k] int
     gates: np.ndarray          # float64
     active: np.ndarray         # bool
     critical: np.ndarray       # bool
     slot_mask: np.ndarray      # [T] bool
+    slot_tenants: Optional[List] = None    # [T] tenant names / None
 
     kind = "decode"
     _array_fields = ("ids", "gates", "active", "critical", "slot_mask")
@@ -331,6 +339,9 @@ def engine_meta(engine) -> TraceMeta:
             "async_io": ecfg.async_io,
             "hotness_request_decay": ecfg.hotness_request_decay,
             "ep_shards": ecfg.ep_shards,
+            "prefetch_min_obs": ecfg.prefetch_min_obs,
+            "controller": (None if ecfg.controller is None
+                           else ecfg.controller.to_dict()),
         },
     )
 
@@ -359,22 +370,25 @@ class TraceRecorder:
     # ----------------------------------------------------------- callbacks
     def on_prefill(self, ids: np.ndarray, gates: np.ndarray, *,
                    active: Optional[np.ndarray] = None,
-                   label: Optional[str] = None, inflight: int = 0) -> None:
+                   label: Optional[str] = None, inflight: int = 0,
+                   tenant: str = "default") -> None:
         self.events.append(PrefillEvent(
             ids=np.array(ids, _ARRAY_DTYPES["ids"]),
             gates=np.array(gates, _ARRAY_DTYPES["gates"]),
             active=(None if active is None
                     else np.array(active, _ARRAY_DTYPES["active"])),
-            label=label, inflight=int(inflight)))
+            label=label, inflight=int(inflight), tenant=tenant))
 
     def on_decode(self, tr) -> None:
-        """``tr``: the engine's ``_StepTrace`` (pre-charge)."""
+        """``tr``: the engine's ``_StepTrace`` (pre-charge, pre-plan)."""
         self.events.append(DecodeEvent(
             ids=np.array(tr.ids, _ARRAY_DTYPES["ids"]),
             gates=np.array(tr.gates, _ARRAY_DTYPES["gates"]),
             active=np.array(tr.active, bool),
             critical=np.array(tr.critical, bool),
-            slot_mask=np.array(tr.slot_mask, bool)))
+            slot_mask=np.array(tr.slot_mask, bool),
+            slot_tenants=(None if tr.slot_tenants is None
+                          else list(tr.slot_tenants))))
 
     def annotate_prefill(self, *, request_id: Optional[int] = None,
                          tenant: Optional[str] = None) -> None:

@@ -1,0 +1,426 @@
+"""Online SLO controller (repro.control): signal windows, decision
+logic (hysteresis / cooldown / accuracy guard), the tenant-partitioned
+cache, admission thinning, and replay determinism.
+
+Fast tests drive the controller with synthetic counter rows and
+model-free replays; the live scheduler integration (real engine + jit)
+is marked slow like the other serving integrations.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.control import (ControllerConfig, SLOController, TenantSLO,
+                           TenantPartitionedCache)
+from repro.control.signals import SlidingWindow, TenantWindow
+from repro.core.slices import SliceKey
+from repro.sim import SyntheticSpec, replay_trace, tenant_phase_trace
+
+
+def _row(tokens=4, accesses=10, misses=0, critical=0, critical_low=0):
+    return {"tokens": tokens, "accesses": accesses, "misses": misses,
+            "critical": critical, "critical_low": critical_low}
+
+
+def _ctl(slos, **over) -> SLOController:
+    base = dict(interval=4, window=16, cooldown=8, hysteresis=0.1,
+                partition=True, admission=True)
+    base.update(over)
+    return SLOController(ControllerConfig(slos=slos, **base),
+                         cache_bytes=1000.0)
+
+
+def _run_steps(ctl, rows, n):
+    out = {}
+    for _ in range(n):
+        out = ctl.observe_step({t: dict(r) for t, r in rows.items()})
+    return out
+
+
+# ==========================================================================
+# signal windows
+# ==========================================================================
+class TestWindows:
+    def test_empty_windows_return_none(self):
+        w = TenantWindow(8)
+        assert w.miss_rate() is None and w.lowbit_frac() is None
+        assert SlidingWindow(8).percentile(95) is None
+
+    def test_ratios_are_traffic_weighted(self):
+        # 10 accesses @ 50% miss + 90 accesses @ 0% -> 5/100, not 25%.
+        w = TenantWindow(8)
+        w.push(_row(accesses=10, misses=5))
+        w.push(_row(accesses=90, misses=0))
+        assert w.miss_rate() == pytest.approx(0.05)
+
+    def test_window_is_bounded(self):
+        w = TenantWindow(4)
+        for _ in range(10):
+            w.push(_row(accesses=1, misses=1))
+        for _ in range(4):
+            w.push(_row(accesses=1, misses=0))
+        assert len(w) == 4
+        assert w.miss_rate() == 0.0      # the missy rows aged out
+
+    def test_lowbit_frac_over_critical_only(self):
+        w = TenantWindow(8)
+        w.push(_row(critical=8, critical_low=2))
+        assert w.lowbit_frac() == pytest.approx(0.25)
+
+
+# ==========================================================================
+# config schema
+# ==========================================================================
+class TestConfigSchema:
+    def test_tenant_slo_validation(self):
+        with pytest.raises(ValueError):
+            TenantSLO(bit_floor="medium")
+        with pytest.raises(ValueError):
+            TenantSLO(lowbit_frac=1.5)
+
+    def test_controller_config_validation(self):
+        with pytest.raises(ValueError):
+            ControllerConfig(slos={})
+        with pytest.raises(ValueError):
+            ControllerConfig(slos={"a": TenantSLO()}, interval=0)
+
+    def test_json_roundtrip(self):
+        cfg = ControllerConfig(
+            slos={"p": TenantSLO(miss_rate=0.1, lowbit_frac=0.05,
+                                 bit_floor="high"),
+                  "b": TenantSLO(miss_rate=0.3, ttft_s=0.05)},
+            interval=8, cooldown=16, hysteresis=0.2)
+        back = ControllerConfig.from_dict(json.loads(json.dumps(
+            cfg.to_dict())))
+        assert back == cfg
+
+    def test_slos_accept_plain_dicts(self):
+        cfg = ControllerConfig(slos={"a": {"miss_rate": 0.2}})
+        assert cfg.slos["a"] == TenantSLO(miss_rate=0.2)
+
+
+# ==========================================================================
+# decision logic
+# ==========================================================================
+class TestDecisions:
+    def test_demotes_on_miss_violation(self):
+        ctl = _ctl({"a": TenantSLO(miss_rate=0.1)})
+        _run_steps(ctl, {"a": _row(accesses=10, misses=5)}, 4)
+        assert ctl.levels["a"] == 1
+        assert [a["kind"] for a in ctl.actions] == ["demote"]
+
+    def test_hysteresis_dead_band(self):
+        # Window miss 0.105 is above target 0.1 but inside the 10% band.
+        ctl = _ctl({"a": TenantSLO(miss_rate=0.1)})
+        _run_steps(ctl, {"a": _row(accesses=1000, misses=105)}, 8)
+        assert ctl.levels["a"] == 0 and not ctl.actions
+
+    def test_bit_floor_high_repartitions_instead(self):
+        ctl = _ctl({"pin": TenantSLO(miss_rate=0.1, bit_floor="high"),
+                    "quiet": TenantSLO()})
+        before = dict(ctl.budgets)
+        out = _run_steps(ctl, {"pin": _row(accesses=10, misses=5),
+                               "quiet": _row(accesses=10, misses=0)}, 4)
+        assert ctl.levels["pin"] == 0
+        assert ctl.budgets["pin"] > before["pin"]
+        assert ctl.budgets["quiet"] < before["quiet"]
+        assert sum(ctl.budgets.values()) == pytest.approx(
+            sum(before.values()))
+        assert out["budgets"] == ctl.budgets
+        assert [a["kind"] for a in ctl.actions] == ["repartition"]
+
+    def test_no_repartition_without_quiet_donor(self):
+        # Both tenants violating -> nobody is an eligible donor.
+        ctl = _ctl({"a": TenantSLO(miss_rate=0.1, bit_floor="high"),
+                    "b": TenantSLO(miss_rate=0.1, bit_floor="high")})
+        before = dict(ctl.budgets)
+        _run_steps(ctl, {"a": _row(accesses=10, misses=5),
+                         "b": _row(accesses=10, misses=5)}, 4)
+        assert ctl.budgets == before and not ctl.actions
+
+    def test_cooldown_blocks_reactuation(self):
+        # interval=4, cooldown=8: the demote at step 4 makes the tenant
+        # ineligible at step 8; the accuracy-guard promote lands at 12.
+        ctl = _ctl({"a": TenantSLO(miss_rate=0.1, lowbit_frac=0.5)})
+        rows = {"a": _row(accesses=10, misses=5,
+                          critical=10, critical_low=10)}
+        _run_steps(ctl, rows, 4)
+        assert ctl.levels["a"] == 1
+        _run_steps(ctl, rows, 4)
+        assert ctl.levels["a"] == 1      # still cooling down
+        _run_steps(ctl, rows, 4)
+        assert ctl.levels["a"] == 0      # accuracy guard promoted
+        assert [a["kind"] for a in ctl.actions] == ["demote", "promote"]
+
+    def test_accuracy_guard_has_priority_over_miss(self):
+        # Still violating on miss AND on accuracy: the promote wins the
+        # tick; re-demotion is then cooldown-blocked.
+        ctl = _ctl({"a": TenantSLO(miss_rate=0.1, lowbit_frac=0.2)},
+                   cooldown=4, partition=False)
+        rows = {"a": _row(accesses=10, misses=5,
+                          critical=10, critical_low=9)}
+        _run_steps(ctl, rows, 4)        # demote
+        _run_steps(ctl, rows, 4)        # promote (guard)
+        assert ctl.levels["a"] == 0
+        assert ctl.actions[-1]["kind"] == "promote"
+
+    def test_plan_bits_maps_tenants_to_levels(self):
+        ctl = _ctl({"a": TenantSLO(), "b": TenantSLO()})
+        ctl.levels["b"] = 1
+        lv = ctl.plan_bits(["a", "b", None, "unknown"], 4)
+        assert lv.tolist() == [0, 1, 0, 0]
+        assert ctl.plan_bits(None, 3).tolist() == [0, 0, 0]
+
+
+# ==========================================================================
+# admission actuator
+# ==========================================================================
+class TestAdmission:
+    def test_thinning_is_deterministic_and_evenly_spaced(self):
+        ctl = _ctl({"bg": TenantSLO()})
+        ctl.admit_fracs["bg"] = 0.5
+        req = dataclasses.make_dataclass("R", ["tenant"])("bg")
+        pattern = [ctl.admit_request(req) for _ in range(8)]
+        assert pattern == [False, True] * 4
+
+    def test_full_admission_by_default(self):
+        ctl = _ctl({"bg": TenantSLO()})
+        req = dataclasses.make_dataclass("R", ["tenant"])("bg")
+        assert all(ctl.admit_request(req) for _ in range(10))
+
+    def test_ttft_violation_throttles_background_only(self):
+        ctl = _ctl({"lat": TenantSLO(ttft_s=0.01), "bg": TenantSLO()},
+                   interval=2, admit_step=0.25)
+        for _ in range(8):
+            ctl.signals["lat"].on_first_token(0.1)   # way over SLO
+        for _ in range(2):
+            ctl.on_step(None)
+        assert ctl.admit_fracs["bg"] == 0.75
+        assert ctl.admit_fracs["lat"] == 1.0         # has the TTFT SLO
+        # floor: repeated violations never drop below min_admit_frac
+        for _ in range(20):
+            ctl.on_step(None)
+        assert ctl.admit_fracs["bg"] == ctl.cfg.min_admit_frac
+
+    def test_admission_recovers_when_violation_clears(self):
+        ctl = _ctl({"lat": TenantSLO(ttft_s=0.01), "bg": TenantSLO()},
+                   interval=2)
+        ctl.signals["lat"].on_first_token(0.1)
+        for _ in range(2):
+            ctl.on_step(None)
+        assert ctl.admit_fracs["bg"] < 1.0
+        ctl.signals["lat"].ttft_s.clear()
+        for _ in range(20):
+            ctl.on_step(None)
+        assert ctl.admit_fracs["bg"] == 1.0
+
+
+# ==========================================================================
+# tenant-partitioned cache
+# ==========================================================================
+K = 100.0    # uniform slice size for these tests
+
+
+def _keys(n, layer=0, kind="msb"):
+    return [SliceKey(layer, e, kind) for e in range(n)]
+
+
+def _pcache(**over):
+    base = dict(capacity_bytes=1000.0, tenants=["a", "b"],
+                shared_frac=0.2)     # 400 bytes per tenant, 200 shared
+    base.update(over)
+    return TenantPartitionedCache(**base)
+
+
+class TestPartitionedCache:
+    def test_lookup_is_shared_across_tenants(self):
+        c = _pcache()
+        key = SliceKey(0, 0, "msb")
+        c.set_active_tenant("a")
+        assert not c.access(key, K)          # miss, fills a's segment
+        c.set_active_tenant("b")
+        assert c.access(key, K)              # hit: one copy, shared view
+        assert c.stats.accesses == 2 and c.stats.misses == 1
+
+    def test_eviction_is_isolated_per_tenant(self):
+        c = _pcache()
+        a_keys = _keys(4, layer=0)
+        c.set_active_tenant("a")
+        for k in a_keys:
+            c.access(k, K)                   # fills a to capacity
+        c.set_active_tenant("b")
+        for k in _keys(8, layer=1):          # 2x b's capacity
+            c.access(k, K)
+        assert all(k in c for k in a_keys)   # b's storm evicted only b
+        assert len(c.segments["b"]) == 4
+
+    def test_unattributed_fills_go_to_shared(self):
+        c = _pcache()
+        c.set_active_tenant(None)
+        key = SliceKey(0, 0, "msb")
+        c.access(key, K)
+        assert key in c.segments["shared"]
+
+    def test_set_budgets_evicts_lru_overflow(self):
+        c = _pcache()
+        c.set_active_tenant("a")
+        keys = _keys(4)
+        for k in keys:
+            c.access(k, K)
+        evicted = c.set_budgets({"a": 150.0})
+        assert evicted == keys[:3]           # LRU order
+        assert c.budgets()["a"] == 150.0
+        assert keys[3] in c
+
+    def test_set_budgets_validation(self):
+        c = _pcache()
+        with pytest.raises(KeyError):
+            c.set_budgets({"nope": 100.0})
+        with pytest.raises(ValueError):
+            c.set_budgets({"a": -1.0})
+
+    def test_reserved_and_empty_tenant_names(self):
+        with pytest.raises(ValueError):
+            _pcache(tenants=["shared"])
+        with pytest.raises(ValueError):
+            _pcache(tenants=[])
+
+
+# ==========================================================================
+# replay determinism (model-free)
+# ==========================================================================
+SPEC = SyntheticSpec(n_moe_layers=3, n_experts=12, top_k=2)
+
+
+def _soak_trace(seed=0):
+    return tenant_phase_trace(
+        SPEC, tenants=[{"premium": 1.0, "batch": 3.0}, {"premium": 1.0}],
+        phases=2, requests_per_phase=2, prompt_len=8, decode_steps=8,
+        seed=seed)
+
+
+def _tight_cfg(**over):
+    base = dict(interval=4, window=16, cooldown=8, partition=False)
+    base.update(over)
+    return ControllerConfig(
+        slos={"premium": TenantSLO(miss_rate=1e-6),
+              "batch": TenantSLO(miss_rate=1e-6)}, **base)
+
+
+class TestReplayDeterminism:
+    def test_controller_replay_is_deterministic(self):
+        trace = _soak_trace()
+        cfg = _tight_cfg()
+        a = replay_trace(trace, controller=cfg)
+        b = replay_trace(trace, controller=cfg)
+        assert a.miss_curve == b.miss_curve
+        assert a.energy_curve == b.energy_curve
+        assert a.controller_summary == b.controller_summary
+        assert a.per_tenant_rows == b.per_tenant_rows
+
+    def test_tight_slo_forces_demotion(self):
+        rep = replay_trace(_soak_trace(), controller=_tight_cfg())
+        s = rep.controller_summary
+        assert s["n_actions"] >= 1
+        assert set(s["levels"].values()) == {1}   # everyone demoted
+        assert "controller" in rep.summary()
+
+    def test_demotion_reduces_energy_vs_uncontrolled(self):
+        trace = _soak_trace()
+        base = replay_trace(trace)
+        ctl = replay_trace(trace, controller=_tight_cfg(interval=1))
+        assert base.controller_summary is None
+        assert ctl.total_energy_j < base.total_energy_j
+
+    def test_per_tenant_rows_follow_trace_attribution(self):
+        from repro.sim import zipf_trace
+
+        # Rows exist whenever the trace attributes slots to tenants —
+        # with or without a controller — keyed by the recorded names.
+        rows = replay_trace(_soak_trace()).per_tenant_rows
+        assert rows and all(
+            set(row) <= {"premium", "batch"} for row in rows)
+        plain = zipf_trace(SPEC, n_requests=2, prompt_len=6,
+                           decode_steps=6)
+        rows = replay_trace(plain).per_tenant_rows
+        assert rows and all(set(row) == {"default"} for row in rows)
+
+
+# ==========================================================================
+# live scheduler integration (slow: real engine + jit)
+# ==========================================================================
+@pytest.mark.slow
+class TestLiveIntegration:
+    @pytest.fixture(scope="class")
+    def moe_setup(self):
+        import jax
+
+        from repro.configs.base import get_config
+        from repro.models import model as MDL
+
+        cfg = get_config("qwen15-moe-repro")
+        cfg = dataclasses.replace(cfg, n_layers=2)
+        return cfg, MDL.init_params(cfg, jax.random.PRNGKey(0))
+
+    def _engine(self, moe_setup, controller):
+        from repro.core.amat import MatConfig
+        from repro.core.engine import EngineConfig, PersistentEngine
+        from repro.models.moe import RoutingPolicy
+
+        cfg, params = moe_setup
+        return PersistentEngine(cfg, params, EngineConfig(
+            mat=MatConfig(8, 4), cache_bytes=1.0e6,
+            policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc"),
+            miss_rate_target=0.1, warmup="pcw", max_seq=64,
+            controller=controller))
+
+    def _requests(self, cfg, tenants, *, prompt_len=12, max_new=4):
+        from repro.serving.scheduler import Request
+
+        rng = np.random.default_rng(0)
+        return [Request(request_id=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            prompt_len).astype(np.int32),
+                        max_new_tokens=max_new, tenant=t)
+                for i, t in enumerate(tenants)]
+
+    def test_controller_wires_through_scheduler(self, moe_setup):
+        from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                             SchedulerConfig)
+
+        ctl_cfg = ControllerConfig(
+            slos={"premium": TenantSLO(miss_rate=1e-6, bit_floor="high"),
+                  "batch": TenantSLO(miss_rate=1e-6)},
+            interval=2, window=8, cooldown=4)
+        engine = self._engine(moe_setup, ctl_cfg)
+        assert isinstance(engine.cache, TenantPartitionedCache)
+        sched = ContinuousBatchingScheduler(
+            engine, SchedulerConfig(max_batch=2, max_queue=8))
+        # telemetry listener + admission hook auto-wired
+        assert engine.slo_controller in sched.telemetry.listeners
+        assert sched._admission_hook == engine.slo_controller.admit_request
+        cfg, _ = moe_setup
+        for r in self._requests(cfg, ["premium", "batch"] * 2):
+            assert sched.submit(r)
+        sched.run()
+        s = engine.slo_controller.summary()
+        assert s["steps"] > 0
+        assert s["levels"] == {"batch": 1, "premium": 0}   # floor pins
+        tel = sched.telemetry.summary()
+        assert set(tel["per_tenant"]) == {"premium", "batch"}
+
+    def test_admission_hook_rejection_path(self, moe_setup):
+        from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                             SchedulerConfig)
+
+        engine = self._engine(moe_setup, None)
+        sched = ContinuousBatchingScheduler(
+            engine, SchedulerConfig(max_batch=1, max_queue=8,
+                                    admission_hook=lambda r: False))
+        cfg, _ = moe_setup
+        (req,) = self._requests(cfg, ["premium"])
+        assert not sched.submit(req)
+        assert sched.telemetry.rejected == [req.request_id]

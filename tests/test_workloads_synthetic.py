@@ -1,0 +1,158 @@
+"""Phase-shift / tenant-mix generators: serving workloads
+(``generate_phased``) and synthetic traces (``tenant_phase_trace``).
+
+All model-free and seeded — determinism, tenant-weight proportions and
+phase-boundary structure are exact claims, not statistical ones, except
+where noted (proportions get a generous tolerance on a large draw).
+"""
+
+import collections
+
+import numpy as np
+import pytest
+
+from repro.serving.workloads import (LengthDist, TenantSpec,
+                                     WorkloadConfig, generate,
+                                     generate_phased)
+from repro.sim import SyntheticSpec, tenant_phase_trace, traces_equal
+
+VOCAB = 512
+
+
+def _phase_cfg(tenants, *, n=6, seed=0, kind="poisson", rate=4.0):
+    specs = tuple(
+        TenantSpec(name=name, weight=w,
+                   prompt_len=LengthDist("fixed", 8),
+                   output_len=LengthDist("fixed", 4))
+        for name, w in tenants)
+    return WorkloadConfig(kind=kind, n_requests=n, rate=rate, seed=seed,
+                          tenants=specs)
+
+
+# ==========================================================================
+# serving/workloads.py::generate_phased
+# ==========================================================================
+class TestGeneratePhased:
+    def test_seeded_determinism(self):
+        phases = [_phase_cfg([("a", 1.0), ("b", 3.0)], seed=1),
+                  _phase_cfg([("a", 1.0)], seed=2)]
+        xs = generate_phased(phases, VOCAB)
+        ys = generate_phased(phases, VOCAB)
+        assert len(xs) == len(ys) == 12
+        for x, y in zip(xs, ys):
+            assert x.request_id == y.request_id
+            assert x.tenant == y.tenant
+            assert x.arrival_time == y.arrival_time
+            assert np.array_equal(x.prompt, y.prompt)
+
+    def test_request_ids_continue_across_phases(self):
+        phases = [_phase_cfg([("a", 1.0)], n=3),
+                  _phase_cfg([("b", 1.0)], n=4)]
+        reqs = generate_phased(phases, VOCAB)
+        assert [r.request_id for r in reqs] == list(range(7))
+
+    def test_phase_arrivals_are_offset_and_ordered(self):
+        phases = [_phase_cfg([("a", 1.0)], n=4, seed=0),
+                  _phase_cfg([("b", 1.0)], n=4, seed=1)]
+        reqs = generate_phased(phases, VOCAB, gap_s=5.0)
+        first, second = reqs[:4], reqs[4:]
+        # every phase-1 arrival lands >= gap after phase 0's last
+        assert min(r.arrival_time for r in second) \
+            >= max(r.arrival_time for r in first) + 5.0
+        assert all(r.tenant == "a" for r in first)
+        assert all(r.tenant == "b" for r in second)
+
+    def test_phase_mix_shift_changes_tenant_population(self):
+        phases = [_phase_cfg([("a", 1.0), ("b", 3.0)], n=200, seed=0),
+                  _phase_cfg([("a", 1.0)], n=50, seed=1)]
+        reqs = generate_phased(phases, VOCAB)
+        counts = collections.Counter(r.tenant for r in reqs[:200])
+        # weight 3:1 -> expect ~150 b; generous tolerance on 200 draws
+        assert 120 <= counts["b"] <= 180
+        assert all(r.tenant == "a" for r in reqs[200:])
+
+    def test_matches_single_generate_for_one_phase(self):
+        cfg = _phase_cfg([("a", 2.0), ("b", 1.0)], n=8, seed=3)
+        alone = generate(cfg, VOCAB)
+        phased = generate_phased([cfg], VOCAB)
+        assert len(alone) == len(phased)
+        for x, y in zip(alone, phased):
+            assert x.tenant == y.tenant
+            assert x.arrival_time == y.arrival_time
+            assert np.array_equal(x.prompt, y.prompt)
+
+
+# ==========================================================================
+# sim/synthetic.py::tenant_phase_trace
+# ==========================================================================
+SPEC = SyntheticSpec(n_moe_layers=3, n_experts=12, top_k=2)
+
+
+def _trace(**kw):
+    kw.setdefault("phases", 2)
+    kw.setdefault("requests_per_phase", 3)
+    kw.setdefault("prompt_len", 6)
+    kw.setdefault("decode_steps", 8)
+    return tenant_phase_trace(SPEC, **kw)
+
+
+def _prefills(trace):
+    return [e for e in trace.events if e.kind == "prefill"]
+
+
+class TestTenantPhaseTrace:
+    def test_seeded_determinism(self):
+        assert traces_equal(_trace(seed=5), _trace(seed=5))
+
+    def test_seed_changes_stream(self):
+        assert not traces_equal(_trace(seed=5), _trace(seed=6))
+
+    def test_phase_boundaries_in_labels(self):
+        labels = [e.label for e in _prefills(_trace())]
+        assert len(labels) == 6
+        assert [l.split("/")[0] for l in labels] == ["ph0"] * 3 + ["ph1"] * 3
+        # request ids continue across phases
+        assert [int(l.split("req")[1]) for l in labels] == list(range(6))
+
+    def test_decode_events_carry_tenants(self):
+        trace = _trace()
+        by_label = {e.label: e.tenant for e in _prefills(trace)}
+        decodes = [e for e in trace.events if e.kind == "decode"]
+        assert decodes
+        for e in decodes:
+            assert e.slot_tenants is not None
+            assert all(t in {"premium", "batch"} for t in e.slot_tenants
+                       if t is not None)
+        assert set(by_label.values()) <= {"premium", "batch"}
+
+    def test_per_phase_mix_list(self):
+        trace = _trace(tenants=[{"only_a": 1.0}, {"only_b": 1.0}],
+                       requests_per_phase=4)
+        tenants = [e.tenant for e in _prefills(trace)]
+        assert tenants == ["only_a"] * 4 + ["only_b"] * 4
+
+    def test_mix_length_must_match_phases(self):
+        with pytest.raises(ValueError):
+            _trace(tenants=[{"a": 1.0}], phases=2)
+
+    def test_tenant_weight_proportions(self):
+        trace = _trace(tenants={"hot": 4.0, "cold": 1.0}, phases=1,
+                       requests_per_phase=200, decode_steps=1,
+                       prompt_len=4, seed=0)
+        counts = collections.Counter(
+            e.tenant for e in _prefills(trace))
+        # 4:1 weights -> ~160 hot of 200; generous tolerance
+        assert 130 <= counts["hot"] <= 190
+
+    def test_tenants_occupy_shifted_expert_neighborhoods(self):
+        # Same phase base, different crc32 rotation: the hot expert set
+        # of one tenant's prefill differs from the other's.
+        trace = _trace(tenants=[{"premium": 1.0, "batch": 1.0}],
+                       phases=1, requests_per_phase=20, seed=2)
+        hot = collections.defaultdict(collections.Counter)
+        for e in _prefills(trace):
+            hot[e.tenant].update(np.asarray(e.ids)[..., 0].ravel().tolist())
+        assert set(hot) == {"premium", "batch"}
+        top = {t: {e for e, _ in c.most_common(3)}
+               for t, c in hot.items()}
+        assert top["premium"] != top["batch"]
