@@ -249,8 +249,12 @@ def main(quick: bool = False) -> None:
                  for w in ("pcw", "empty")]
     policies += [("cache=4MB,MAT63",
                   {"cache_bytes": 4.0e6, "high_bits": 6, "low_bits": 3}),
+                 # Pinned to the Markov baseline: the persisted frontier
+                 # predates the request-kind predictor and must not move
+                 # when the default prefetch_kind changes.
                  ("cache=4MB,prefetch4",
-                  {"cache_bytes": 4.0e6, "prefetch_top_m": 4}),
+                  {"cache_bytes": 4.0e6, "prefetch_top_m": 4,
+                   "prefetch_kind": "transition"}),
                  ("cache=4MB,async",
                   {"cache_bytes": 4.0e6, "async_io": True}),
                  ("cache=4MB,ep2",

@@ -91,11 +91,26 @@ class EngineConfig:
     # Flash/DRAM/XPU channel clocks; token dispatch to remote experts is
     # charged on the interconnect channel.  1 = the single-device model.
     ep_shards: int = 1
-    # Prefetch confidence floor: a layer transition must have been
-    # observed at least this many times before the prefetcher issues
-    # fills for it (0 = issue from the smoothing prior immediately).
-    # Suppresses cold-start blind fills that burn Flash energy.
+    # Prefetch confidence floor: a target layer must have been observed
+    # at least this many times before the prefetcher issues fills for it
+    # (0 = issue immediately).  Suppresses cold-start blind fills that
+    # burn Flash energy.  Applies to both predictor kinds (the
+    # transition baseline reads it as its min_transitions).
     prefetch_min_obs: int = 0
+    # Which predictor drives prefetch_top_m:
+    #   'request'    — request-level activation matrices with cyclic
+    #                  multi-layer-ahead targets (MoE-Infinity style;
+    #                  the only kind that can land fills in time in the
+    #                  I/O-bound decode regime);
+    #   'transition' — the single-step Markov baseline (paper §2.1).
+    prefetch_kind: str = "request"
+    # Request predictor: how many layers ahead plan() may target
+    # (cyclic — distances past the end of the step wrap to the next
+    # decode step, which is where the real slack is).
+    prefetch_lookahead: int = 2
+    # Request predictor: activation-share floor below which a candidate
+    # is never issued (shares sum to <= 1 across experts).
+    prefetch_min_score: float = 0.02
     # Online SLO controller (repro.control.controller.ControllerConfig):
     # per-tenant closed-loop bit-plan / cache-partition / admission
     # adaptation.  None = static policy (everything above as configured).
@@ -124,6 +139,28 @@ class EngineConfig:
         if self.ep_shards > 1:
             return ShardedCostLedger(system, self.ep_shards)
         return CostLedger(system=system)
+
+    def build_prefetcher(self, n_layers: int, n_experts: int):
+        """The configured predictor (or None) — one factory shared by
+        the live engine and the trace-replay engine so a sweep toggling
+        ``prefetch_kind`` exercises the identical construction."""
+        if not self.prefetch_top_m:
+            return None
+        if self.prefetch_kind == "transition":
+            from repro.core.prefetch import TransitionPrefetcher
+            return TransitionPrefetcher(
+                n_layers, n_experts, top_m=self.prefetch_top_m,
+                min_transitions=self.prefetch_min_obs)
+        if self.prefetch_kind == "request":
+            from repro.core.prefetch import RequestPrefetcher
+            return RequestPrefetcher(
+                n_layers, n_experts, top_m=self.prefetch_top_m,
+                lookahead=self.prefetch_lookahead,
+                min_obs=self.prefetch_min_obs,
+                min_score=self.prefetch_min_score)
+        raise ValueError(
+            f"unknown prefetch_kind {self.prefetch_kind!r}; "
+            "expected 'request' or 'transition'")
 
 
 @dataclasses.dataclass
@@ -230,13 +267,14 @@ class PersistentEngine:
         self.moe_positions = [i for i, s in enumerate(cfg.block_pattern)
                               if s.ffn == "moe"]
 
-        self.prefetcher = None
-        if ecfg.prefetch_top_m:
-            from repro.core.prefetch import TransitionPrefetcher
-            self.prefetcher = TransitionPrefetcher(
-                self.n_moe_layers, self.n_experts,
-                top_m=ecfg.prefetch_top_m,
-                min_transitions=ecfg.prefetch_min_obs)
+        self.prefetcher = ecfg.build_prefetcher(
+            self.n_moe_layers, self.n_experts)
+        # Prefetches in flight across decode steps: target flat layer ->
+        # {SliceKey: (ready_t, nbytes, distance)}.  The request
+        # predictor's cyclic targets judge at the *next* execution of
+        # the target layer, which may be next step — state must outlive
+        # a single charge_step_trace call.
+        self._pf_pending: dict = {}
 
         # Online SLO controller: closed-loop bit-plan / cache-partition
         # adaptation.  Named slo_controller (not controller) because the
@@ -461,6 +499,11 @@ class PersistentEngine:
             decay = self.ecfg.hotness_request_decay \
                 ** (1.0 / (1.0 + max(inflight, 0)))
             self.tracker.begin_request(decay)
+            if self.prefetcher is not None:
+                # Request-level predictor state ages on the same
+                # schedule as cache hotness (no-op on the transition
+                # baseline, so pre-existing traces replay unchanged).
+                self.prefetcher.begin_request(decay)
         self.requests_served += 1
         if label is not None:
             self.cache.begin_epoch(f"{label}/prefill")
@@ -487,6 +530,13 @@ class PersistentEngine:
                 sel_ids = ids[period, pidx][a2d]
                 sel_gates = gates[period, pidx][a2d]
                 self.tracker.observe(lidx, sel_ids, sel_gates)
+                if self.prefetcher is not None:
+                    # Seed the request-level activation matrix from
+                    # prompt routing (MoE-Infinity's key observation);
+                    # no-op on the transition baseline.
+                    self.prefetcher.observe_prefill(
+                        lidx, sel_ids, sel_gates,
+                        n_tokens=int(a2d.any(axis=1).sum()))
                 # All-to-all: prompt tokens live round-robin across
                 # shards; selections landing on remote experts pay
                 # dispatch + combine bytes (zero on a single device).
@@ -526,6 +576,10 @@ class PersistentEngine:
         else:
             INIT_STATES[self.ecfg.warmup](self.cache, self.store)
             warmup_summary = {"init": self.ecfg.warmup}
+        # Admission-time prefetch: issue from the prompt-seeded activation
+        # matrix now that the reshape has settled residency (no-op for
+        # the transition baseline and with prefetch off).
+        self._prefetch_issue_prefill()
         snapshot = self.ledger.snapshot()
         if label is not None:
             self.cache.begin_epoch(f"{label}/decode")
@@ -795,6 +849,151 @@ class PersistentEngine:
             row[e] = SliceKey(lidx, e, "msb") in self.cache
         return row
 
+    # ------------------------------------------- request-kind prefetch bits
+    def _pf_pending_keys(self) -> set:
+        keys: set = set()
+        for m in self._pf_pending.values():
+            keys.update(m)
+        return keys
+
+    def _lsb_prefetch_allowed(self, tr: "_StepTrace") -> bool:
+        """Whether LSB slices are worth prefetching this step: DBSC mode
+        only (other modes never demand LSBs separately), and not when
+        the controller has demoted every active slot to MSB-only — a
+        demoted fleet's LSB fills would be wasted by construction."""
+        if self.ecfg.policy.slice_mode != "dbsc" or self.ecfg.fused_slices:
+            return False
+        demoted = tr.slot_bit_level
+        if demoted is not None and tr.slot_mask.any() \
+                and bool((demoted[tr.slot_mask] > 0).all()):
+            return False
+        return True
+
+    def _prefetch_judge(self, lidx: int, msb_demand: np.ndarray,
+                        lsb_wanted: set, t_route: float) -> None:
+        """Judge pending prefetches targeting ``lidx`` against the
+        layer's actual demand, *before* demand charging mutates the
+        cache.  Kind-aware: an LSB fill is useful only if the layer
+        wanted that expert's LSB.  ``t_route`` is the usefulness bar
+        (serialized replay passes 0.0 — fills land instantly there).
+
+        Waste is judged on *energy truth*, not a fixed horizon: a fill's
+        cost is repaid iff the slice serves at least one demand before
+        leaving the cache, so a pending entry survives un-demanded as
+        long as it stays resident.  The wasted verdict lands when the
+        slice is evicted unused (it can no longer repay its fill) or is
+        still unused when the run flushes (:meth:`_prefetch_flush`).
+        The single-next-execution verdict of the transition baseline is
+        an artifact of its one-step horizon.  Conservation
+        ``issued == useful + late + wasted + in_flight`` holds
+        throughout, with surviving entries counted in ``in_flight``."""
+        pf = self.prefetcher
+        demanded = set(int(e) for e in msb_demand)
+        survivors = {}
+        for key, (ready_t, p_nb, d) in \
+                self._pf_pending.pop(lidx, {}).items():
+            if key not in self.cache:        # evicted before use
+                pf.mark_wasted(distance=d)
+                self._ledger_for(key.expert).mark_prefetch_wasted(p_nb)
+            elif (key.expert in demanded if key.kind == "msb"
+                  else key.expert in lsb_wanted):
+                if ready_t <= t_route:
+                    pf.mark_useful(distance=d)
+                else:
+                    pf.mark_late(distance=d)
+            else:                            # resident, un-demanded: wait
+                survivors[key] = (ready_t, p_nb, d)
+        if survivors:
+            self._pf_pending[lidx] = survivors
+
+    def _prefetch_flush(self) -> None:
+        """End-of-run settlement for the request-kind predictor: any
+        pending fill still unused is energy spent that will never be
+        repaid — wasted, exactly like an eviction before use.  After the
+        flush ``issued == useful + late + wasted`` and ``in_flight`` is
+        zero, which is what the invariant suite asserts on finished
+        engines."""
+        pf = self.prefetcher
+        if pf is None or pf.kind != "request":
+            return
+        for m in self._pf_pending.values():
+            for key, (ready_t, p_nb, d) in m.items():
+                pf.mark_wasted(distance=d)
+                self._ledger_for(key.expert).mark_prefetch_wasted(p_nb)
+        self._pf_pending.clear()
+
+    def _prefetch_issue(self, lidx: int, flat_ids: np.ndarray,
+                        t_issue: float, tr: "_StepTrace", *,
+                        timeline: bool) -> None:
+        """Plan + enqueue request-predictor fills after ``lidx`` routed.
+
+        Fills ride the owning shard's Flash channel behind the layer's
+        demand fills (``timeline=True``) or charge the serialized
+        accounting (``timeline=False``).  Capacity-skipped candidates
+        never count as issued — they moved no bytes.  Under EP sharding
+        ``_ledger_for``/``ShardedSliceCache`` route every fill to the
+        shard owning the expert, so a shard never fills a
+        remote-placement slice (asserted by the cross-feature tests).
+        """
+        pf = self.prefetcher
+        if self._partitioned:    # speculative fills: shared segment
+            self.cache.set_active_tenant(None)
+        cands = pf.plan(
+            lidx, flat_ids,
+            is_resident=lambda k: k in self.cache,
+            slice_bytes=self._slice_nbytes,
+            pending=self._pf_pending_keys(),
+            lsb_allowed=self._lsb_prefetch_allowed(tr))
+        for key, d in cands:
+            nb = self._slice_nbytes(key)
+            if key in self.cache or nb > self._segment_capacity(key):
+                continue
+            led = self._ledger_for(key.expert)
+            if timeline:
+                # Background-priority lane: speculative fills never
+                # delay the demand queue (demand preempts), unlike the
+                # transition baseline's FIFO fills.
+                _, end = led.prefetch_fill_at(t_issue, nb)
+                self.cache.insert(key, nb)
+                self.cache.mark_inflight(key, end)
+            else:
+                led.prefetch_fill_at(None, nb)
+                self.cache.insert(key, nb)
+                end = 0.0
+            self._pf_pending.setdefault(key.layer, {})[key] = \
+                (end, nb, d)
+            pf.mark_issued(distance=d)
+
+    def _prefetch_issue_prefill(self) -> None:
+        """Admission-time issuance: once per request, after the prefill
+        charge seeded the activation matrix and the warmup reshape
+        settled residency (the reshape keeps globally hot experts,
+        evicting exactly the request-specific slices this request is
+        about to re-demand).  Fills charge the serialized accounting —
+        prefill is off the decode timeline in both engine modes, and the
+        transfer genuinely completes during the (long) prefill charge,
+        so ``ready_t = 0.0`` at the first decode judge."""
+        pf = self.prefetcher
+        if pf is None or pf.kind != "request" or not pf.top_m:
+            return
+        if self._partitioned:    # speculative fills: shared segment
+            self.cache.set_active_tenant(None)
+        cands = pf.plan_prefill(
+            is_resident=lambda k: k in self.cache,
+            slice_bytes=self._slice_nbytes,
+            pending=self._pf_pending_keys())
+        for key, d in cands:
+            nb = self._slice_nbytes(key)
+            if key in self.cache or nb > self._segment_capacity(key):
+                continue
+            _, end = self._ledger_for(key.expert).prefetch_fill_at(None, nb)
+            self.cache.insert(key, nb)
+            if not self.ecfg.async_io:
+                end = 0.0    # serialized judge bar is t_route == 0.0
+            self._pf_pending.setdefault(key.layer, {})[key] = \
+                (end, nb, d)
+            pf.mark_issued(distance=d)
+
     def _attribute_slot_misses(self, tr: "_StepTrace", period: int,
                                pidx: int, missed_expert: np.ndarray) -> None:
         """Per-slot miss attribution: a slot is charged for every
@@ -840,6 +1039,8 @@ class PersistentEngine:
     # -------------------------------------------- serialized (sync) replay
     def _charge_sync(self, tr: "_StepTrace") -> StepCharge:
         base = self.ledger.snapshot()
+        pf = self.prefetcher
+        pf_req = pf is not None and pf.kind == "request"
         prev_used = None
         for period in range(tr.P):
             for pidx, pos in enumerate(self.moe_positions):
@@ -848,10 +1049,11 @@ class PersistentEngine:
                 # runs, the predictor has pulled its guesses into DRAM.
                 # Residency-filtered, so every prediction is a real fill.
                 issued = None
-                if self.prefetcher is not None and prev_used is not None:
+                if pf is not None and not pf_req \
+                        and prev_used is not None:
                     if self._partitioned:   # speculative: shared segment
                         self.cache.set_active_tenant(None)
-                    predicted = self.prefetcher.predict(
+                    predicted = pf.predict(
                         lidx - 1, prev_used,
                         resident=self._msb_resident_row(lidx))
                     # Only fills actually enqueued count as issued — a
@@ -867,7 +1069,7 @@ class PersistentEngine:
                                 nb, prefetch=True)
                             self.cache.insert(key, nb)
                             issued.add(int(e))
-                    self.prefetcher.mark_issued(len(issued))
+                    pf.mark_issued(len(issued))
                 flat_ids, flat_gates, msb_demand, lsb_wanted, tok_per_e = \
                     self._layer_demand(tr, period, pidx)
                 self.tracker.observe(lidx, flat_ids, flat_gates)
@@ -875,13 +1077,18 @@ class PersistentEngine:
                 nb_a2a, _ = self._layer_a2a_demand(tr, period, pidx)
                 if nb_a2a > 0:
                     self.ledger.ici_transfer(nb_a2a)
-                if self.prefetcher is not None:
+                if pf_req:
+                    # Serialized fills land instantly, so a correct
+                    # prediction that survived until its target layer is
+                    # useful by definition (bar t_route=0).
+                    self._prefetch_judge(lidx, msb_demand, lsb_wanted, 0.0)
+                elif pf is not None:
                     if prev_used is not None:
-                        self.prefetcher.observe(lidx, prev_used, flat_ids)
+                        pf.observe(lidx, prev_used, flat_ids)
                         demanded = set(int(e) for e in msb_demand)
-                        self.prefetcher.mark_useful(len(demanded & issued))
+                        pf.mark_useful(len(demanded & issued))
                         for e in issued - demanded:
-                            self.prefetcher.mark_wasted()
+                            pf.mark_wasted()
                             self._ledger_for(e).mark_prefetch_wasted(
                                 self._slice_nbytes(SliceKey(lidx, e, "msb")))
                     prev_used = flat_ids
@@ -932,6 +1139,14 @@ class PersistentEngine:
                         int(tok_per_e[e]), self.cfg.d_model,
                         self.expert_macs_per_token // self.cfg.d_model,
                         self._expert_bits(lsb_available))
+                # --- learn + issue for future layers (request kind):
+                # plan() sees post-demand residency, so every candidate
+                # is a fill that could save a future miss.
+                if pf_req:
+                    pf.observe(lidx, flat_ids, flat_gates,
+                               crit_ids=lsb_wanted)
+                    self._prefetch_issue(lidx, flat_ids, 0.0, tr,
+                                         timeline=False)
                 self._attribute_slot_misses(tr, period, pidx, missed_expert)
         # Non-expert resident weights: one pass per decode step per shard
         # (replicated dense weights), the batch's active tokens split
@@ -996,8 +1211,14 @@ class PersistentEngine:
         """
         base = self.ledger.snapshot()
         t_step = self._compute_frontier()
+        pf = self.prefetcher
+        pf_req = pf is not None and pf.kind == "request"
         prev_used = None
-        # prefetches in flight: key -> (ready_t, nbytes), per target layer
+        # Transition-kind prefetches in flight: key -> (ready_t, nbytes)
+        # per target layer.  Step-local: the Markov baseline only ever
+        # targets the next layer of the same step.  The request kind
+        # uses the engine-level ``_pf_pending`` instead (cyclic targets
+        # cross the step boundary).
         pending: dict = {}
         for period in range(tr.P):
             for pidx, pos in enumerate(self.moe_positions):
@@ -1024,20 +1245,25 @@ class PersistentEngine:
                 # consumer only waits out its tail.  A prediction whose
                 # slice was evicted before use saved nothing: wasted.
                 demanded = set(int(e) for e in msb_demand)
-                for key, (ready_t, p_nb) in pending.pop(lidx, {}).items():
-                    if key not in self.cache:     # evicted before use
-                        self.prefetcher.mark_wasted()
-                        self._ledger_for(key.expert).mark_prefetch_wasted(
-                            p_nb)
-                    elif key.expert in demanded:
-                        if ready_t <= t_route:
-                            self.prefetcher.mark_useful()
+                if pf_req:
+                    self._prefetch_judge(lidx, msb_demand, lsb_wanted,
+                                         t_route)
+                else:
+                    for key, (ready_t, p_nb) in \
+                            pending.pop(lidx, {}).items():
+                        if key not in self.cache:  # evicted before use
+                            self.prefetcher.mark_wasted()
+                            self._ledger_for(
+                                key.expert).mark_prefetch_wasted(p_nb)
+                        elif key.expert in demanded:
+                            if ready_t <= t_route:
+                                self.prefetcher.mark_useful()
+                            else:
+                                self.prefetcher.mark_late()
                         else:
-                            self.prefetcher.mark_late()
-                    else:
-                        self.prefetcher.mark_wasted()
-                        self._ledger_for(key.expert).mark_prefetch_wasted(
-                            p_nb)
+                            self.prefetcher.mark_wasted()
+                            self._ledger_for(
+                                key.expert).mark_prefetch_wasted(p_nb)
 
                 owner = self._expert_owner(tr, period, pidx)
                 missed_expert = np.zeros(self.n_experts, bool)
@@ -1097,16 +1323,21 @@ class PersistentEngine:
                         int(tok_per_e[e]), self.cfg.d_model,
                         self.expert_macs_per_token // self.cfg.d_model,
                         self._expert_bits(lsb_available))
-                # --- learn + issue prefetch for the NEXT layer, behind
+                # --- learn + issue prefetch for future layers, behind
                 # this layer's demand fills on each shard's Flash channel.
-                if self.prefetcher is not None:
+                if pf_req:
+                    pf.observe(lidx, flat_ids, flat_gates,
+                               crit_ids=lsb_wanted)
+                    self._prefetch_issue(lidx, flat_ids, t_route, tr,
+                                         timeline=True)
+                elif pf is not None:
                     if prev_used is not None:
-                        self.prefetcher.observe(lidx, prev_used, flat_ids)
+                        pf.observe(lidx, prev_used, flat_ids)
                     prev_used = flat_ids
                     if lidx + 1 < self.n_moe_layers:
                         if self._partitioned:   # speculative: shared seg
                             self.cache.set_active_tenant(None)
-                        predicted = self.prefetcher.predict(
+                        predicted = pf.predict(
                             lidx, flat_ids,
                             resident=self._msb_resident_row(lidx + 1))
                         n_issued = 0
@@ -1122,11 +1353,13 @@ class PersistentEngine:
                             self.cache.mark_inflight(key, end)
                             pending.setdefault(lidx + 1, {})[key] = (end, nb)
                             n_issued += 1
-                        self.prefetcher.mark_issued(n_issued)
+                        pf.mark_issued(n_issued)
                 self._attribute_slot_misses(tr, period, pidx, missed_expert)
-        # Every prefetch targets lidx+1 (< n_moe_layers), which always
-        # runs later in the same step and pops its pending entries — so
-        # issued == useful + late + wasted holds per step.
+        # Transition-kind prefetch targets lidx+1 (< n_moe_layers), which
+        # always runs later in the same step and pops its pending entries
+        # — so issued == useful + late + wasted holds per step.  Request-
+        # kind entries live in self._pf_pending (judged at the target
+        # layer's next execution; unjudged ones count as in_flight).
         assert not pending, f"unconsumed prefetch bookkeeping: {pending}"
         # Resident (non-expert) weights stream behind the expert reads
         # and overlap expert compute; the dense step compute waits on

@@ -131,6 +131,10 @@ class CostLedger:
         default_factory=lambda: ChannelTimeline("dram"))
     compute_ch: ChannelTimeline = dataclasses.field(
         default_factory=lambda: ChannelTimeline("compute"))
+    # Background-priority Flash lane (see :meth:`prefetch_fill_at`):
+    # speculative fills drain here so they never delay demand traffic.
+    flash_bg_ch: ChannelTimeline = dataclasses.field(
+        default_factory=lambda: ChannelTimeline("flash_bg"))
     io_stall_s: float = 0.0            # compute idle time waiting on data
 
     # asynchronous-prefetch traffic (a subset of the flash accumulators)
@@ -186,6 +190,45 @@ class CostLedger:
             self.n_prefetch_fills += 1
             self.prefetch_flash_bytes += nbytes
         return self.flash_ch.issue(t_ready, dur)
+
+    def prefetch_fill_at(self, t_ready: Optional[float],
+                         nbytes: float) -> Tuple[float, float]:
+        """Background-priority speculative Flash → DRAM fill.
+
+        Models the standard prefetch-queue discipline: demand fills
+        preempt, so speculative traffic *never* delays the demand
+        queue — the fill starts only once the demand frontier at issue
+        time has drained (it cannot use bandwidth that is already
+        spoken for) and occupies a separate background lane whose
+        completion does not extend the makespan.  Energy and traffic
+        are charged in full (overlap hides latency, it does not
+        un-spend joules); the returned ``end`` is the earliest the
+        slice is usable, slightly optimistic when demand arrives
+        mid-transfer (the paused remainder is not re-queued — slice
+        transfers are short relative to a decode step).
+
+        ``t_ready=None`` issues at the serialized IO frontier (the
+        blocking-issue discipline's notion of "now").
+
+        The one-step transition baseline keeps issuing through
+        :meth:`fill_at`/:meth:`miss_fill` — its fills contend with
+        demand in FIFO order, which is part of the measured baseline
+        behavior — so only the request-level predictor's fills ride
+        this lane.
+        """
+        if t_ready is None:
+            t_ready = self._io_ready()
+        sysspec = self.system
+        self.flash_bytes += nbytes
+        self.n_flash_transfers += 1
+        dur = sysspec.flash.transfer_latency_s(nbytes)
+        self.flash_latency_s += dur
+        self.flash_energy_j += sysspec.flash.transfer_energy_j(nbytes)
+        self.dram_energy_j += sysspec.dram.transfer_energy_j(nbytes)
+        self.n_prefetch_fills += 1
+        self.prefetch_flash_bytes += nbytes
+        return self.flash_bg_ch.issue(
+            max(t_ready, self.flash_ch.busy_until), dur)
 
     def flash_stream_at(self, t_ready: float,
                         nbytes: float) -> Tuple[float, float]:
@@ -363,7 +406,7 @@ class CostLedger:
         self.n_prefetch_fills = 0
         self.n_ici_transfers = 0
         for ch in (self.flash_ch, self.dram_ch, self.compute_ch,
-                   self.ici_ch):
+                   self.flash_bg_ch, self.ici_ch):
             ch.reset()
 
 

@@ -42,6 +42,9 @@ DEFAULT_KNOBS = {
     "policy_kind": "cache_prior", "slice_mode": "dbsc", "theta": 0.5,
     "miss_rate_target": 0.05, "warmup": "pcw", "async_io": False,
     "ep_shards": 1, "controller": None,
+    "prefetch_top_m": None, "prefetch_kind": "request",
+    "prefetch_lookahead": 2, "prefetch_min_obs": 0,
+    "prefetch_min_score": 0.02,
 }
 
 
@@ -80,6 +83,11 @@ def cli_engine_knobs(args) -> dict:
         "async_io": args.async_io,
         "ep_shards": args.ep_shards,
         "controller": parse_controller(args.controller),
+        "prefetch_top_m": args.prefetch_top_m,
+        "prefetch_kind": args.prefetch_kind,
+        "prefetch_lookahead": args.prefetch_lookahead,
+        "prefetch_min_obs": args.prefetch_min_obs,
+        "prefetch_min_score": args.prefetch_min_score,
     }
 
 
@@ -97,6 +105,11 @@ def build_engine_config(args) -> EngineConfig:
         async_io=k["async_io"],
         ep_shards=k["ep_shards"],
         controller=k["controller"],
+        prefetch_top_m=k["prefetch_top_m"],
+        prefetch_kind=k["prefetch_kind"],
+        prefetch_lookahead=k["prefetch_lookahead"],
+        prefetch_min_obs=k["prefetch_min_obs"],
+        prefetch_min_score=k["prefetch_min_score"],
     )
 
 
@@ -161,6 +174,24 @@ def main():
                          "this many shards, charging all-to-all token "
                          "dispatch on the interconnect channel (live "
                          "default 1 = single device)")
+    ap.add_argument("--prefetch-top-m", type=int, default=None,
+                    help="enable speculative slice prefetch: max fills "
+                         "issued per routed layer (live default: off)")
+    ap.add_argument("--prefetch-kind", default=None,
+                    choices=["request", "transition"],
+                    help="predictor: 'request' = sparsity-aware "
+                         "request-level activation predictor (default), "
+                         "'transition' = one-step Markov baseline")
+    ap.add_argument("--prefetch-lookahead", type=int, default=None,
+                    help="request predictor: how many layer executions "
+                         "ahead to score candidates (live default 2)")
+    ap.add_argument("--prefetch-min-obs", type=int, default=None,
+                    help="confidence gate: observations a target layer "
+                         "needs before its candidates issue")
+    ap.add_argument("--prefetch-min-score", type=float, default=None,
+                    help="request predictor: activation-share floor "
+                         "under the confidence-weighted admission gate "
+                         "(live default 0.02)")
     ap.add_argument("--controller", default=None, metavar="JSON|PATH",
                     help="enable the closed-loop SLO controller "
                          "(repro.control): inline ControllerConfig JSON "
@@ -229,6 +260,9 @@ def main():
         print(json.dumps(line))
 
     engine = getattr(server, "_engine", None)
+    if engine is not None \
+            and getattr(engine, "prefetcher", None) is not None:
+        print(json.dumps({"prefetch": engine.prefetcher.summary()}))
     if engine is not None \
             and getattr(engine, "slo_controller", None) is not None:
         print(json.dumps(

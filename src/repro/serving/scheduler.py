@@ -364,10 +364,14 @@ class ContinuousBatchingScheduler:
         """Drive until the queue drains and every sequence retires."""
         while self.step():
             pass
+        self.engine._prefetch_flush()   # settle never-used pending fills
         self.engine.cache.end_epoch()   # flush the last request's window
         return self.completions
 
     def summary(self, **kw) -> dict:
         kw.setdefault("per_shard", self.engine.shard_breakdown())
+        pf = getattr(self.engine, "prefetcher", None)
+        if pf is not None:
+            kw.setdefault("prefetch", pf.summary())
         return self.telemetry.summary(
             total_energy_j=self.engine.ledger.total_energy_j, **kw)

@@ -176,11 +176,15 @@ class FleetTelemetry:
 
     def summary(self, *, total_energy_j: Optional[float] = None,
                 wall_s: Optional[float] = None,
-                per_shard: Optional[list] = None) -> dict:
+                per_shard: Optional[list] = None,
+                prefetch: Optional[dict] = None) -> dict:
         """Fleet aggregates.  ``per_shard`` (expert-parallel engines
         only) is the engine's shard breakdown — per-shard cache
         miss/energy/makespan rows — attached verbatim under
-        ``"per_shard"``."""
+        ``"per_shard"``.  ``prefetch`` (prefetch-enabled engines only)
+        is the prefetcher's outcome summary — issued/useful/late/wasted
+        counts and the learned per-distance usefulness — attached
+        verbatim under ``"prefetch"``."""
         done = self.completed()
         ttfts = [r.ttft for r in done]
         per_tok = [r.per_token_s for r in done if r.n_generated > 1]
@@ -237,6 +241,8 @@ class FleetTelemetry:
         out["per_tenant"] = self.per_tenant_summary()
         if per_shard is not None:
             out["per_shard"] = per_shard
+        if prefetch is not None:
+            out["prefetch"] = prefetch
         return out
 
     def per_tenant_summary(self) -> Dict[str, dict]:

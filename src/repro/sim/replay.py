@@ -3,7 +3,7 @@
 :class:`ReplayEngine` subclasses :class:`~repro.core.engine.PersistentEngine`
 but never builds params, jitted functions or a KV cache — it rebuilds
 only the state the charge path touches (``SliceCache``,
-``HotnessTracker``, ``CostLedger``, ``TransitionPrefetcher``, the slice
+``HotnessTracker``, ``CostLedger``, the configured prefetcher, the slice
 byte-size store) from a :class:`~repro.sim.trace.TraceMeta`, then feeds
 recorded/synthetic routing events through the *inherited*
 ``_charge_prefill`` / ``charge_step_trace`` methods.  Because those are
@@ -107,6 +107,11 @@ def engine_config_from_meta(meta: TraceMeta, **overrides) -> EngineConfig:
     e.setdefault("ep_shards", 1)    # traces recorded before EP existed
     e.setdefault("prefetch_min_obs", 0)   # pre-confidence-floor traces
     e.setdefault("controller", None)      # pre-controller traces
+    # Traces recorded before the request-level predictor existed carry
+    # no kind: they ran (and must replay as) the transition baseline.
+    e.setdefault("prefetch_kind", "transition")
+    e.setdefault("prefetch_lookahead", 2)
+    e.setdefault("prefetch_min_score", 0.02)
     unknown = set(overrides) - set(e)
     if unknown:
         raise KeyError(f"unknown engine override(s) {sorted(unknown)}; "
@@ -134,6 +139,9 @@ def engine_config_from_meta(meta: TraceMeta, **overrides) -> EngineConfig:
         hotness_request_decay=float(e["hotness_request_decay"]),
         ep_shards=int(e["ep_shards"]),
         prefetch_min_obs=int(e["prefetch_min_obs"]),
+        prefetch_kind=str(e["prefetch_kind"]),
+        prefetch_lookahead=int(e["prefetch_lookahead"]),
+        prefetch_min_score=float(e["prefetch_min_score"]),
         controller=ctl,
     )
 
@@ -234,13 +242,9 @@ class ReplayEngine(PersistentEngine):
         self.requests_served = 0
         self.recorder = None
         self.buddies = None
-        self.prefetcher = None
-        if ecfg.prefetch_top_m:
-            from repro.core.prefetch import TransitionPrefetcher
-            self.prefetcher = TransitionPrefetcher(
-                self.n_moe_layers, self.n_experts,
-                top_m=ecfg.prefetch_top_m,
-                min_transitions=ecfg.prefetch_min_obs)
+        self.prefetcher = ecfg.build_prefetcher(
+            self.n_moe_layers, self.n_experts)
+        self._pf_pending = {}
 
         # Closed-loop SLO controller: its bit/partition decisions consume
         # only charge-path counters, so the replayed decision sequence is
@@ -353,6 +357,7 @@ class ReplayEngine(PersistentEngine):
     def finish(self) -> "ReplayReport":
         """Flush the open stats epoch and build the report."""
         if not self._finished:
+            self._prefetch_flush()   # settle never-used pending fills
             self.cache.end_epoch()
             self._finished = True
         return self.report()
@@ -398,6 +403,10 @@ class ReplayEngine(PersistentEngine):
         new.tracker = self.tracker.clone()
         new.prefetcher = (self.prefetcher.clone()
                           if self.prefetcher is not None else None)
+        # In-flight prefetch bookkeeping is engine state, not predictor
+        # state — fork it so the clone's judgments don't drain ours.
+        new._pf_pending = {l: dict(m)
+                           for l, m in self._pf_pending.items()}
         new.controller = copy.deepcopy(self.controller)
         new.slo_controller = copy.deepcopy(self.slo_controller)
         new.recorder = None

@@ -87,7 +87,9 @@ class SyntheticSpec:
             "lsb_keep_frac": 0.125, "system": self.system,
             "fused_slices": False, "prefetch_top_m": None,
             "async_io": False, "hotness_request_decay": 0.5,
-            "ep_shards": 1, "prefetch_min_obs": 0, "controller": None,
+            "ep_shards": 1, "prefetch_min_obs": 0,
+            "prefetch_kind": "request", "prefetch_lookahead": 2,
+            "prefetch_min_score": 0.02, "controller": None,
         }
         unknown = set(engine_overrides) - set(engine)
         if unknown:

@@ -340,6 +340,9 @@ def engine_meta(engine) -> TraceMeta:
             "hotness_request_decay": ecfg.hotness_request_decay,
             "ep_shards": ecfg.ep_shards,
             "prefetch_min_obs": ecfg.prefetch_min_obs,
+            "prefetch_kind": ecfg.prefetch_kind,
+            "prefetch_lookahead": ecfg.prefetch_lookahead,
+            "prefetch_min_score": ecfg.prefetch_min_score,
             "controller": (None if ecfg.controller is None
                            else ecfg.controller.to_dict()),
         },

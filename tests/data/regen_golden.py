@@ -1,0 +1,83 @@
+"""Regenerate the golden-trace regression fixture.
+
+Run from the repo root after an *intentional* charge-path change:
+
+    PYTHONPATH=src python tests/data/regen_golden.py
+
+Writes ``golden_trace.npz`` (a seeded synthetic routing trace) and
+``golden_expected.json`` (the expected replay observables for each
+pinned engine configuration).  tests/test_golden_trace.py replays the
+trace and compares: per-epoch miss *counts* exactly (integer fidelity —
+rates alone can agree by coincidence), energy/latency at rtol 1e-6, and
+prefetch outcome counters exactly.
+
+Commit both files together with the change that moved the numbers, and
+say why in the commit message — a diff here is a claim that the charge
+path's behavior legitimately changed.
+"""
+
+import json
+import pathlib
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+sys.path.insert(0, str(HERE.parents[1] / "src"))
+
+from repro.sim import SyntheticSpec, replay_trace, zipf_trace  # noqa: E402
+
+SPEC = SyntheticSpec(n_moe_layers=3, n_experts=12, top_k=2)
+TRACE_KW = dict(seed=20260808, n_requests=4, prompt_len=8,
+                decode_steps=16, zipf_a=1.3)
+
+# Pinned replay configurations.  "baseline" exercises the plain demand
+# path (prefetch off, serialized); "request_prefetch" locks in the
+# request-level predictor's full judge/flush behavior on the async
+# timeline; "transition_prefetch" pins the Markov baseline so predictor
+# work cannot silently shift it.
+CONFIGS = {
+    "baseline": dict(warmup="pcw"),
+    "request_prefetch": dict(
+        prefetch_top_m=4, prefetch_kind="request", prefetch_lookahead=2,
+        prefetch_min_score=0.02, async_io=True, warmup="empty",
+        cache_bytes=2.5e5),
+    "transition_prefetch": dict(
+        prefetch_top_m=4, prefetch_kind="transition", async_io=True,
+        warmup="pcw"),
+}
+
+LEDGER_KEYS = ("total_energy_j", "flash_bytes", "dram_bytes",
+               "n_flash_transfers", "n_dram_transfers",
+               "n_prefetch_fills", "prefetch_wasted_energy_j")
+
+
+def main() -> None:
+    trace = zipf_trace(SPEC, **TRACE_KW)
+    trace_path = trace.save(str(HERE / "golden_trace.npz"))
+
+    expected = {"trace_kw": TRACE_KW, "configs": {}}
+    for name, overrides in CONFIGS.items():
+        rep = replay_trace(trace, **overrides)
+        row = {
+            "overrides": {k: v for k, v in overrides.items()},
+            "epoch_counts": [[label, int(a), int(m)]
+                             for label, a, m in rep.epoch_counts],
+            "decode_accesses": int(rep.decode_accesses),
+            "decode_misses": int(rep.decode_misses),
+            "total_energy_j": rep.total_energy_j,
+            "total_latency_s": rep.total_latency_s,
+            "ledger": {k: rep.ledger[k] for k in LEDGER_KEYS},
+        }
+        if rep.prefetch is not None:
+            row["prefetch"] = {k: rep.prefetch[k] for k in
+                               ("kind", "issued", "useful", "late",
+                                "wasted", "in_flight")}
+        expected["configs"][name] = row
+
+    out = HERE / "golden_expected.json"
+    out.write_text(json.dumps(expected, indent=2) + "\n")
+    print(f"wrote {trace_path}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,412 @@
+"""Property-based invariants for the request-level prefetcher.
+
+Three layers of guarantees, each tested at the level where it actually
+holds:
+
+* **Planner level** (`RequestPrefetcher.plan` / `plan_prefill`): pure
+  functions of predictor state — budget caps, residency/pending
+  exclusion, and the *per-call* monotonicity of the confidence gates
+  (raising ``min_obs`` or ``min_score`` can only shrink the candidate
+  set).  Note the monotonicity claim is deliberately per-call: at run
+  level the outcome-feedback loop (``_p_useful``) breaks it, because a
+  stricter gate changes which fills get judged and therefore future
+  admission decisions.
+
+* **Accounting level** (`mark_*` counters): the outcome partition
+  ``issued == useful + late + wasted + in_flight`` under arbitrary
+  interleavings, and the Laplace bounds of the learned per-distance
+  usefulness.
+
+* **Engine level** (`ReplayEngine` on synthetic traces): the same
+  conservation through the real judge/flush path, exact agreement
+  between the wasted counter and ``CostLedger.prefetch_wasted_energy_j``,
+  and clone isolation of the full in-flight bookkeeping.
+
+Runs under real ``hypothesis`` when installed; otherwise conftest.py
+installs tests/_hypothesis_compat.py (same API, fixed-seed examples).
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.prefetch import (ActivationPredictor, RequestPrefetcher,
+                                 TransitionPrefetcher)
+from repro.core.slices import SliceKey
+from repro.sim import ReplayEngine, SyntheticSpec, replay_trace, zipf_trace
+
+SPEC = SyntheticSpec(n_moe_layers=3, n_experts=12, top_k=2)
+
+
+def small_trace(seed=0, **kw):
+    kw.setdefault("n_requests", 3)
+    kw.setdefault("prompt_len", 6)
+    kw.setdefault("decode_steps", 12)
+    return zipf_trace(SPEC, seed=seed, **kw)
+
+
+def trained_prefetcher(seed, n_layers=3, n_experts=8, n_steps=6, **kw):
+    """A RequestPrefetcher whose predictor has seen a random-but-seeded
+    prefill plus ``n_steps`` decode observations per layer."""
+    pf = RequestPrefetcher(n_layers, n_experts, seed=seed, **kw)
+    rng = np.random.default_rng(seed)
+    pf.begin_request(0.5)
+    for layer in range(n_layers):
+        ids = rng.integers(0, n_experts, size=(4, 2))
+        pf.observe_prefill(layer, ids, rng.random((4, 2)))
+    for _ in range(n_steps):
+        for layer in range(n_layers):
+            ids = rng.integers(0, n_experts, size=(2, 2))
+            crit = ids.reshape(-1)[:2]
+            pf.observe(layer, ids, rng.random((2, 2)), crit_ids=crit)
+    return pf
+
+
+def no_residency(_key):
+    return False
+
+
+def unit_bytes(_key):
+    return 100.0
+
+
+# ==========================================================================
+# Planner level
+# ==========================================================================
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), top_m=st.integers(1, 8),
+       lookahead=st.integers(1, 4))
+def test_plan_candidates_valid_and_within_top_m(seed, top_m, lookahead):
+    pf = trained_prefetcher(seed, top_m=top_m, lookahead=lookahead)
+    cands = pf.plan(0, np.array([0, 1]), is_resident=no_residency,
+                    slice_bytes=unit_bytes, lsb_allowed=True)
+    assert len(cands) <= top_m
+    for key, d in cands:
+        assert isinstance(key, SliceKey)
+        assert 0 <= key.layer < pf.n_layers
+        assert 0 <= key.expert < pf.n_experts
+        assert key.kind in ("msb", "lsb")
+        assert 1 <= d <= lookahead
+        # the planned target really is `d` hops from the source layer
+        assert key.layer == (0 + d) % pf.n_layers
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       resident_mod=st.integers(2, 4))
+def test_plan_skips_resident_and_pending(seed, resident_mod):
+    pf = trained_prefetcher(seed, top_m=64)
+    resident = lambda k: k.expert % resident_mod == 0
+    pend = [SliceKey(layer, 1, "msb") for layer in range(pf.n_layers)]
+    cands = pf.plan(0, np.array([0, 1]), is_resident=resident,
+                    slice_bytes=unit_bytes, pending=pend,
+                    lsb_allowed=True)
+    for key, _d in cands:
+        assert not resident(key)
+        assert key not in pend
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       lo=st.integers(0, 4), hi=st.integers(5, 40))
+def test_plan_min_obs_monotone_per_call(seed, lo, hi):
+    """Raising min_obs on identical predictor state can only remove
+    candidates — with an unbounded budget the stricter plan is a strict
+    subset; with any budget its size is non-increasing."""
+    base = trained_prefetcher(seed, top_m=10_000)
+    loose, strict = base.clone(), base.clone()
+    loose.min_obs, strict.min_obs = lo, hi
+    args = dict(is_resident=no_residency, slice_bytes=unit_bytes,
+                lsb_allowed=True)
+    got_loose = {k for k, _ in loose.plan(0, np.array([0, 1]), **args)}
+    got_strict = {k for k, _ in strict.plan(0, np.array([0, 1]), **args)}
+    assert got_strict <= got_loose
+    assert len(got_strict) <= len(got_loose)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       lo=st.floats(0.0, 0.05), extra=st.floats(0.01, 0.5))
+def test_plan_min_score_monotone_per_call(seed, lo, extra):
+    base = trained_prefetcher(seed, top_m=10_000)
+    loose, strict = base.clone(), base.clone()
+    loose.min_score, strict.min_score = lo, lo + extra
+    args = dict(is_resident=no_residency, slice_bytes=unit_bytes,
+                lsb_allowed=True)
+    got_loose = {k for k, _ in loose.plan(0, np.array([0, 1]), **args)}
+    got_strict = {k for k, _ in strict.plan(0, np.array([0, 1]), **args)}
+    assert got_strict <= got_loose
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), lo=st.integers(0, 1),
+       hi=st.integers(2, 40), budget=st.integers(1, 30))
+def test_plan_prefill_min_obs_monotone_and_budget(seed, lo, hi, budget):
+    base = trained_prefetcher(seed, top_m=10_000)
+    loose, strict = base.clone(), base.clone()
+    loose.min_obs, strict.min_obs = lo, hi
+    args = dict(is_resident=no_residency, slice_bytes=unit_bytes)
+    got_loose = {k for k, _ in loose.plan_prefill(**args)}
+    got_strict = {k for k, _ in strict.plan_prefill(**args)}
+    assert got_strict <= got_loose
+    capped = base.clone()
+    assert len(capped.plan_prefill(budget=budget, **args)) <= budget
+
+
+def test_plan_prefill_default_budget_and_distance_zero():
+    pf = trained_prefetcher(3, top_m=2)
+    cands = pf.plan_prefill(is_resident=no_residency,
+                            slice_bytes=unit_bytes)
+    assert len(cands) <= pf.top_m * pf.n_layers
+    assert all(d == 0 for _k, d in cands)
+    assert all(k.kind == "msb" for k, _d in cands)   # admission: MSB only
+
+
+def test_plan_prefill_scores_from_fresh_admission_only():
+    """plan_prefill keys off the *current* admission's prompt routing
+    (pfrac), not the cross-request freq EMA: after begin_request with no
+    new prefill observation, nothing is issued even though freq still
+    carries (decayed) mass from earlier traffic."""
+    pf = trained_prefetcher(5, top_m=8)
+    assert pf.plan_prefill(is_resident=no_residency,
+                           slice_bytes=unit_bytes)
+    pf.begin_request(decay=1.0)   # keep freq mass, clear pfrac
+    assert pf.predictor.freq.sum() > 0
+    assert pf.plan_prefill(is_resident=no_residency,
+                           slice_bytes=unit_bytes) == []
+
+
+@settings(max_examples=30, deadline=None)
+@given(score=st.floats(0.0, 1.0), p_lo=st.floats(0.01, 0.99),
+       bump=st.floats(0.0, 0.5))
+def test_admission_gate_monotone_in_confidence(score, p_lo, bump):
+    """If a (score, p_useful) pair clears the gate, the same score at
+    higher confidence clears it too — the self-throttle only ever cuts
+    off the *low*-confidence side."""
+    pf = RequestPrefetcher(2, 4, min_score=0.05)
+    p_hi = min(p_lo + bump, 1.0)
+    if pf._gate(score, p_lo):
+        assert pf._gate(score, p_hi)
+
+
+@settings(max_examples=20, deadline=None)
+@given(marks=st.lists(st.tuples(st.sampled_from(["u", "l", "w"]),
+                                st.integers(0, 3)),
+                      min_size=0, max_size=40))
+def test_p_useful_stays_in_open_unit_interval(marks):
+    pf = RequestPrefetcher(2, 4, lookahead=3)
+    for outcome, d in marks:
+        pf.mark_issued(distance=d)
+        {"u": pf.mark_useful, "l": pf.mark_late,
+         "w": pf.mark_wasted}[outcome](distance=d)
+    for d in range(6):    # beyond lookahead clamps to the last bucket
+        assert 0.0 < pf._p_useful(d) < 1.0
+
+
+# ==========================================================================
+# Accounting level
+# ==========================================================================
+@settings(max_examples=20, deadline=None)
+@given(events=st.lists(st.sampled_from(["i", "u", "l", "w"]),
+                       min_size=0, max_size=60))
+def test_outcome_conservation_under_interleaving(events):
+    """issued == useful + late + wasted + in_flight at every point of
+    any issue/resolve interleaving (resolves without a matching issue
+    are dropped, as the engine never judges what it didn't issue)."""
+    pf = RequestPrefetcher(2, 4)
+    for ev in events:
+        if ev == "i":
+            pf.mark_issued(distance=1)
+        elif pf.in_flight > 0:
+            {"u": pf.mark_useful, "l": pf.mark_late,
+             "w": pf.mark_wasted}[ev](distance=1)
+        assert pf.issued == pf.useful + pf.late + pf.wasted + pf.in_flight
+        assert pf.in_flight >= 0
+    s = pf.summary()
+    assert s["issued"] == s["useful"] + s["late"] + s["wasted"] \
+        + s["in_flight"]
+    assert 0.0 <= s["accuracy"] <= 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_clone_isolation_planner(seed):
+    """clone() forks everything: the fork plans identically at the fork
+    point, then the original's further learning and outcome marks leave
+    the clone's state untouched."""
+    pf = trained_prefetcher(seed, top_m=6)
+    fork = pf.clone()
+    args = dict(is_resident=no_residency, slice_bytes=unit_bytes,
+                lsb_allowed=True)
+    assert pf.plan(0, np.array([0, 1]), **args) \
+        == fork.plan(0, np.array([0, 1]), **args)
+    before = (fork.issued, fork.predictor.act.copy(),
+              fork.predictor.trans.copy(), fork.dist_issued.copy())
+    pf.mark_issued(distance=1)
+    pf.mark_wasted(distance=1)
+    pf.observe(1, np.array([2, 3]), np.array([0.5, 0.5]))
+    pf.begin_request(0.0)
+    assert fork.issued == before[0]
+    np.testing.assert_array_equal(fork.predictor.act, before[1])
+    np.testing.assert_array_equal(fork.predictor.trans, before[2])
+    np.testing.assert_array_equal(fork.dist_issued, before[3])
+
+
+def test_begin_request_ages_state_and_clears_transition_chain():
+    pf = trained_prefetcher(11)
+    act_before = pf.predictor.act.copy()
+    pf.begin_request(decay=0.25)
+    np.testing.assert_allclose(pf.predictor.act, act_before * 0.25)
+    assert pf.predictor._prev is None
+    assert pf.predictor.pfrac.sum() == 0.0
+
+
+# ==========================================================================
+# Transition baseline (kept behavior)
+# ==========================================================================
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), top_m=st.integers(1, 6),
+       resident_mod=st.integers(2, 5))
+def test_transition_predict_respects_residency_and_budget(
+        seed, top_m, resident_mod):
+    tp = TransitionPrefetcher(3, 8, top_m=top_m, seed=seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(5):
+        for layer in (1, 2):
+            tp.observe(layer, rng.integers(0, 8, 2), rng.integers(0, 8, 2))
+    resident = np.arange(8) % resident_mod == 0
+    pred = tp.predict(0, np.array([0, 1]), resident=resident)
+    assert pred.size <= top_m
+    assert np.all((pred >= 0) & (pred < 8))
+    assert not np.any(resident[pred])
+
+
+def test_transition_min_transitions_gates_cold_layers():
+    tp = TransitionPrefetcher(3, 8, top_m=4, min_transitions=3)
+    assert tp.predict(0, np.array([0])).size == 0     # cold: silent
+    for _ in range(3):
+        tp.observe(1, np.array([0]), np.array([1]))
+    assert tp.predict(0, np.array([0])).size > 0      # warmed past floor
+    assert tp.predict(1, np.array([1])).size == 0     # other layer still cold
+
+
+def test_transition_conservation_counters():
+    tp = TransitionPrefetcher(3, 8)
+    tp.mark_issued(5)
+    tp.mark_useful(2)
+    tp.mark_late(1)
+    tp.mark_wasted(2)
+    assert tp.in_flight == 0
+    s = tp.summary()
+    assert s["issued"] == s["useful"] + s["late"] + s["wasted"]
+
+
+# ==========================================================================
+# Engine level: the real judge / flush / ledger path
+# ==========================================================================
+PF_KW = dict(prefetch_top_m=4, prefetch_kind="request",
+             prefetch_lookahead=2, prefetch_min_score=0.02,
+             async_io=True, warmup="empty")
+
+
+def run_engine(trace, n_events=None, **overrides):
+    kw = dict(PF_KW)
+    kw.update(overrides)
+    eng = ReplayEngine(trace.meta, **kw)
+    events = trace.events if n_events is None else trace.events[:n_events]
+    eng.consume_all(events)
+    return eng
+
+
+def test_engine_conservation_mid_run_and_after_flush():
+    tr = small_trace(seed=0)
+    eng = run_engine(tr, n_events=len(tr.events) // 2)
+    pf = eng.prefetcher
+    assert pf.issued > 0
+    assert pf.issued == pf.useful + pf.late + pf.wasted + pf.in_flight
+    eng.consume_all(tr.events[len(tr.events) // 2:])
+    eng.finish()
+    assert pf.in_flight == 0
+    assert pf.issued == pf.useful + pf.late + pf.wasted
+    assert not eng._pf_pending
+
+
+def test_engine_flush_is_idempotent():
+    tr = small_trace(seed=1)
+    eng = run_engine(tr)
+    eng.finish()
+    snap = eng.prefetcher.summary()
+    eng._prefetch_flush()
+    eng.finish()
+    assert eng.prefetcher.summary() == snap
+
+
+def test_wasted_energy_matches_ledger_exactly():
+    """Every wasted fill is one MSB slice under highbit mode, so the
+    ledger's wasted-energy attribution must equal the wasted count times
+    the per-slice fill energy (Flash read + DRAM write) to the float."""
+    tr = small_trace(seed=2, n_requests=4, decode_steps=16)
+    eng = run_engine(tr, slice_mode="highbit", cache_bytes=2.0e5)
+    eng.finish()
+    pf, led = eng.prefetcher, eng.ledger
+    nb = eng.store.slice_bytes(SliceKey(0, 0, "msb"))
+    per_fill = led.system.flash.transfer_energy_j(nb) \
+        + led.system.dram.transfer_energy_j(nb)
+    assert pf.wasted > 0    # small cache: some fills must die unused
+    np.testing.assert_allclose(
+        led.prefetch_wasted_energy_j, pf.wasted * per_fill, rtol=1e-9)
+
+
+def test_issued_matches_ledger_prefetch_fill_count():
+    """The request predictor charges exactly one background fill per
+    issued candidate — capacity-skipped candidates count in neither."""
+    tr = small_trace(seed=3)
+    eng = run_engine(tr)
+    eng.finish()
+    assert eng.prefetcher.issued == eng.ledger.snapshot()["n_prefetch_fills"]
+    assert eng.prefetcher.issued > 0
+
+
+def test_engine_min_obs_gate_silences_run():
+    tr = small_trace(seed=4)
+    eng = run_engine(tr, prefetch_min_obs=10**6)
+    eng.finish()
+    assert eng.prefetcher.issued == 0
+    assert eng.ledger.snapshot()["n_prefetch_fills"] == 0
+
+
+def test_engine_clone_prefetch_isolation():
+    """Forking mid-run forks the in-flight bookkeeping: the original
+    draining its pending fills must not move the clone's counters, and
+    both flush to independent, internally-conserved totals."""
+    tr = small_trace(seed=5)
+    eng = run_engine(tr, n_events=len(tr.events) // 2)
+    fork = eng.clone()
+    frozen = fork.prefetcher.summary()
+    eng.consume_all(tr.events[len(tr.events) // 2:])
+    eng.finish()
+    assert fork.prefetcher.summary() == frozen
+    fork.finish()
+    fpf = fork.prefetcher
+    assert fpf.in_flight == 0
+    assert fpf.issued == fpf.useful + fpf.late + fpf.wasted
+
+
+def test_replay_report_carries_conserved_prefetch_summary():
+    tr = small_trace(seed=6)
+    rep = replay_trace(tr, **PF_KW)
+    s = rep.prefetch
+    assert s is not None and s["kind"] == "request"
+    assert s["in_flight"] == 0
+    assert s["issued"] == s["useful"] + s["late"] + s["wasted"]
+    assert s["issued"] == rep.ledger["n_prefetch_fills"]
+
+
+def test_prefetch_off_charges_nothing():
+    tr = small_trace(seed=7)
+    rep = replay_trace(tr, async_io=True, warmup="empty")
+    assert rep.prefetch is None
+    assert rep.ledger["n_prefetch_fills"] == 0
+    assert rep.ledger["prefetch_wasted_energy_j"] == 0.0

@@ -85,6 +85,7 @@ def test_transition_structure_is_prefetchable():
     accs = {}
     for name, tr in (("markov", structured), ("zipf", random_ish)):
         rep = replay_trace(tr, prefetch_top_m=2, warmup="empty",
+                           prefetch_kind="transition",
                            cache_bytes=0.05 * SPEC.store_bytes())
         accs[name] = rep.prefetch["accuracy"]
     assert accs["markov"] > accs["zipf"] + 0.1, accs

@@ -226,13 +226,21 @@ class TestAsyncEngineReplay:
 
     def test_async_prefetch_outcomes_partition(self, tiny_moe):
         """Every issued prefetch is classified exactly once: useful,
-        late, or wasted — and wasted energy is attributed."""
+        late, wasted, or still pending (`in_flight`) — and wasted
+        energy is attributed.  The request-kind judge leaves a resident
+        un-demanded fill pending until eviction or the end-of-run
+        flush, so mid-run the partition includes ``in_flight``.
+        Pinned to the transition baseline: under a PCW-warmed cache the
+        request predictor correctly issues nothing (its candidates are
+        already resident), and this test needs issuance to classify."""
         cfg, params = tiny_moe
         eng, totals = _decode_totals(cfg, params, async_io=True,
-                                     prefetch_top_m=4)
+                                     prefetch_top_m=4,
+                                     prefetch_kind="transition")
         pf = eng.prefetcher
         assert pf.issued > 0
-        assert pf.issued == pf.useful + pf.late + pf.wasted, pf.summary()
+        assert pf.issued == pf.useful + pf.late + pf.wasted \
+            + pf.in_flight, pf.summary()
         assert totals["n_prefetch_fills"] == pf.issued
         if pf.wasted:
             assert totals["prefetch_wasted_energy_j"] > 0.0
