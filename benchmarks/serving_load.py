@@ -75,16 +75,20 @@ def _engine_cfg(quant_execution: bool = False, *, async_io: bool = False,
                 prefetch_lookahead: int = 2,
                 prefetch_min_score: float = 0.02,
                 warmup: str = "pcw",
-                ep_shards: int = 1) -> EngineConfig:
+                ep_shards: int = 1,
+                placement: str = "round_robin",
+                placement_period: int = 64,
+                cache_bytes: float = CACHE_BYTES) -> EngineConfig:
     return EngineConfig(
-        mat=MatConfig(8, 4), cache_bytes=CACHE_BYTES,
+        mat=MatConfig(8, 4), cache_bytes=cache_bytes,
         policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc",
                              quant_execution=quant_execution),
         miss_rate_target=0.1, warmup=warmup, max_seq=MAX_SEQ,
         async_io=async_io, prefetch_top_m=prefetch_top_m,
         prefetch_min_obs=prefetch_min_obs, prefetch_kind=prefetch_kind,
         prefetch_lookahead=prefetch_lookahead,
-        prefetch_min_score=prefetch_min_score, ep_shards=ep_shards)
+        prefetch_min_score=prefetch_min_score, ep_shards=ep_shards,
+        placement=placement, placement_period=placement_period)
 
 
 def _workload(n_requests: int, seed: int, *, kind: str = "closed_loop",
@@ -125,13 +129,18 @@ def run_cell(cfg, params, *, max_batch: int, n_requests: int,
              prefetch_lookahead: int = 2,
              prefetch_min_score: float = 0.02,
              warmup: str = "pcw", requests=None,
-             ep_shards: int = 1):
+             ep_shards: int = 1, placement: str = "round_robin",
+             placement_period: int = 64, cache_bytes: float = CACHE_BYTES,
+             recorder=None):
     engine = PersistentEngine(cfg, params, _engine_cfg(
         quant_execution, async_io=async_io, prefetch_top_m=prefetch_top_m,
         prefetch_min_obs=prefetch_min_obs, prefetch_kind=prefetch_kind,
         prefetch_lookahead=prefetch_lookahead,
         prefetch_min_score=prefetch_min_score, warmup=warmup,
-        ep_shards=ep_shards))
+        ep_shards=ep_shards, placement=placement,
+        placement_period=placement_period, cache_bytes=cache_bytes))
+    if recorder is not None:
+        recorder.attach(engine)
     sched = ContinuousBatchingScheduler(
         engine, SchedulerConfig(max_batch=max_batch,
                                 max_queue=n_requests + 1))
@@ -216,7 +225,8 @@ def _check_against_baseline(payload: dict, *, quick: bool,
     # A persisted baseline from an incompatible benchmark version would
     # otherwise surface as a bare KeyError (or silently gate nothing);
     # fail with an actionable message instead.
-    required = ("throughput_by_batch", "warm_vs_cold", "ep_scaling")
+    required = ("throughput_by_batch", "warm_vs_cold", "ep_scaling",
+                "placement")
     missing = [k for k in required if k not in prev]
     if missing:
         raise RuntimeError(
@@ -238,16 +248,17 @@ def _check_against_baseline(payload: dict, *, quick: bool,
         cur = payload["warm_vs_cold"].get(k)
         if cur is None or not _close(v, cur):
             mismatches.append(("warm_vs_cold", k, v, cur))
-    # EP scaling rows are deterministic too: gate them like the
-    # serialized cells (scalar metrics only).
-    for ep, row in prev.get("ep_scaling", {}).items():
-        cur_row = payload.get("ep_scaling", {}).get(ep)
-        for k, v in row.items():
-            if not isinstance(v, (int, float)):
-                continue
-            cur = None if cur_row is None else cur_row.get(k)
-            if cur is None or not _close(v, cur):
-                mismatches.append((f"ep_scaling[{ep}]", k, v, cur))
+    # EP scaling and placement rows are deterministic too: gate them
+    # like the serialized cells (scalar metrics only).
+    for section in ("ep_scaling", "placement"):
+        for name, row in prev.get(section, {}).items():
+            cur_row = payload.get(section, {}).get(name)
+            for k, v in row.items():
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    continue
+                cur = None if cur_row is None else cur_row.get(k)
+                if cur is None or not _close(v, cur):
+                    mismatches.append((f"{section}[{name}]", k, v, cur))
     assert not mismatches, \
         f"serialized path diverged from persisted baseline: {mismatches}"
     print(f"baseline check: serialized cells reproduce {path} "
@@ -512,6 +523,111 @@ def main(quick: bool = False) -> None:
     print("claims verified: per-token p50 improves at every ep > 1, "
           "all-to-all bytes/energy charged and reported")
 
+    # The ISSUE's numeric bar: the round-robin ep=4 cell's p50 must stay
+    # at/below the 280 us baseline the placement refactor started from.
+    if 4 in ep_values:
+        assert ep_rows[4]["per_token_p50_s"] <= 280e-6, ep_rows[4]
+
+    placement_rows = {}
+    if not quick:
+        print("\n=== expert placement policies @ ep=4 "
+              "(capacity-pressured) ===")
+        # Ownership policy is the only variable.  The comparison runs a
+        # tighter cache (0.8 MB vs the sweep's 2.5 MB) over a longer
+        # stream: at 2.5 MB this tiny workload's misses are almost all
+        # cold-start, so any placement signal drowns in warmup noise —
+        # under sustained capacity pressure the per-shard miss spread is
+        # a steady-state property the policy can actually move.  Hotness
+        # bin-packing must narrow the spread round-robin leaves (hot
+        # shards thrash while cold shards idle), and replicating the
+        # hottest experts must cut all-to-all dispatch bytes (replica
+        # accesses resolve to the token's home shard).  Migration
+        # traffic is tagged separately inside ici_bytes so the a2a
+        # comparison is honest.
+        PLACE_N, PLACE_PERIOD, PLACE_CACHE = 24, 8, 0.8e6
+        for label, kw in (
+                ("round_robin", dict(placement="round_robin")),
+                ("hotness", dict(placement="hotness")),
+                ("hotness+replicate:2",
+                 dict(placement="hotness+replicate:2"))):
+            s, eng = run_cell(cfg, params, max_batch=mb_async,
+                              n_requests=PLACE_N, async_io=True,
+                              ep_shards=4, placement_period=PLACE_PERIOD,
+                              cache_bytes=PLACE_CACHE, **kw)
+            snap = eng.ledger.snapshot()
+            row = {
+                "throughput_tok_per_s": s["throughput_tok_per_s"],
+                "per_token_p50_s": s["per_token_p50_s"],
+                "energy_per_token_j": s["energy_per_token_j"],
+                "shard_miss_spread": s["shard_miss_spread"],
+                "shard_access_imbalance": s["shard_access_imbalance"],
+                "per_shard_miss": [round(r["miss_rate"], 4)
+                                   for r in s["per_shard"]],
+                "ici_bytes": snap["ici_bytes"],
+                "migration_bytes": snap["migration_bytes"],
+                "a2a_bytes": snap["ici_bytes"] - snap["migration_bytes"],
+                "n_migration_events": len(eng.migration_events),
+            }
+            placement_rows[label] = row
+            sink.add(f"placement[{label}]", mb_async,
+                     s["throughput_tok_per_s"], s["ttft_p50_s"],
+                     s["ttft_p95_s"], s["per_token_p50_s"],
+                     s["steady_state_miss_rate"],
+                     s["energy_per_token_j"], s["mean_batch_occupancy"])
+            print(f"{label:>20}: per-token p50="
+                  f"{row['per_token_p50_s']*1e6:7.1f} us  "
+                  f"miss_spread={row['shard_miss_spread']:.4f} "
+                  f"{row['per_shard_miss']}  "
+                  f"a2a={row['a2a_bytes']/1e6:.2f} MB  "
+                  f"migr={row['migration_bytes']/1e6:.2f} MB")
+        rr = placement_rows["round_robin"]
+        hot = placement_rows["hotness"]
+        repl = placement_rows["hotness+replicate:2"]
+        # Acceptance: hotness narrows the per-shard miss spread and does
+        # not regress p50 vs round-robin on the same workload; the
+        # replicated variant cuts all-to-all dispatch bytes (its replica
+        # fills may cost a little latency, bounded at 3%).
+        assert hot["shard_miss_spread"] < rr["shard_miss_spread"], \
+            (hot["shard_miss_spread"], rr["shard_miss_spread"])
+        assert repl["a2a_bytes"] < rr["a2a_bytes"], \
+            (repl["a2a_bytes"], rr["a2a_bytes"])
+        assert hot["per_token_p50_s"] <= rr["per_token_p50_s"], (hot, rr)
+        assert repl["per_token_p50_s"] <= 1.03 * rr["per_token_p50_s"], \
+            (repl, rr)
+
+        # Live-vs-replay placement fidelity: a single-slot scheduler
+        # labels each request's stats epoch, so replaying its recorded
+        # trace must reproduce every shard's per-epoch miss counts AND
+        # the migration event sequence exactly (placement decisions
+        # consume only charge-path hotness, which the replay recomputes
+        # bit-for-bit — same argument as the controller fidelity gate).
+        from repro.sim import TraceRecorder
+        from repro.sim.replay import ReplayEngine
+
+        rec = TraceRecorder()
+        _, live_eng = run_cell(cfg, params, max_batch=1, n_requests=8,
+                               ep_shards=4, placement="hotness",
+                               placement_period=PLACE_PERIOD,
+                               cache_bytes=PLACE_CACHE, recorder=rec)
+        tr = rec.trace()
+        reng = ReplayEngine(tr.meta)
+        reng.consume_all(tr.events)
+        rep = reng.finish()
+        assert (rep.migration_events or []) == live_eng.migration_events, \
+            (rep.migration_events, live_eng.migration_events)
+        assert rep.per_shard_epoch_counts \
+            == live_eng.cache.per_shard_epoch_counts()
+        assert reng.cache.per_shard_counts() \
+            == live_eng.cache.per_shard_counts()
+        n_mig = len(live_eng.migration_events)
+        print("claims verified: hotness narrows per-shard miss spread "
+              f"({rr['shard_miss_spread']:.4f} -> "
+              f"{hot['shard_miss_spread']:.4f}) at no p50 cost, "
+              f"replication cuts a2a bytes ({rr['a2a_bytes']/1e6:.2f} "
+              f"-> {repl['a2a_bytes']/1e6:.2f} MB); hotness "
+              "live-vs-replay fidelity exact (per-shard epoch counts + "
+              f"{n_mig} migration events)")
+
     print("\n=== dense-dequant vs quantized-execution expert FFN ===")
     # Same workload/scheduler; the only variable is whether the jitted
     # steps materialize dense expert weights or run the batched-expert
@@ -559,6 +675,7 @@ def main(quick: bool = False) -> None:
         "sync_vs_async_timeline": timeline_rows,
         "request_prefetch": pf_rows,
         "ep_scaling": {str(ep): row for ep, row in ep_rows.items()},
+        "placement": placement_rows,
     }
     _check_against_baseline(payload, quick=quick)
     if not quick:

@@ -266,6 +266,14 @@ class SliceCache:
         self._ready_at = {k: t for k, t in self._ready_at.items()
                           if t > now}
 
+    def nbytes_of(self, key: SliceKey, default: float = 0.0) -> float:
+        """Resident size of ``key`` (``default`` when not resident).
+        Used by placement migration to move slices at their true size."""
+        for seg in (self._msb, self._lsb):
+            if key in seg:
+                return seg[key]
+        return default
+
     def evict(self, key: SliceKey) -> bool:
         for seg in (self._msb, self._lsb):
             if key in seg:

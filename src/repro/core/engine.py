@@ -47,9 +47,9 @@ from repro.configs.base import ModelConfig
 from repro.core.amat import MatConfig
 from repro.core.cache import SliceCache
 from repro.core.routing import MissRateController
-from repro.core.shard import (ShardedSliceCache, all_to_all_bytes,
-                              expert_placement, home_shard_of_token,
-                              remote_selection_mask, shard_of_expert)
+from repro.core.shard import (ShardedSliceCache, expert_placement,
+                              home_shard_of_token, remote_selection_mask,
+                              shard_of_expert)
 from repro.core.slices import ExpertSliceStore, SliceKey, quantize_moe_params
 from repro.core.warmup import (HotnessTracker, INIT_STATES, pcw_reshape)
 from repro.hw.energy import CostLedger, ShardedCostLedger
@@ -115,8 +115,29 @@ class EngineConfig:
     # per-tenant closed-loop bit-plan / cache-partition / admission
     # adaptation.  None = static policy (everything above as configured).
     controller: Optional["ControllerConfig"] = None
+    # Expert placement policy across EP shards (repro.core.placement):
+    #   'round_robin'          — the pre-refactor expert % ep modulo,
+    #                            bit-identical, never migrates;
+    #   'hotness'              — greedy balanced bin-packing of hotness-
+    #                            ranked experts, re-placed every
+    #                            placement_period decode steps with
+    #                            migration bytes charged on the ici
+    #                            channel;
+    #   'hotness+replicate:K'  — hotness plus the K globally hottest
+    #                            experts replicated on every shard
+    #                            (dispatch resolves to the token's home
+    #                            shard; replicas charge each shard's own
+    #                            DRAM budget).
+    # Ignored (after validation) when ep_shards == 1.
+    placement: str = "round_robin"
+    # Decode steps between hotness re-placements (migration cadence).
+    placement_period: int = 64
+    # Replication count for the hotness policy (scalar alternative to
+    # the '+replicate:K' spec suffix; the explicit knob wins).  Requires
+    # placement='hotness'.
+    replicate_k: int = 0
 
-    def cache(self):
+    def cache(self, *, placement=None):
         slice_aware = self.policy.slice_mode == "dbsc" and not self.fused_slices
         if self.controller is not None and self.controller.partition:
             if self.ep_shards > 1:
@@ -131,7 +152,8 @@ class EngineConfig:
                 slice_aware=slice_aware)
         if self.ep_shards > 1:
             return ShardedSliceCache(self.cache_bytes, self.ep_shards,
-                                     slice_aware=slice_aware)
+                                     slice_aware=slice_aware,
+                                     placement=placement)
         return SliceCache(self.cache_bytes, slice_aware=slice_aware)
 
     def ledger(self):
@@ -161,6 +183,21 @@ class EngineConfig:
         raise ValueError(
             f"unknown prefetch_kind {self.prefetch_kind!r}; "
             "expected 'request' or 'transition'")
+
+    def build_placement_policy(self, n_layers: int, n_experts: int):
+        """The configured placement policy, or None on a single device.
+
+        Shared by the live engine and the trace-replay engine (like
+        :meth:`build_prefetcher`) so a sweep toggling ``placement``
+        exercises the identical construction.  The spec is validated
+        even at ``ep_shards == 1`` — a bad placement string fails fast
+        rather than only once sharding is turned on.
+        """
+        from repro.core.placement import build_placement_policy
+        pol = build_placement_policy(
+            self.placement, n_layers, n_experts, max(self.ep_shards, 1),
+            replicate_k=self.replicate_k if self.replicate_k else None)
+        return pol if self.ep_shards > 1 else None
 
 
 @dataclasses.dataclass
@@ -254,7 +291,22 @@ class PersistentEngine:
         self.n_moe_layers = len(self.layer_map)
         self.n_experts = cfg.moe.n_experts
 
-        self.cache = ecfg.cache()
+        # Expert placement across EP shards: the policy decides the
+        # [L, E] -> shard ownership table; the cache routes keys by it.
+        # None on a single device (and the legacy modulo inside
+        # ShardedSliceCache remains for direct constructions).
+        self.placement_policy = ecfg.build_placement_policy(
+            self.n_moe_layers, self.n_experts)
+        self.placement = (self.placement_policy.initial()
+                          if self.placement_policy is not None else None)
+        # Placement re-packing bookkeeping: decode-step counter driving
+        # the migration cadence, and the executed migration events
+        # [{step, moved, bytes}] — the replay fidelity gate compares
+        # this sequence exactly.
+        self._decode_steps = 0
+        self.migration_events: List[dict] = []
+
+        self.cache = ecfg.cache(placement=self.placement)
         self.ledger = ecfg.ledger()
         self.tracker = HotnessTracker(self.n_moe_layers, self.n_experts)
         self.requests_served = 0
@@ -376,12 +428,18 @@ class PersistentEngine:
             return None
         rows = []
         counts = self.cache.per_shard_counts()
-        placement = expert_placement(self.n_experts, self.ledger.n_shards)
+        if self.placement is not None:
+            # Ownership can differ per layer under the hotness policy;
+            # the row reports the first MoE layer's assignment as the
+            # representative (identical across layers for round_robin).
+            owner0 = self.placement.owner_row(0)
+        else:
+            owner0 = expert_placement(self.n_experts, self.ledger.n_shards)
         for sid, led in enumerate(self.ledger.shards):
             acc, miss = counts[sid]
             rows.append({
                 "shard": sid,
-                "experts": np.nonzero(placement == sid)[0].tolist(),
+                "experts": np.nonzero(owner0 == sid)[0].tolist(),
                 "accesses": acc,
                 "misses": miss,
                 "miss_rate": miss / max(acc, 1),
@@ -391,6 +449,22 @@ class PersistentEngine:
                 "makespan_s": led.now,
             })
         return rows
+
+    def placement_summary(self) -> Optional[dict]:
+        """Placement policy + migration accounting (None unsharded)."""
+        if self.placement is None:
+            return None
+        return {
+            "policy": self.placement_policy.name,
+            "period": int(self.ecfg.placement_period),
+            "replicated_pairs": int(np.count_nonzero(
+                self.placement.replicated)),
+            "n_migration_events": len(self.migration_events),
+            "migrated_slices": sum(e["moved"]
+                                   for e in self.migration_events),
+            "migration_bytes": float(
+                getattr(self.ledger, "migration_bytes", 0.0)),
+        }
 
     # --------------------------------------------------- per-request state
     def new_controller(self) -> Optional[MissRateController]:
@@ -540,28 +614,44 @@ class PersistentEngine:
                 # All-to-all: prompt tokens live round-robin across
                 # shards; selections landing on remote experts pay
                 # dispatch + combine bytes (zero on a single device).
-                nb_a2a, _ = self._a2a_layer_demand(a2d, ids[period, pidx])
+                nb_a2a, _ = self._a2a_layer_demand(lidx, a2d,
+                                                   ids[period, pidx])
                 if nb_a2a > 0:
                     self.ledger.ici_transfer(nb_a2a)
+                rep = self._replica_targets(lidx, a2d, ids[period, pidx])
                 used = np.unique(sel_ids)
                 for e in used:
-                    led = self._ledger_for(int(e))
-                    for kind in ("msb", "lsb"):   # prefill is high-bit
-                        key = SliceKey(lidx, int(e), kind)
-                        nb = self.store.slice_bytes(key)
-                        hit = self.cache.access(key, nb)
-                        if hit or key in self.cache:
-                            if not hit:           # fill landed
-                                led.miss_fill(nb)
-                            led.dram_read(nb)
-                        else:                     # dropped: direct stream
-                            led.flash_stream(nb)
+                    e = int(e)
+                    # A replicated expert streams into every shard whose
+                    # tokens selected it (each replica charged against
+                    # that shard's cache + channels); everything else
+                    # fills the owning shard as before.
+                    if e in rep:
+                        segs = [(self.cache.shards[sid],
+                                 self.ledger.shards[sid])
+                                for sid, _ in rep[e]]
+                    else:
+                        segs = [(self.cache, self._ledger_for(lidx, e))]
+                    for cache_seg, led in segs:
+                        for kind in ("msb", "lsb"):   # prefill is high-bit
+                            key = SliceKey(lidx, e, kind)
+                            nb = self.store.slice_bytes(key)
+                            hit = cache_seg.access(key, nb)
+                            if hit or key in cache_seg:
+                                if not hit:           # fill landed
+                                    led.miss_fill(nb)
+                                led.dram_read(nb)
+                            else:                     # dropped: direct stream
+                                led.flash_stream(nb)
                 # prefill compute: all actively routed tokens, high
-                # precision, split over the shards owning the experts
+                # precision, split over the shards *executing* the
+                # selections (the owner; the token's home shard for a
+                # replicated expert)
+                exec_sh = None if self._n_shards() == 1 else \
+                    self._selection_exec_shards(lidx, a2d, ids[period, pidx])
                 for sid, led in enumerate(self._shard_ledgers()):
-                    t_s = sel_ids.size if self._n_shards() == 1 else \
-                        int(np.count_nonzero(shard_of_expert(
-                            sel_ids, self._n_shards()) == sid))
+                    t_s = sel_ids.size if exec_sh is None else \
+                        int(np.count_nonzero(exec_sh == sid))
                     led.matmul(t_s, self.cfg.d_model,
                                self.expert_macs_per_token // self.cfg.d_model,
                                self.ecfg.mat.high_bits)
@@ -678,6 +768,12 @@ class PersistentEngine:
         """
         if self.recorder is not None:
             self.recorder.on_decode(tr)
+        # Placement re-packing runs after the recorder (so the raw trace
+        # is captured) and before any charging: it consumes only
+        # charge-path state (the hotness tracker + the decode-step
+        # counter), so a replay of the recorded trace recomputes the
+        # identical migration sequence.
+        self._maybe_migrate()
         ctl = self.slo_controller
         T = tr.slot_mask.shape[0]
         if ctl is not None:
@@ -712,11 +808,18 @@ class PersistentEngine:
         led = self.ledger
         return led.n_shards if isinstance(led, ShardedCostLedger) else 1
 
-    def _ledger_for(self, expert: int) -> CostLedger:
-        """The cost ledger owning ``expert``'s slices (round-robin)."""
+    def _owner_shard(self, lidx: int, expert: int) -> int:
+        """Owning shard of ``expert`` at MoE layer ``lidx`` under the
+        active placement map (legacy round-robin modulo without one)."""
+        if self.placement is not None:
+            return self.placement.owner_of(lidx, expert)
+        return shard_of_expert(expert, self._n_shards())
+
+    def _ledger_for(self, lidx: int, expert: int) -> CostLedger:
+        """The cost ledger owning ``expert``'s slices at ``lidx``."""
         led = self.ledger
         if isinstance(led, ShardedCostLedger):
-            return led.shards[shard_of_expert(expert, led.n_shards)]
+            return led.shards[self._owner_shard(lidx, int(expert))]
         return led
 
     def _compute_frontier(self) -> float:
@@ -758,31 +861,115 @@ class PersistentEngine:
                 owner.setdefault(int(e), t)
         return owner
 
-    def _a2a_layer_demand(self, act2d: np.ndarray, ids2d: np.ndarray):
+    def _placement_rows(self, lidx: int):
+        """(owner_row, replicated_row) for ``lidx`` — (None, None) when
+        no placement map is active (legacy modulo ownership)."""
+        if self.placement is None:
+            return None, None
+        return (self.placement.owner_row(lidx),
+                self.placement.replicated_row(lidx))
+
+    def _a2a_layer_demand(self, lidx: int, act2d: np.ndarray,
+                          ids2d: np.ndarray):
         """All-to-all demand for one layer's ``[T, k]`` routing:
         ``(bytes, remote_experts)``.  Each active selection whose expert
         lives on a different shard than its token moves its activation
         out and the partial result back; ``remote_experts`` is the set
         of experts with at least one such selection (their matmuls wait
-        on the dispatch).  ``(0.0, frozenset())`` on a single device —
-        the common path skips the index arithmetic entirely."""
+        on the dispatch).  Selections of *replicated* experts are never
+        remote — the token's home shard serves them from its own
+        replica, which is exactly how replication buys its all-to-all
+        reduction.  ``(0.0, frozenset())`` on a single device — the
+        common path skips the index arithmetic entirely."""
         n = self._n_shards()
         if n == 1:
             return 0.0, frozenset()
         rows, _ = np.nonzero(act2d)
         sel = ids2d[act2d]
-        remote = remote_selection_mask(rows, sel, n)
+        orow, rrow = self._placement_rows(lidx)
+        remote = remote_selection_mask(rows, sel, n,
+                                       owner_row=orow, replicated_row=rrow)
         if not remote.any():
             return 0.0, frozenset()
-        return (all_to_all_bytes(rows, sel, self.cfg.d_model, n),
+        return (2.0 * self.cfg.d_model * float(np.count_nonzero(remote)),
                 frozenset(int(e) for e in np.unique(sel[remote])))
 
-    def _layer_a2a_demand(self, tr: "_StepTrace", period: int, pidx: int):
+    def _layer_a2a_demand(self, tr: "_StepTrace", period: int, pidx: int,
+                          lidx: int):
         if self._n_shards() == 1:
             return 0.0, frozenset()
         return self._a2a_layer_demand(
+            lidx,
             tr.active[period, pidx] & tr.slot_mask[:, None],
             tr.ids[period, pidx])
+
+    def _replica_targets(self, lidx: int, act2d: np.ndarray,
+                         ids2d: np.ndarray) -> dict:
+        """Replica dispatch plan for one layer: ``{expert: [(shard,
+        n_tokens), ...]}`` over the *replicated* experts with at least
+        one active selection, splitting each expert's tokens by their
+        home shard.  Empty unless a placement map with replication is
+        active — the round_robin/hotness paths never pay this scan."""
+        if self.placement is None:
+            return {}
+        rrow = self.placement.replicated_row(lidx)
+        if not rrow.any():
+            return {}
+        n = self._n_shards()
+        rows, _ = np.nonzero(act2d)
+        sel = ids2d[act2d]
+        mask = rrow[sel]
+        out: dict = {}
+        for tok, e in zip(rows[mask], sel[mask]):
+            d = out.setdefault(int(e), {})
+            sid = home_shard_of_token(int(tok), n)
+            d[sid] = d.get(sid, 0) + 1
+        return {e: sorted(d.items()) for e, d in out.items()}
+
+    def _selection_exec_shards(self, lidx: int, act2d: np.ndarray,
+                               ids2d: np.ndarray) -> np.ndarray:
+        """Shard executing each active selection's expert matmul: the
+        owner, except replicated experts run on the token's home shard."""
+        n = self._n_shards()
+        rows, _ = np.nonzero(act2d)
+        sel = ids2d[act2d]
+        if self.placement is None:
+            return shard_of_expert(sel, n)
+        owner = self.placement.owner_row(lidx)[sel]
+        rep = self.placement.replicated_row(lidx)[sel]
+        if rep.any():
+            owner = np.where(rep, home_shard_of_token(rows, n), owner)
+        return owner
+
+    def _maybe_migrate(self) -> None:
+        """Periodic hotness re-placement at decode-step granularity.
+
+        Deterministic in charge-path state only (the hotness tracker and
+        the step counter), so record→replay reproduces the identical
+        placement maps, migration moves and interconnect charges.  Each
+        moved slice's bytes are charged on the ici channel via
+        :meth:`~repro.hw.energy.CostLedger.migrate` — re-packing is not
+        free, and the benchmark judges the policy net of this cost.
+        """
+        pol = self.placement_policy
+        if pol is None or not pol.migrates or self._n_shards() <= 1:
+            return
+        self._decode_steps += 1
+        period = max(int(self.ecfg.placement_period), 1)
+        if self._decode_steps % period:
+            return
+        new_map = pol.replace(self.tracker.hotness())
+        if new_map == self.placement:
+            return
+        moves = self.cache.apply_placement(new_map)
+        self.placement = new_map
+        for _key, nb, _frm, _to in moves:
+            self.ledger.migrate(nb)
+        self.migration_events.append({
+            "step": self._decode_steps,
+            "moved": len(moves),
+            "bytes": float(sum(m[1] for m in moves)),
+        })
 
     # -------------------------------------------------- shared replay bits
     def _slice_nbytes(self, key: SliceKey) -> float:
@@ -894,7 +1081,8 @@ class PersistentEngine:
                 self._pf_pending.pop(lidx, {}).items():
             if key not in self.cache:        # evicted before use
                 pf.mark_wasted(distance=d)
-                self._ledger_for(key.expert).mark_prefetch_wasted(p_nb)
+                self._ledger_for(key.layer,
+                                 key.expert).mark_prefetch_wasted(p_nb)
             elif (key.expert in demanded if key.kind == "msb"
                   else key.expert in lsb_wanted):
                 if ready_t <= t_route:
@@ -919,7 +1107,8 @@ class PersistentEngine:
         for m in self._pf_pending.values():
             for key, (ready_t, p_nb, d) in m.items():
                 pf.mark_wasted(distance=d)
-                self._ledger_for(key.expert).mark_prefetch_wasted(p_nb)
+                self._ledger_for(key.layer,
+                                 key.expert).mark_prefetch_wasted(p_nb)
         self._pf_pending.clear()
 
     def _prefetch_issue(self, lidx: int, flat_ids: np.ndarray,
@@ -948,7 +1137,7 @@ class PersistentEngine:
             nb = self._slice_nbytes(key)
             if key in self.cache or nb > self._segment_capacity(key):
                 continue
-            led = self._ledger_for(key.expert)
+            led = self._ledger_for(key.layer, key.expert)
             if timeline:
                 # Background-priority lane: speculative fills never
                 # delay the demand queue (demand preempts), unlike the
@@ -986,7 +1175,8 @@ class PersistentEngine:
             nb = self._slice_nbytes(key)
             if key in self.cache or nb > self._segment_capacity(key):
                 continue
-            _, end = self._ledger_for(key.expert).prefetch_fill_at(None, nb)
+            _, end = self._ledger_for(key.layer,
+                                      key.expert).prefetch_fill_at(None, nb)
             self.cache.insert(key, nb)
             if not self.ecfg.async_io:
                 end = 0.0    # serialized judge bar is t_route == 0.0
@@ -995,14 +1185,24 @@ class PersistentEngine:
             pf.mark_issued(distance=d)
 
     def _attribute_slot_misses(self, tr: "_StepTrace", period: int,
-                               pidx: int, missed_expert: np.ndarray) -> None:
+                               pidx: int, missed_expert: np.ndarray,
+                               missed_rep: Optional[dict] = None) -> None:
         """Per-slot miss attribution: a slot is charged for every
         selection that landed on an expert whose slice(s) missed this
-        layer-step."""
+        layer-step.  ``missed_rep`` (``{expert: {shards that missed}}``)
+        scopes a *replicated* expert's miss to the slots homed on the
+        shards whose replica actually missed — the other shards' tokens
+        were served by their own resident copy."""
+        n = self._n_shards()
         for b in np.nonzero(tr.slot_mask)[0]:
             sel = tr.ids[period, pidx][b][tr.active[period, pidx][b]]
             tr.slot_accesses[b] += sel.size
-            tr.slot_misses[b] += int(missed_expert[sel].sum())
+            miss = int(missed_expert[sel].sum())
+            if missed_rep:
+                home = home_shard_of_token(int(b), n)
+                miss += sum(1 for e in sel
+                            if home in missed_rep.get(int(e), ()))
+            tr.slot_misses[b] += miss
 
     def _per_tenant_counts(self, tr: "_StepTrace") -> Optional[dict]:
         """Aggregate the per-slot replay counters by tenant (slots with
@@ -1036,6 +1236,120 @@ class PersistentEngine:
             per_tenant=self._per_tenant_counts(tr),
         )
 
+    # ----------------------------------------- per-expert charge kernels
+    # Both kernels take the cache segment + ledger they charge against
+    # explicitly: the owner pair for a normally-placed expert (via
+    # ``self.cache`` routing + ``_ledger_for``), or one (shard cache,
+    # shard ledger) pair per home shard for a replicated expert.  The
+    # charging sequence is byte-for-byte the pre-refactor inline code, so
+    # the non-replicated path stays bit-identical.
+
+    def _charge_expert_sync(self, tr: "_StepTrace", lidx: int, e: int,
+                            cache_seg, led: CostLedger, ntok: int,
+                            lsb_wanted: set) -> bool:
+        """Serialized-issue slice demand + matmul for one expert on one
+        cache segment.  Returns whether any of its slices missed."""
+        missed = False
+        key = SliceKey(lidx, e, "msb")
+        nb = self._slice_nbytes(key)
+        hit = cache_seg.access(key, nb)
+        tr.accesses += 1
+        if not hit:
+            tr.misses += 1
+            missed = True
+            if key in cache_seg:       # fill landed
+                led.miss_fill(nb)
+            else:                      # dropped: direct stream
+                led.flash_stream(nb)
+        if hit or key in cache_seg:
+            led.dram_read(nb)
+        wants_lsb = e in lsb_wanted and not self.ecfg.fused_slices
+        lsb_available = False
+        if wants_lsb:
+            lkey = SliceKey(lidx, e, "lsb")
+            lnb = self.store.slice_bytes(lkey)
+            lhit = cache_seg.access(
+                lkey, lnb,
+                fill_on_miss=self.ecfg.policy.fetch_lsb_on_miss)
+            tr.accesses += 1
+            if not lhit:
+                tr.misses += 1
+                missed = True
+                if self.ecfg.policy.fetch_lsb_on_miss:
+                    if lkey in cache_seg:
+                        led.miss_fill(lnb)
+                    else:
+                        led.flash_stream(lnb)
+            if lhit or self.ecfg.policy.fetch_lsb_on_miss:
+                if lhit or lkey in cache_seg:
+                    led.dram_read(lnb)
+                lsb_available = True
+        led.matmul(
+            ntok, self.cfg.d_model,
+            self.expert_macs_per_token // self.cfg.d_model,
+            self._expert_bits(lsb_available))
+        return missed
+
+    def _charge_expert_async(self, tr: "_StepTrace", lidx: int, e: int,
+                             cache_seg, led: CostLedger, ntok: int,
+                             lsb_wanted: set, t_route: float,
+                             t_disp: Optional[float] = None) -> bool:
+        """Event-timeline fill → read → matmul chain for one expert on
+        one cache segment.  ``t_disp``: all-to-all completion the matmul
+        must additionally wait for (remote experts only; replicated
+        experts run home-local and never pass one).  Returns whether any
+        of its slices missed."""
+        missed = False
+        key = SliceKey(lidx, e, "msb")
+        nb = self._slice_nbytes(key)
+        hit = cache_seg.access(key, nb)
+        tr.accesses += 1
+        if hit:
+            # wait out an in-flight (prefetched) transfer
+            t_data = max(t_route, cache_seg.ready_time(key))
+            _, t_data = led.dram_read_at(t_data, nb)
+        else:
+            tr.misses += 1
+            missed = True
+            if key in cache_seg:        # fill landed
+                _, fill_end = led.fill_at(t_route, nb)
+                cache_seg.mark_inflight(key, fill_end)
+                _, t_data = led.dram_read_at(fill_end, nb)
+            else:                       # dropped: direct stream
+                _, t_data = led.flash_stream_at(t_route, nb)
+        wants_lsb = e in lsb_wanted and not self.ecfg.fused_slices
+        lsb_available = False
+        if wants_lsb:
+            lkey = SliceKey(lidx, e, "lsb")
+            lnb = self.store.slice_bytes(lkey)
+            lhit = cache_seg.access(
+                lkey, lnb,
+                fill_on_miss=self.ecfg.policy.fetch_lsb_on_miss)
+            tr.accesses += 1
+            if lhit:
+                t_lsb = max(t_route, cache_seg.ready_time(lkey))
+                _, t_lsb = led.dram_read_at(t_lsb, lnb)
+                t_data = max(t_data, t_lsb)
+                lsb_available = True
+            else:
+                tr.misses += 1
+                missed = True
+                if self.ecfg.policy.fetch_lsb_on_miss:
+                    if lkey in cache_seg:
+                        _, lf_end = led.fill_at(t_route, lnb)
+                        cache_seg.mark_inflight(lkey, lf_end)
+                        _, t_lsb = led.dram_read_at(lf_end, lnb)
+                    else:
+                        _, t_lsb = led.flash_stream_at(t_route, lnb)
+                    t_data = max(t_data, t_lsb)
+                    lsb_available = True
+        led.matmul_at(
+            t_data if t_disp is None else max(t_data, t_disp),
+            ntok, self.cfg.d_model,
+            self.expert_macs_per_token // self.cfg.d_model,
+            self._expert_bits(lsb_available))
+        return missed
+
     # -------------------------------------------- serialized (sync) replay
     def _charge_sync(self, tr: "_StepTrace") -> StepCharge:
         base = self.ledger.snapshot()
@@ -1065,7 +1379,7 @@ class PersistentEngine:
                         nb = self._slice_nbytes(key)
                         if key not in self.cache \
                                 and nb <= self._segment_capacity(key):
-                            self._ledger_for(int(e)).miss_fill(
+                            self._ledger_for(lidx, int(e)).miss_fill(
                                 nb, prefetch=True)
                             self.cache.insert(key, nb)
                             issued.add(int(e))
@@ -1074,7 +1388,7 @@ class PersistentEngine:
                     self._layer_demand(tr, period, pidx)
                 self.tracker.observe(lidx, flat_ids, flat_gates)
                 # All-to-all token dispatch to remote experts (EP only).
-                nb_a2a, _ = self._layer_a2a_demand(tr, period, pidx)
+                nb_a2a, _ = self._layer_a2a_demand(tr, period, pidx, lidx)
                 if nb_a2a > 0:
                     self.ledger.ici_transfer(nb_a2a)
                 if pf_req:
@@ -1089,56 +1403,34 @@ class PersistentEngine:
                         pf.mark_useful(len(demanded & issued))
                         for e in issued - demanded:
                             pf.mark_wasted()
-                            self._ledger_for(e).mark_prefetch_wasted(
+                            self._ledger_for(lidx, e).mark_prefetch_wasted(
                                 self._slice_nbytes(SliceKey(lidx, e, "msb")))
                     prev_used = flat_ids
 
                 owner = self._expert_owner(tr, period, pidx)
+                rep = self._replica_targets(
+                    lidx, tr.active[period, pidx] & tr.slot_mask[:, None],
+                    tr.ids[period, pidx])
                 missed_expert = np.zeros(self.n_experts, bool)
+                missed_rep: dict = {}
                 for e in msb_demand:
                     e = int(e)
                     if owner is not None:
                         self.cache.set_active_tenant(owner.get(e))
-                    led = self._ledger_for(e)
-                    key = SliceKey(lidx, e, "msb")
-                    nb = self._slice_nbytes(key)
-                    hit = self.cache.access(key, nb)
-                    tr.accesses += 1
-                    if not hit:
-                        tr.misses += 1
+                    if e in rep:
+                        # Replicated expert: each shard with tokens for
+                        # it runs against its *own* replica + channels.
+                        for sid, ntok in rep[e]:
+                            if self._charge_expert_sync(
+                                    tr, lidx, e, self.cache.shards[sid],
+                                    self.ledger.shards[sid], ntok,
+                                    lsb_wanted):
+                                missed_rep.setdefault(e, set()).add(sid)
+                    elif self._charge_expert_sync(
+                            tr, lidx, e, self.cache,
+                            self._ledger_for(lidx, e),
+                            int(tok_per_e[e]), lsb_wanted):
                         missed_expert[e] = True
-                        if key in self.cache:      # fill landed
-                            led.miss_fill(nb)
-                        else:                      # dropped: direct stream
-                            led.flash_stream(nb)
-                    if hit or key in self.cache:
-                        led.dram_read(nb)
-                    wants_lsb = e in lsb_wanted \
-                        and not self.ecfg.fused_slices
-                    lsb_available = False
-                    if wants_lsb:
-                        lkey = SliceKey(lidx, e, "lsb")
-                        lnb = self.store.slice_bytes(lkey)
-                        lhit = self.cache.access(
-                            lkey, lnb,
-                            fill_on_miss=self.ecfg.policy.fetch_lsb_on_miss)
-                        tr.accesses += 1
-                        if not lhit:
-                            tr.misses += 1
-                            missed_expert[e] = True
-                            if self.ecfg.policy.fetch_lsb_on_miss:
-                                if lkey in self.cache:
-                                    led.miss_fill(lnb)
-                                else:
-                                    led.flash_stream(lnb)
-                        if lhit or self.ecfg.policy.fetch_lsb_on_miss:
-                            if lhit or lkey in self.cache:
-                                led.dram_read(lnb)
-                            lsb_available = True
-                    led.matmul(
-                        int(tok_per_e[e]), self.cfg.d_model,
-                        self.expert_macs_per_token // self.cfg.d_model,
-                        self._expert_bits(lsb_available))
                 # --- learn + issue for future layers (request kind):
                 # plan() sees post-demand residency, so every candidate
                 # is a fill that could save a future miss.
@@ -1147,7 +1439,8 @@ class PersistentEngine:
                                crit_ids=lsb_wanted)
                     self._prefetch_issue(lidx, flat_ids, 0.0, tr,
                                          timeline=False)
-                self._attribute_slot_misses(tr, period, pidx, missed_expert)
+                self._attribute_slot_misses(tr, period, pidx, missed_expert,
+                                            missed_rep or None)
         # Non-expert resident weights: one pass per decode step per shard
         # (replicated dense weights), the batch's active tokens split
         # data-parallel across shards.
@@ -1232,7 +1525,7 @@ class PersistentEngine:
                 # receive remote tokens additionally wait for it
                 # (t_disp) — purely local expert chains do not.
                 nb_a2a, remote_experts = self._layer_a2a_demand(
-                    tr, period, pidx)
+                    tr, period, pidx, lidx)
                 t_disp = t_route
                 if nb_a2a > 0:
                     _, t_disp = self.ledger.ici_transfer_at(t_route,
@@ -1254,6 +1547,7 @@ class PersistentEngine:
                         if key not in self.cache:  # evicted before use
                             self.prefetcher.mark_wasted()
                             self._ledger_for(
+                                key.layer,
                                 key.expert).mark_prefetch_wasted(p_nb)
                         elif key.expert in demanded:
                             if ready_t <= t_route:
@@ -1263,66 +1557,35 @@ class PersistentEngine:
                         else:
                             self.prefetcher.mark_wasted()
                             self._ledger_for(
+                                key.layer,
                                 key.expert).mark_prefetch_wasted(p_nb)
 
                 owner = self._expert_owner(tr, period, pidx)
+                rep = self._replica_targets(
+                    lidx, tr.active[period, pidx] & tr.slot_mask[:, None],
+                    tr.ids[period, pidx])
                 missed_expert = np.zeros(self.n_experts, bool)
+                missed_rep: dict = {}
                 for e in msb_demand:
                     e = int(e)
                     if owner is not None:
                         self.cache.set_active_tenant(owner.get(e))
-                    led = self._ledger_for(e)
-                    key = SliceKey(lidx, e, "msb")
-                    nb = self._slice_nbytes(key)
-                    hit = self.cache.access(key, nb)
-                    tr.accesses += 1
-                    if hit:
-                        # wait out an in-flight (prefetched) transfer
-                        t_data = max(t_route, self.cache.ready_time(key))
-                        _, t_data = led.dram_read_at(t_data, nb)
-                    else:
-                        tr.misses += 1
+                    if e in rep:
+                        # Replicated expert: each shard with tokens for
+                        # it chains against its *own* replica + channels
+                        # and never waits on the dispatch.
+                        for sid, ntok in rep[e]:
+                            if self._charge_expert_async(
+                                    tr, lidx, e, self.cache.shards[sid],
+                                    self.ledger.shards[sid], ntok,
+                                    lsb_wanted, t_route):
+                                missed_rep.setdefault(e, set()).add(sid)
+                    elif self._charge_expert_async(
+                            tr, lidx, e, self.cache,
+                            self._ledger_for(lidx, e), int(tok_per_e[e]),
+                            lsb_wanted, t_route,
+                            t_disp if e in remote_experts else None):
                         missed_expert[e] = True
-                        if key in self.cache:       # fill landed
-                            _, fill_end = led.fill_at(t_route, nb)
-                            self.cache.mark_inflight(key, fill_end)
-                            _, t_data = led.dram_read_at(fill_end, nb)
-                        else:                       # dropped: direct stream
-                            _, t_data = led.flash_stream_at(t_route, nb)
-                    wants_lsb = e in lsb_wanted \
-                        and not self.ecfg.fused_slices
-                    lsb_available = False
-                    if wants_lsb:
-                        lkey = SliceKey(lidx, e, "lsb")
-                        lnb = self.store.slice_bytes(lkey)
-                        lhit = self.cache.access(
-                            lkey, lnb,
-                            fill_on_miss=self.ecfg.policy.fetch_lsb_on_miss)
-                        tr.accesses += 1
-                        if lhit:
-                            t_lsb = max(t_route, self.cache.ready_time(lkey))
-                            _, t_lsb = led.dram_read_at(t_lsb, lnb)
-                            t_data = max(t_data, t_lsb)
-                            lsb_available = True
-                        else:
-                            tr.misses += 1
-                            missed_expert[e] = True
-                            if self.ecfg.policy.fetch_lsb_on_miss:
-                                if lkey in self.cache:
-                                    _, lf_end = led.fill_at(t_route, lnb)
-                                    self.cache.mark_inflight(lkey, lf_end)
-                                    _, t_lsb = led.dram_read_at(lf_end, lnb)
-                                else:
-                                    _, t_lsb = led.flash_stream_at(
-                                        t_route, lnb)
-                                t_data = max(t_data, t_lsb)
-                                lsb_available = True
-                    led.matmul_at(
-                        max(t_data, t_disp) if e in remote_experts
-                        else t_data,
-                        int(tok_per_e[e]), self.cfg.d_model,
-                        self.expert_macs_per_token // self.cfg.d_model,
-                        self._expert_bits(lsb_available))
                 # --- learn + issue prefetch for future layers, behind
                 # this layer's demand fills on each shard's Flash channel.
                 if pf_req:
@@ -1347,14 +1610,15 @@ class PersistentEngine:
                             if key in self.cache \
                                     or nb > self._segment_capacity(key):
                                 continue
-                            _, end = self._ledger_for(int(e)).fill_at(
+                            _, end = self._ledger_for(lidx + 1, int(e)).fill_at(
                                 t_route, nb, prefetch=True)
                             self.cache.insert(key, nb)
                             self.cache.mark_inflight(key, end)
                             pending.setdefault(lidx + 1, {})[key] = (end, nb)
                             n_issued += 1
                         pf.mark_issued(n_issued)
-                self._attribute_slot_misses(tr, period, pidx, missed_expert)
+                self._attribute_slot_misses(tr, period, pidx, missed_expert,
+                                            missed_rep or None)
         # Transition-kind prefetch targets lidx+1 (< n_moe_layers), which
         # always runs later in the same step and pops its pending entries
         # — so issued == useful + late + wasted holds per step.  Request-

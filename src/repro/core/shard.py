@@ -3,17 +3,25 @@
 Expert parallelism partitions the experts of every MoE layer across
 ``ep`` shards along the mesh ``model`` axis; each shard owns the DRAM
 slice cache (and, in :mod:`repro.hw.energy`, the Flash/DRAM channel
-clocks) for its experts.  Placement is a **pure function of the expert
-id** — round-robin ``expert % ep`` — so:
+clocks) for its experts.  Ownership is decided by a
+:class:`~repro.core.placement.PlacementMap` — an explicit ``[L, E] →
+shard`` table (plus a replication mask) chosen by a placement policy:
 
-* a routing trace recorded on a single device replays under *any*
-  ``ep_shards`` (the trace stores expert ids, never device ids), which
-  is what makes EP a sweepable axis in :mod:`repro.sim.autotune`;
-* every layer spreads its experts evenly across shards (contiguous
-  blocks would, too, but round-robin also balances the common
-  low-id-biased synthetic streams);
-* the live engine, the replay simulator and the telemetry all agree on
-  ownership without exchanging any state.
+* ``round_robin`` reproduces the original pure-modulo ``expert % ep``
+  bit-identically (and is what the legacy :func:`shard_of_expert`
+  helper still computes for placement-agnostic callers);
+* ``hotness`` re-packs hotness-ranked experts onto shards for balance,
+  with migrations applied through :meth:`ShardedSliceCache.
+  apply_placement`;
+* ``hotness+replicate:k`` additionally keeps the k hottest experts
+  resident on every shard so dispatch resolves locally.
+
+A routing trace recorded on a single device still replays under *any*
+``ep_shards`` and *any* placement (the trace stores expert ids, never
+device ids), which is what makes both EP and placement sweepable axes
+in :mod:`repro.sim.autotune`; the live engine, the replay simulator and
+the telemetry all agree on ownership because placement decisions are
+pure functions of charge-path hotness.
 
 :class:`ShardedSliceCache` wraps ``ep`` independent
 :class:`~repro.core.cache.SliceCache` instances (each holding
@@ -35,11 +43,12 @@ charged by the engine on the interconnect channel, computed here by
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.cache import CacheStats, SliceCache
+from repro.core.placement import PlacementMap
 from repro.core.slices import SliceKey
 
 __all__ = ["shard_of_expert", "expert_placement", "home_shard_of_token",
@@ -72,19 +81,36 @@ def home_shard_of_token(token_idx, n_shards: int):
 
 
 def remote_selection_mask(token_idx: np.ndarray, expert_ids: np.ndarray,
-                          n_shards: int) -> np.ndarray:
+                          n_shards: int, *,
+                          owner_row: Optional[np.ndarray] = None,
+                          replicated_row: Optional[np.ndarray] = None
+                          ) -> np.ndarray:
     """Bool mask over flat parallel (token, expert) selections: True
     where the token's home shard (``token_idx % n_shards``) differs
-    from the expert's owner, i.e. the selection pays all-to-all."""
+    from the expert's owner, i.e. the selection pays all-to-all.
+
+    ``owner_row`` (an ``[E]`` shard table, one placement-map layer row)
+    replaces the legacy modulo owner when given; selections of experts
+    marked in ``replicated_row`` are never remote — the token's home
+    shard holds its own replica, so dispatch resolves locally.
+    """
     if n_shards <= 1 or token_idx.size == 0:
         return np.zeros(token_idx.shape, bool)
-    return home_shard_of_token(token_idx, n_shards) \
-        != shard_of_expert(expert_ids, n_shards)
+    if owner_row is None:
+        owner = shard_of_expert(expert_ids, n_shards)
+    else:
+        owner = np.asarray(owner_row)[expert_ids]
+    remote = home_shard_of_token(token_idx, n_shards) != owner
+    if replicated_row is not None:
+        remote &= ~np.asarray(replicated_row, bool)[expert_ids]
+    return remote
 
 
 def all_to_all_bytes(token_idx: np.ndarray, expert_ids: np.ndarray,
                      d_model: int, n_shards: int,
-                     itemsize: float = 1.0) -> float:
+                     itemsize: float = 1.0, *,
+                     owner_row: Optional[np.ndarray] = None,
+                     replicated_row: Optional[np.ndarray] = None) -> float:
     """Dispatch + combine bytes for one layer's routed selections.
 
     ``token_idx``/``expert_ids``: flat parallel arrays, one entry per
@@ -92,9 +118,13 @@ def all_to_all_bytes(token_idx: np.ndarray, expert_ids: np.ndarray,
     :func:`remote_selection_mask`) moves its ``d_model`` activation to
     the expert's shard and the result back (2x).  Activations travel at
     ``itemsize`` bytes/element (int8 by default, matching the engine's
-    INT8 non-expert traffic convention).
+    INT8 non-expert traffic convention).  ``owner_row`` /
+    ``replicated_row`` carry the placement map's layer row through to
+    the remoteness test.
     """
-    remote = remote_selection_mask(token_idx, expert_ids, n_shards)
+    remote = remote_selection_mask(token_idx, expert_ids, n_shards,
+                                   owner_row=owner_row,
+                                   replicated_row=replicated_row)
     return 2.0 * d_model * itemsize * float(np.count_nonzero(remote))
 
 
@@ -109,13 +139,27 @@ class _AggregateStats:
     def __init__(self, shards: List[SliceCache]):
         self._shards = shards
 
+    def combined(self) -> CacheStats:
+        """One summed :class:`CacheStats` over the shards.
+
+        Callers reading several counters should grab this once per read
+        batch instead of touching attributes on the aggregate view —
+        each attribute read re-sums (the old path additionally built a
+        full snapshot dict *per attribute*, an O(shards) dict merge for
+        every counter; this sums the five raw fields directly).
+        """
+        c = CacheStats()
+        for sh in self._shards:
+            st = sh.stats
+            c.msb_hits += st.msb_hits
+            c.msb_misses += st.msb_misses
+            c.lsb_hits += st.lsb_hits
+            c.lsb_misses += st.lsb_misses
+            c.n_dropped += st.n_dropped
+        return c
+
     def snapshot(self) -> dict:
-        out = self._shards[0].stats.snapshot()
-        for s in self._shards[1:]:
-            snap = s.stats.snapshot()
-            for k in out:
-                out[k] += snap[k]
-        return out
+        return self.combined().snapshot()
 
     def reset(self) -> None:
         for s in self._shards:
@@ -123,28 +167,40 @@ class _AggregateStats:
 
     def __getattr__(self, name):
         # Derived counters (accesses, misses, miss_rate, msb_misses, ...)
-        # come from a summed CacheStats built on demand.
-        return getattr(CacheStats(**self.snapshot()), name)
+        # resolve against one combined CacheStats.
+        return getattr(self.combined(), name)
 
 
 class ShardedSliceCache:
     """``ep`` per-shard :class:`SliceCache` instances behind one surface.
 
-    Every key-addressed operation routes to the owning shard
-    (:func:`shard_of_expert` on ``key.expert``); aggregate reads
-    (``used``, ``residency``, ``stats``, ``epochs``) combine shards.
-    Capacity is split evenly: each shard holds ``capacity_bytes /
-    n_shards`` and only ever sees keys it owns, so LRU/eviction pressure
-    is strictly shard-local — exactly the deployment question EP poses
-    (a hot shard cannot borrow a cold shard's DRAM).
+    Every key-addressed operation routes to the owning shard — decided
+    by the :class:`~repro.core.placement.PlacementMap` when one is set,
+    or the legacy round-robin modulo otherwise (direct constructions in
+    tests and the modulo path are bit-identical to ``round_robin``
+    placement by design).  Aggregate reads (``used``, ``residency``,
+    ``stats``, ``epochs``) combine shards.  Capacity is split evenly:
+    each shard holds ``capacity_bytes / n_shards``, so LRU/eviction
+    pressure is strictly shard-local — exactly the deployment question
+    EP poses (a hot shard cannot borrow a cold shard's DRAM).  Replicas
+    of experts marked in the placement map live in *other* shards'
+    segments too, inserted there by the engine's replica dispatch and
+    charged against those shards' budgets; key-routed operations here
+    always address the owner's copy.
     """
 
     def __init__(self, capacity_bytes: float, n_shards: int, *,
-                 slice_aware: bool = True):
+                 slice_aware: bool = True,
+                 placement: Optional[PlacementMap] = None):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if placement is not None and placement.n_shards != int(n_shards):
+            raise ValueError(
+                f"placement map is for {placement.n_shards} shards, "
+                f"cache has {n_shards}")
         self.n_shards = int(n_shards)
         self.slice_aware = slice_aware
+        self.placement = placement
         self.shards: List[SliceCache] = [
             SliceCache(capacity_bytes / self.n_shards,
                        slice_aware=slice_aware)
@@ -152,6 +208,8 @@ class ShardedSliceCache:
 
     # ------------------------------------------------------------ routing
     def shard_index(self, key: SliceKey) -> int:
+        if self.placement is not None:
+            return self.placement.owner_of(key.layer, key.expert)
         return shard_of_expert(key.expert, self.n_shards)
 
     def shard(self, key: SliceKey) -> SliceCache:
@@ -171,6 +229,9 @@ class ShardedSliceCache:
         return _AggregateStats(self.shards)
 
     def __contains__(self, key: SliceKey) -> bool:
+        if (self.placement is not None
+                and self.placement.is_replicated(key.layer, key.expert)):
+            return any(key in s for s in self.shards)
         return key in self.shard(key)
 
     def __len__(self) -> int:
@@ -211,6 +272,50 @@ class ShardedSliceCache:
     def clear(self) -> None:
         for s in self.shards:
             s.clear()
+
+    # ---------------------------------------------------------- migration
+    def apply_placement(self, new_map: PlacementMap
+                        ) -> List[Tuple[SliceKey, float, int, int]]:
+        """Adopt ``new_map``, physically moving displaced resident slices.
+
+        A resident slice stays put if its shard is still the owner under
+        the new map, or if the slice is replicated (replicas are valid
+        on any shard).  Everything else is evicted from its old shard
+        and inserted into the new owner (which may LRU-evict locally to
+        make room — honest capacity pressure on the receiving side).
+
+        Returns the executed moves ``[(key, nbytes, from, to)]`` in a
+        deterministic (layer, expert, kind, source-shard) order; the
+        caller (the engine) charges ``sum(nbytes)`` on the interconnect
+        channel.  A slice whose new owner already holds a copy is simply
+        freed — no bytes cross the interconnect for it.
+        """
+        plan: List[Tuple[int, int, str, int, SliceKey]] = []
+        for sid, sh in enumerate(self.shards):
+            for key in sh.resident_keys():
+                keep = (sid == new_map.owner_of(key.layer, key.expert)
+                        or new_map.is_replicated(key.layer, key.expert))
+                if not keep:
+                    plan.append((key.layer, key.expert, key.kind, sid, key))
+        plan.sort(key=lambda t: t[:4])
+        moves: List[Tuple[SliceKey, float, int, int]] = []
+        for lidx, e, _kind, sid, key in plan:
+            src = self.shards[sid]
+            if key not in src:      # displaced by an earlier move's insert
+                continue
+            nb = src.nbytes_of(key)
+            ready = src.ready_time(key, 0.0)
+            src.evict(key)
+            dst_sid = new_map.owner_of(lidx, e)
+            dst = self.shards[dst_sid]
+            if key in dst or nb > dst.capacity:
+                continue            # freed (copy exists) or unfittable
+            dst.insert(key, nb)
+            if ready > 0.0:
+                dst.mark_inflight(key, ready)
+            moves.append((key, nb, sid, dst_sid))
+        self.placement = new_map
+        return moves
 
     # --------------------------------------------------- in-flight fills
     def mark_inflight(self, key: SliceKey, ready_t: float) -> None:
@@ -260,8 +365,12 @@ class ShardedSliceCache:
             agg = dict(snap)
             for s in self.shards[1:]:
                 other_label, other = s.epochs[i]
-                assert other_label == label, \
-                    f"shard epoch skew: {other_label!r} != {label!r}"
+                if other_label != label:
+                    # Not an assert: those vanish under ``python -O``,
+                    # and silently mis-summing epochs would corrupt the
+                    # warm-up curve and the EP fidelity gate.
+                    raise RuntimeError(
+                        f"shard epoch skew: {other_label!r} != {label!r}")
                 for k in agg:
                     agg[k] += other[k]
             out.append((label, agg))

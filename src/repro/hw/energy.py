@@ -151,6 +151,12 @@ class CostLedger:
     ici_ch: ChannelTimeline = dataclasses.field(
         default_factory=lambda: ChannelTimeline("ici"))
 
+    # expert-migration traffic (placement re-packing moving resident
+    # slices shard-to-shard; a tagged subset of the ici accumulators,
+    # the way prefetch_flash_bytes is a subset of flash_bytes)
+    migration_bytes: float = 0.0
+    n_migrations: int = 0
+
     # ------------------------------------------------------------ timeline
     @property
     def now(self) -> float:
@@ -284,6 +290,20 @@ class CostLedger:
         """Serialized-issue interconnect transfer (blocking)."""
         self.ici_transfer_at(self._io_ready(), nbytes)
 
+    def migrate_at(self, t_ready: float, nbytes: float) -> Tuple[float, float]:
+        """One expert slice moved shard-to-shard by placement
+        re-packing: full interconnect latency + energy for the slice
+        bytes, tagged in ``migration_bytes`` / ``n_migrations`` so the
+        benefit of a placement can be judged against what moving to it
+        cost."""
+        self.migration_bytes += nbytes
+        self.n_migrations += 1
+        return self.ici_transfer_at(t_ready, nbytes)
+
+    def migrate(self, nbytes: float) -> None:
+        """Serialized-issue migration transfer (blocking)."""
+        self.migrate_at(self._io_ready(), nbytes)
+
     def mark_prefetch_wasted(self, nbytes: float) -> None:
         """Attribute an already-charged prefetch fill as wasted: the
         predicted slice was never demanded by (or landed too late for)
@@ -373,6 +393,8 @@ class CostLedger:
             "ici_latency_s": self.ici_latency_s,
             "ici_energy_j": self.ici_energy_j,
             "n_ici_transfers": self.n_ici_transfers,
+            "migration_bytes": self.migration_bytes,
+            "n_migrations": self.n_migrations,
         }
 
     def clone(self) -> "CostLedger":
@@ -399,12 +421,14 @@ class CostLedger:
             "io_stall_s", "prefetch_flash_bytes",
             "prefetch_wasted_energy_j",
             "ici_bytes", "ici_latency_s", "ici_energy_j",
+            "migration_bytes",
         ):
             setattr(self, f, 0.0)
         self.n_flash_transfers = 0
         self.n_dram_transfers = 0
         self.n_prefetch_fills = 0
         self.n_ici_transfers = 0
+        self.n_migrations = 0
         for ch in (self.flash_ch, self.dram_ch, self.compute_ch,
                    self.flash_bg_ch, self.ici_ch):
             ch.reset()
@@ -456,6 +480,12 @@ class ShardedCostLedger:
     def ici_transfer(self, nbytes: float) -> None:
         self.ici.ici_transfer(nbytes)
 
+    def migrate_at(self, t_ready: float, nbytes: float):
+        return self.ici.migrate_at(t_ready, nbytes)
+
+    def migrate(self, nbytes: float) -> None:
+        self.ici.migrate(nbytes)
+
     # ----------------------------------------------------------- timeline
     @property
     def now(self) -> float:
@@ -492,6 +522,16 @@ class ShardedCostLedger:
     @property
     def prefetch_wasted_energy_j(self) -> float:
         return sum(led.prefetch_wasted_energy_j for led in self.shards)
+
+    @property
+    def migration_bytes(self) -> float:
+        return self.ici.migration_bytes \
+            + sum(led.migration_bytes for led in self.shards)
+
+    @property
+    def n_migrations(self) -> int:
+        return self.ici.n_migrations \
+            + sum(led.n_migrations for led in self.shards)
 
     @property
     def io_stall_s(self) -> float:

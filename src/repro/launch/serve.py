@@ -45,6 +45,7 @@ DEFAULT_KNOBS = {
     "prefetch_top_m": None, "prefetch_kind": "request",
     "prefetch_lookahead": 2, "prefetch_min_obs": 0,
     "prefetch_min_score": 0.02,
+    "placement": "round_robin", "placement_period": 64, "replicate_k": 0,
 }
 
 
@@ -88,6 +89,9 @@ def cli_engine_knobs(args) -> dict:
         "prefetch_lookahead": args.prefetch_lookahead,
         "prefetch_min_obs": args.prefetch_min_obs,
         "prefetch_min_score": args.prefetch_min_score,
+        "placement": args.placement,
+        "placement_period": args.placement_period,
+        "replicate_k": args.replicate_k,
     }
 
 
@@ -110,6 +114,9 @@ def build_engine_config(args) -> EngineConfig:
         prefetch_lookahead=k["prefetch_lookahead"],
         prefetch_min_obs=k["prefetch_min_obs"],
         prefetch_min_score=k["prefetch_min_score"],
+        placement=k["placement"],
+        placement_period=k["placement_period"],
+        replicate_k=k["replicate_k"],
     )
 
 
@@ -174,6 +181,21 @@ def main():
                          "this many shards, charging all-to-all token "
                          "dispatch on the interconnect channel (live "
                          "default 1 = single device)")
+    ap.add_argument("--placement", default=None,
+                    help="expert placement policy across EP shards: "
+                         "'round_robin' (live default; expert %% shards), "
+                         "'hotness' (greedy balanced bin-packing by "
+                         "observed hotness, periodically re-placed with "
+                         "migration charged on the interconnect), or "
+                         "'hotness+replicate:K' (additionally replicate "
+                         "the K hottest experts on every shard)")
+    ap.add_argument("--placement-period", type=int, default=None,
+                    help="decode steps between hotness re-placements "
+                         "(live default 64; ignored by round_robin)")
+    ap.add_argument("--replicate-k", type=int, default=None,
+                    help="replicate the K globally hottest experts on "
+                         "every shard (requires --placement hotness; "
+                         "live default 0)")
     ap.add_argument("--prefetch-top-m", type=int, default=None,
                     help="enable speculative slice prefetch: max fills "
                          "issued per routed layer (live default: off)")
@@ -279,6 +301,10 @@ def main():
                 "all_to_all_bytes": snap["ici_bytes"],
                 "all_to_all_energy_mJ": round(
                     snap["ici_energy_j"] * 1e3, 6)}))
+    if engine is not None and hasattr(engine, "placement_summary"):
+        psum = engine.placement_summary()
+        if psum is not None:
+            print(json.dumps({"placement": psum}))
 
     if recorder is not None:
         tr = recorder.trace()

@@ -370,6 +370,7 @@ class ContinuousBatchingScheduler:
 
     def summary(self, **kw) -> dict:
         kw.setdefault("per_shard", self.engine.shard_breakdown())
+        kw.setdefault("placement", self.engine.placement_summary())
         pf = getattr(self.engine, "prefetcher", None)
         if pf is not None:
             kw.setdefault("prefetch", pf.summary())

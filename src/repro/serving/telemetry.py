@@ -177,14 +177,20 @@ class FleetTelemetry:
     def summary(self, *, total_energy_j: Optional[float] = None,
                 wall_s: Optional[float] = None,
                 per_shard: Optional[list] = None,
-                prefetch: Optional[dict] = None) -> dict:
+                prefetch: Optional[dict] = None,
+                placement: Optional[dict] = None) -> dict:
         """Fleet aggregates.  ``per_shard`` (expert-parallel engines
         only) is the engine's shard breakdown — per-shard cache
         miss/energy/makespan rows — attached verbatim under
-        ``"per_shard"``.  ``prefetch`` (prefetch-enabled engines only)
-        is the prefetcher's outcome summary — issued/useful/late/wasted
-        counts and the learned per-distance usefulness — attached
-        verbatim under ``"prefetch"``."""
+        ``"per_shard"``, and additionally summarized into shard-balance
+        metrics (miss-rate spread, access imbalance).  ``prefetch``
+        (prefetch-enabled engines only) is the prefetcher's outcome
+        summary — issued/useful/late/wasted counts and the learned
+        per-distance usefulness — attached verbatim under
+        ``"prefetch"``.  ``placement`` (expert-parallel engines only) is
+        the engine's placement summary — policy name, re-placement
+        period, replica count, migration events/bytes — attached
+        verbatim under ``"placement"``."""
         done = self.completed()
         ttfts = [r.ttft for r in done]
         per_tok = [r.per_token_s for r in done if r.n_generated > 1]
@@ -241,8 +247,22 @@ class FleetTelemetry:
         out["per_tenant"] = self.per_tenant_summary()
         if per_shard is not None:
             out["per_shard"] = per_shard
+            rates = [row["miss_rate"] for row in per_shard]
+            accs = [row["accesses"] for row in per_shard]
+            if rates:
+                mean_rate = sum(rates) / len(rates)
+                mean_acc = sum(accs) / len(accs)
+                # Spread (max-min) and imbalance factor (max/mean): the
+                # quantities the hotness placement exists to shrink.
+                out["shard_miss_spread"] = max(rates) - min(rates)
+                out["shard_miss_imbalance"] = (
+                    max(rates) / mean_rate if mean_rate > 0 else 1.0)
+                out["shard_access_imbalance"] = (
+                    max(accs) / mean_acc if mean_acc > 0 else 1.0)
         if prefetch is not None:
             out["prefetch"] = prefetch
+        if placement is not None:
+            out["placement"] = placement
         return out
 
     def per_tenant_summary(self) -> Dict[str, dict]:

@@ -112,6 +112,11 @@ def engine_config_from_meta(meta: TraceMeta, **overrides) -> EngineConfig:
     e.setdefault("prefetch_kind", "transition")
     e.setdefault("prefetch_lookahead", 2)
     e.setdefault("prefetch_min_score", 0.02)
+    # Traces recorded before placement was a policy ran the implicit
+    # round-robin modulo; replay them under the same table.
+    e.setdefault("placement", "round_robin")
+    e.setdefault("placement_period", 64)
+    e.setdefault("replicate_k", 0)
     unknown = set(overrides) - set(e)
     if unknown:
         raise KeyError(f"unknown engine override(s) {sorted(unknown)}; "
@@ -143,6 +148,9 @@ def engine_config_from_meta(meta: TraceMeta, **overrides) -> EngineConfig:
         prefetch_lookahead=int(e["prefetch_lookahead"]),
         prefetch_min_score=float(e["prefetch_min_score"]),
         controller=ctl,
+        placement=str(e["placement"]),
+        placement_period=int(e["placement_period"]),
+        replicate_k=int(e["replicate_k"]),
     )
 
 
@@ -171,6 +179,11 @@ class ReplayReport:
     # plus the final controller summary.
     per_tenant_rows: Optional[List[dict]] = None
     controller_summary: Optional[dict] = None
+    # Placement-policy replays only: the migration event sequence
+    # ([{step, moved, bytes}]) and the final placement summary — what
+    # the live-vs-replay placement fidelity gate compares exactly.
+    migration_events: Optional[List[dict]] = None
+    placement: Optional[dict] = None
 
     @property
     def decode_miss_rate(self) -> float:
@@ -236,7 +249,16 @@ class ReplayEngine(PersistentEngine):
         self.resident_bytes = meta.resident_bytes
         self.expert_macs_per_token = meta.expert_macs_per_token
 
-        self.cache = ecfg.cache()
+        # Placement must exist before the cache: the sharded cache keys
+        # slice ownership off the map (replay reproduces the live
+        # engine's table, not an implicit modulo).
+        self.placement_policy = ecfg.build_placement_policy(
+            self.n_moe_layers, self.n_experts)
+        self.placement = (self.placement_policy.initial()
+                          if self.placement_policy is not None else None)
+        self._decode_steps = 0
+        self.migration_events: List[dict] = []
+        self.cache = ecfg.cache(placement=self.placement)
         self.ledger = ecfg.ledger()
         self.tracker = HotnessTracker(self.n_moe_layers, self.n_experts)
         self.requests_served = 0
@@ -283,6 +305,7 @@ class ReplayEngine(PersistentEngine):
         single-device components.  Must be called before any event is
         consumed (it rebuilds cache and ledger empty).
         """
+        from repro.core.placement import build_placement_policy
         from repro.core.shard import ShardedSliceCache
         from repro.hw.energy import ShardedCostLedger
 
@@ -290,8 +313,18 @@ class ReplayEngine(PersistentEngine):
             raise RuntimeError("force_sharded must precede consumption")
         slice_aware = self.ecfg.policy.slice_mode == "dbsc" \
             and not self.ecfg.fused_slices
+        if n_shards > 1:
+            self.placement_policy = build_placement_policy(
+                self.ecfg.placement, self.n_moe_layers, self.n_experts,
+                n_shards,
+                replicate_k=self.ecfg.replicate_k or None)
+            self.placement = self.placement_policy.initial()
+        else:
+            self.placement_policy = None
+            self.placement = None
         self.cache = ShardedSliceCache(self.ecfg.cache_bytes, n_shards,
-                                       slice_aware=slice_aware)
+                                       slice_aware=slice_aware,
+                                       placement=self.placement)
         self.ledger = ShardedCostLedger(
             SYSTEM_PROFILES[self.ecfg.system], n_shards)
         return self
@@ -386,7 +419,10 @@ class ReplayEngine(PersistentEngine):
                              if self._per_tenant_rows else None),
             controller_summary=(self.slo_controller.summary()
                                 if self.slo_controller is not None
-                                else None))
+                                else None),
+            migration_events=(list(self.migration_events)
+                              if self.migration_events else None),
+            placement=self.placement_summary())
 
     # --------------------------------------------------------------- fork
     def clone(self) -> "ReplayEngine":
@@ -411,7 +447,7 @@ class ReplayEngine(PersistentEngine):
         new.slo_controller = copy.deepcopy(self.slo_controller)
         new.recorder = None
         for f in ("_miss_curve", "_energy_curve", "_alpha_curve",
-                  "_per_tenant_rows"):
+                  "_per_tenant_rows", "migration_events"):
             setattr(new, f, list(getattr(self, f)))
         return new
 

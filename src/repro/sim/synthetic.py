@@ -90,6 +90,8 @@ class SyntheticSpec:
             "ep_shards": 1, "prefetch_min_obs": 0,
             "prefetch_kind": "request", "prefetch_lookahead": 2,
             "prefetch_min_score": 0.02, "controller": None,
+            "placement": "round_robin", "placement_period": 64,
+            "replicate_k": 0,
         }
         unknown = set(engine_overrides) - set(engine)
         if unknown:

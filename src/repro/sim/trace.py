@@ -345,6 +345,9 @@ def engine_meta(engine) -> TraceMeta:
             "prefetch_min_score": ecfg.prefetch_min_score,
             "controller": (None if ecfg.controller is None
                            else ecfg.controller.to_dict()),
+            "placement": ecfg.placement,
+            "placement_period": ecfg.placement_period,
+            "replicate_k": ecfg.replicate_k,
         },
     )
 

@@ -1,0 +1,434 @@
+"""Placement-policy invariants + PR-8 satellite regressions.
+
+The tentpole turned ``expert % ep_shards`` into a first-class
+:class:`~repro.core.placement.PlacementMap` consumed by the sharded
+cache, the charge paths, the ledger and replay.  These tests pin the
+refactor from four sides:
+
+* unit invariants on the map/policies (coverage, round-robin identity,
+  zero-hotness collapse, replication marking, spec parsing);
+* migration mechanics on :meth:`ShardedSliceCache.apply_placement`
+  (byte conservation, slice relocation, free-instead-of-copy);
+* golden-trace gates: round_robin EP replays must remain bit-identical
+  to the pre-refactor modulo observables, and the hotness/replicate
+  replays are pinned so placement decisions cannot drift silently;
+* the two satellite fixes — ``_AggregateStats`` summing via one
+  ``combined()`` pass, and shard epoch skew raising ``RuntimeError``
+  instead of a bare ``assert`` (which vanishes under ``python -O``).
+
+All tests are model-free (golden trace + direct unit construction); the
+live-vs-replay placement fidelity gate runs in
+``benchmarks/serving_load.py`` where a live scheduler exists.
+"""
+
+import dataclasses
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.cache import CacheStats, SliceCache
+from repro.core.placement import (HotnessPlacement, PlacementMap,
+                                  RoundRobinPlacement,
+                                  build_placement_policy,
+                                  parse_placement_spec)
+from repro.core.shard import ShardedSliceCache, expert_placement
+from repro.core.slices import SliceKey
+from repro.sim import SyntheticSpec, Trace, replay_trace, zipf_trace
+from repro.sim import autotune as at
+
+DATA = pathlib.Path(__file__).resolve().parent / "data"
+
+L, E = 3, 12
+
+
+def _rng_hotness(seed=0, shape=(L, E)):
+    return np.random.default_rng(seed).gamma(0.5, size=shape)
+
+
+# --------------------------------------------------------------------------
+# PlacementMap + policies
+# --------------------------------------------------------------------------
+class TestPlacementMap:
+    def test_round_robin_table_is_the_old_modulo(self):
+        for S in (1, 2, 3, 4):
+            m = PlacementMap.round_robin(L, E, S)
+            for l in range(L):
+                assert np.array_equal(m.owner_row(l), expert_placement(E, S))
+                for e in range(E):
+                    assert m.owner_of(l, e) == e % S
+                    assert m.shards_of(l, e) == (e % S,)
+            assert not m.replicated.any()
+
+    @pytest.mark.parametrize("seed", [0, 1, 7])
+    @pytest.mark.parametrize("S", [2, 3, 4])
+    def test_coverage_every_expert_owned_by_exactly_one_shard(self, seed, S):
+        m = HotnessPlacement(L, E, S, replicate_k=3).replace(
+            _rng_hotness(seed))
+        assert m.owner.shape == (L, E)
+        assert m.owner.min() >= 0 and m.owner.max() < S
+        for l in range(L):
+            covered = sorted(
+                e for s in range(S) for e in m.experts_of_shard(l, s))
+            # replicated experts appear on every shard, owned ones once
+            n_rep = int(m.replicated_row(l).sum())
+            assert len(covered) == E + n_rep * (S - 1)
+            assert sorted(set(covered)) == list(range(E))
+
+    def test_shards_of_lists_owner_first_for_replicas(self):
+        owner = np.zeros((1, 2), np.int64)
+        owner[0, 1] = 2
+        rep = np.zeros((1, 2), bool)
+        rep[0, 1] = True
+        m = PlacementMap(owner=owner, replicated=rep, n_shards=3)
+        assert m.shards_of(0, 0) == (0,)
+        assert m.shards_of(0, 1) == (2, 0, 1)
+
+    def test_rejects_out_of_range_owner_and_shape_skew(self):
+        with pytest.raises(ValueError):
+            PlacementMap(owner=np.full((1, 2), 5, np.int64),
+                         replicated=np.zeros((1, 2), bool), n_shards=2)
+        with pytest.raises(ValueError):
+            PlacementMap(owner=np.zeros((1, 2), np.int64),
+                         replicated=np.zeros((1, 3), bool), n_shards=2)
+
+    def test_equality_is_by_table(self):
+        a = PlacementMap.round_robin(L, E, 4)
+        b = PlacementMap.round_robin(L, E, 4)
+        assert a == b and a is not b
+        assert a != HotnessPlacement(L, E, 4).replace(_rng_hotness())
+
+
+class TestHotnessPolicy:
+    def test_zero_hotness_collapses_to_round_robin(self):
+        # The count tie-break makes a cold start *exactly* the
+        # pre-refactor placement; divergence needs observed traffic.
+        for S in (1, 2, 3, 4):
+            pol = HotnessPlacement(L, E, S)
+            assert pol.initial() == PlacementMap.round_robin(L, E, S)
+
+    def test_balances_hotness_load_better_than_round_robin(self):
+        hot = _rng_hotness(3) ** 3          # strongly skewed
+        S = 4
+        m = HotnessPlacement(L, E, S).replace(hot)
+        rr = PlacementMap.round_robin(L, E, S)
+
+        def spread(pm):
+            worst = 0.0
+            for l in range(L):
+                loads = [hot[l][pm.owner_row(l) == s].sum()
+                         for s in range(S)]
+                worst = max(worst, max(loads) - min(loads))
+            return worst
+
+        assert spread(m) < spread(rr)
+
+    def test_deterministic(self):
+        hot = _rng_hotness(5)
+        pol = HotnessPlacement(L, E, 4, replicate_k=2)
+        assert pol.replace(hot) == pol.replace(hot)
+
+    def test_replicates_k_globally_hottest_pairs(self):
+        hot = np.zeros((L, E))
+        hot[1, 4] = 9.0
+        hot[2, 7] = 5.0
+        hot[0, 0] = 3.0
+        m = HotnessPlacement(L, E, 4, replicate_k=2).replace(hot)
+        assert m.is_replicated(1, 4) and m.is_replicated(2, 7)
+        assert int(m.replicated.sum()) == 2
+        # single shard: replication is meaningless, mask stays empty
+        m1 = HotnessPlacement(L, E, 1, replicate_k=2).replace(hot)
+        assert not m1.replicated.any()
+
+    def test_rejects_bad_hotness_shape_and_negative_k(self):
+        with pytest.raises(ValueError):
+            HotnessPlacement(L, E, 2).replace(np.zeros((L, E + 1)))
+        with pytest.raises(ValueError):
+            HotnessPlacement(L, E, 2, replicate_k=-1)
+
+
+class TestSpecParsing:
+    @pytest.mark.parametrize("spec,want", [
+        ("round_robin", ("round_robin", 0)),
+        ("hotness", ("hotness", 0)),
+        ("hotness+replicate:3", ("hotness", 3)),
+        ("", ("round_robin", 0)),
+    ])
+    def test_valid_specs(self, spec, want):
+        assert parse_placement_spec(spec) == want
+
+    @pytest.mark.parametrize("spec", [
+        "junk", "hotness+replicate:", "hotness+replicate:x",
+        "hotness+replicate:0", "hotness+replicate:-1"])
+    def test_junk_specs_raise(self, spec):
+        with pytest.raises(ValueError):
+            parse_placement_spec(spec)
+
+    def test_factory_names_and_replicate_override(self):
+        assert isinstance(build_placement_policy("round_robin", L, E, 2),
+                          RoundRobinPlacement)
+        pol = build_placement_policy("hotness+replicate:3", L, E, 2)
+        assert pol.replicate_k == 3
+        # explicit scalar knob wins over the suffix
+        pol = build_placement_policy("hotness+replicate:3", L, E, 2,
+                                     replicate_k=1)
+        assert pol.replicate_k == 1 and pol.name == "hotness+replicate:1"
+
+    def test_replication_requires_hotness(self):
+        with pytest.raises(ValueError):
+            build_placement_policy("round_robin", L, E, 2, replicate_k=2)
+
+
+# --------------------------------------------------------------------------
+# migration mechanics on the sharded cache
+# --------------------------------------------------------------------------
+class TestApplyPlacement:
+    def _cache(self, S=2, cap=4000.0):
+        c = ShardedSliceCache(cap, S,
+                              placement=PlacementMap.round_robin(1, E, S))
+        for e in range(6):
+            c.insert(SliceKey(0, e, "msb"), 100.0 + e)
+        return c
+
+    def test_moves_conserve_bytes_and_land_on_new_owner(self):
+        c = self._cache()
+        used_before = c.used
+        new_map = PlacementMap(
+            owner=(1 - PlacementMap.round_robin(1, E, 2).owner),
+            replicated=np.zeros((1, E), bool), n_shards=2)   # swap shards
+        moves = c.apply_placement(new_map)
+        assert c.placement is new_map
+        assert len(moves) == 6                                # all displaced
+        assert c.used == used_before                          # conservation
+        for key, nb, src, dst in moves:
+            assert nb == 100.0 + key.expert
+            assert dst == new_map.owner_of(key.layer, key.expert) != src
+            assert c.shards[dst].contains(key)
+            assert not c.shards[src].contains(key)
+
+    def test_noop_when_map_unchanged(self):
+        c = self._cache()
+        assert c.apply_placement(c.placement) == []
+
+    def test_replicated_slices_stay_put(self):
+        c = self._cache()
+        rep = np.zeros((1, E), bool)
+        rep[0, :6] = True
+        new_map = PlacementMap(
+            owner=(1 - PlacementMap.round_robin(1, E, 2).owner),
+            replicated=rep, n_shards=2)
+        # every resident slice is a valid replica wherever it sits
+        assert c.apply_placement(new_map) == []
+
+    def test_existing_copy_frees_instead_of_moving(self):
+        c = self._cache()
+        # shard 1 already holds expert 0's slice (simulating a replica
+        # left behind); un-replicating with owner=1 must free shard 0's
+        # copy without charging a move.
+        c.shards[1].insert(SliceKey(0, 0, "msb"), 100.0)
+        owner = PlacementMap.round_robin(1, E, 2).owner.copy()
+        owner[0, 0] = 1
+        new_map = PlacementMap(owner=owner,
+                               replicated=np.zeros((1, E), bool), n_shards=2)
+        moves = c.apply_placement(new_map)
+        assert all(k.expert != 0 for k, *_ in moves)
+        assert not c.shards[0].contains(SliceKey(0, 0, "msb"))
+        assert c.shards[1].contains(SliceKey(0, 0, "msb"))
+
+
+# --------------------------------------------------------------------------
+# satellite 1: aggregate stats sum once, not per attribute
+# --------------------------------------------------------------------------
+class TestAggregateStats:
+    def test_combined_matches_per_attribute_reads(self):
+        c = ShardedSliceCache(800.0, 2)
+        for e in range(4):
+            c.access(SliceKey(0, e, "msb"), 50.0)     # 4 misses
+        c.access(SliceKey(0, 0, "msb"), 50.0)         # hit shard 0
+        c.access(SliceKey(0, 1, "msb"), 50.0)         # hit shard 1
+        st = c.stats
+        comb = st.combined()
+        assert isinstance(comb, CacheStats)
+        assert (comb.accesses, comb.misses) == (6, 4)
+        # attribute reads resolve against the same combined window
+        assert st.accesses == 6 and st.misses == 4
+        assert st.miss_rate == pytest.approx(4 / 6)
+        assert st.snapshot() == comb.snapshot()
+        # and equal the literal per-shard sums
+        assert comb.msb_misses == sum(s.stats.msb_misses for s in c.shards)
+        st.reset()
+        assert c.stats.accesses == 0
+
+
+# --------------------------------------------------------------------------
+# satellite 2: epoch skew must raise, not assert
+# --------------------------------------------------------------------------
+class TestEpochSkew:
+    def test_skewed_epoch_labels_raise_runtime_error(self):
+        c = ShardedSliceCache(800.0, 2)
+        c.begin_epoch("w0")
+        c.access(SliceKey(0, 0, "msb"), 50.0)
+        c.end_epoch()
+        label, snap = c.shards[1].epochs[0]
+        c.shards[1].epochs[0] = ("skewed", snap)
+        with pytest.raises(RuntimeError, match="epoch skew"):
+            _ = c.epochs
+
+    def test_aligned_epochs_aggregate(self):
+        c = ShardedSliceCache(800.0, 2)
+        c.begin_epoch("w0")
+        c.access(SliceKey(0, 0, "msb"), 50.0)
+        c.access(SliceKey(0, 1, "msb"), 50.0)
+        c.end_epoch()
+        assert c.epoch_counts() == [("w0", 2, 2)]
+
+
+# --------------------------------------------------------------------------
+# golden-trace gates
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def golden():
+    return Trace.load(str(DATA / "golden_trace.npz"))
+
+
+# Pre-refactor EP observables (PR 5 modulo path), pinned at the PR-8
+# refactor boundary: the round_robin *table* must reproduce them
+# bit-for-bit.  A diff here means the placement refactor changed the
+# default charge path — that is a bug, not a tunable.
+RR_EXPECT = {
+    2: dict(acc=576, miss=290, energy=0.004882461055194977,
+            latency=0.002940755149568463, ici=36352.0),
+    4: dict(acc=576, miss=279, energy=0.004778731903194965,
+            latency=0.0014895432429268395, ici=54016.0),
+}
+
+# Hotness policy on the same trace (ep=4, period=8): decisions are pure
+# functions of charge-path hotness, so the full migration event
+# sequence is deterministic and pinned.
+HOT_EVENTS = [
+    {"step": 8, "moved": 12, "bytes": 170496.0},
+    {"step": 16, "moved": 9, "bytes": 125952.0},
+    {"step": 24, "moved": 6, "bytes": 81408.0},
+    {"step": 32, "moved": 4, "bytes": 56832.0},
+    {"step": 40, "moved": 5, "bytes": 69120.0},
+    {"step": 48, "moved": 4, "bytes": 56832.0},
+    {"step": 56, "moved": 4, "bytes": 56832.0},
+    {"step": 64, "moved": 4, "bytes": 54912.0},
+]
+
+
+class TestGoldenRoundRobin:
+    @pytest.mark.parametrize("ep", [2, 4])
+    def test_round_robin_is_bit_identical_to_pre_refactor(self, golden, ep):
+        r = replay_trace(golden, ep_shards=ep, warmup="pcw")
+        want = RR_EXPECT[ep]
+        assert (r.decode_accesses, r.decode_misses) == \
+            (want["acc"], want["miss"])
+        assert r.total_energy_j == pytest.approx(want["energy"], rel=1e-9)
+        assert r.total_latency_s == pytest.approx(want["latency"], rel=1e-9)
+        assert r.ledger["ici_bytes"] == want["ici"]
+        # round_robin never migrates: no events, nothing on the meter
+        assert r.migration_events is None
+        assert r.ledger["migration_bytes"] == 0.0
+        assert r.ledger["n_migrations"] == 0
+        assert r.placement["policy"] == "round_robin"
+        assert r.placement["n_migration_events"] == 0
+
+
+class TestGoldenHotness:
+    @pytest.fixture(scope="class")
+    def hot(self, golden):
+        return replay_trace(golden, ep_shards=4, warmup="pcw",
+                            placement="hotness", placement_period=8)
+
+    def test_migration_sequence_pinned(self, hot):
+        assert hot.migration_events == HOT_EVENTS
+        assert hot.placement["n_migration_events"] == len(HOT_EVENTS)
+        assert hot.placement["migrated_slices"] == \
+            sum(e["moved"] for e in HOT_EVENTS)
+
+    def test_migration_bytes_conserved_on_the_ledger(self, hot):
+        want = sum(e["bytes"] for e in HOT_EVENTS)
+        assert hot.ledger["migration_bytes"] == want
+        assert hot.placement["migration_bytes"] == want
+        assert hot.ledger["n_migrations"] == \
+            sum(e["moved"] for e in HOT_EVENTS)
+        # migration rides the interconnect: a subset of ici traffic
+        assert hot.ledger["migration_bytes"] <= hot.ledger["ici_bytes"]
+
+    def test_hotness_reduces_decode_misses(self, hot):
+        assert hot.decode_misses == 262          # pinned
+        assert hot.decode_misses < RR_EXPECT[4]["miss"]
+
+    def test_replay_is_deterministic(self, golden, hot):
+        again = replay_trace(golden, ep_shards=4, warmup="pcw",
+                             placement="hotness", placement_period=8)
+        assert again.migration_events == hot.migration_events
+        assert again.decode_misses == hot.decode_misses
+        assert again.per_shard_epoch_counts == hot.per_shard_epoch_counts
+
+    def test_replication_cuts_all_to_all(self, golden, hot):
+        repl = replay_trace(golden, ep_shards=4, warmup="pcw",
+                            placement="hotness+replicate:3",
+                            placement_period=8)
+        assert repl.placement["replicated_pairs"] == 3
+        a2a = lambda r: r.ledger["ici_bytes"] - r.ledger["migration_bytes"]
+        assert a2a(repl) < a2a(hot)
+
+    def test_cross_placement_replay_of_old_meta(self, golden, hot):
+        """A trace recorded before the placement knobs existed replays
+        under any policy: ``engine_config_from_meta`` backfills the
+        defaults, and overrides reproduce the pinned hotness run."""
+        meta_engine = dict(golden.meta.engine)
+        for k in ("placement", "placement_period", "replicate_k"):
+            meta_engine.pop(k, None)
+        old = Trace(meta=dataclasses.replace(golden.meta,
+                                             engine=meta_engine),
+                    events=golden.events)
+        r_default = replay_trace(old, ep_shards=4, warmup="pcw")
+        assert r_default.decode_misses == RR_EXPECT[4]["miss"]
+        r_hot = replay_trace(old, ep_shards=4, warmup="pcw",
+                             placement="hotness", placement_period=8)
+        assert r_hot.migration_events == hot.migration_events
+        assert r_hot.decode_misses == hot.decode_misses
+
+
+def test_placement_sweepable_in_autotune():
+    spec = SyntheticSpec(n_moe_layers=3, n_experts=12, top_k=2)
+    tr = zipf_trace(spec, seed=0, n_requests=3, prompt_len=6,
+                    decode_steps=12)
+    results = at.sweep(tr, [
+        ("rr", {"ep_shards": 4}),
+        ("hot", {"ep_shards": 4, "placement": "hotness",
+                 "placement_period": 4}),
+        ("repl", {"ep_shards": 4, "placement": "hotness",
+                  "placement_period": 4, "replicate_k": 2}),
+    ])
+    by_name = {r.name: r for r in results}
+    assert set(by_name) == {"rr", "hot", "repl"}
+    for r in results:
+        assert np.isfinite(r.energy_j) and np.isfinite(r.latency_s)
+
+
+# --------------------------------------------------------------------------
+# telemetry shard-balance + placement passthrough
+# --------------------------------------------------------------------------
+def test_telemetry_summarizes_shard_balance_and_placement():
+    from repro.serving.telemetry import FleetTelemetry
+
+    tele = FleetTelemetry()
+    per_shard = [
+        {"shard": 0, "accesses": 100, "misses": 30, "miss_rate": 0.30},
+        {"shard": 1, "accesses": 50, "misses": 5, "miss_rate": 0.10},
+    ]
+    psum = {"policy": "hotness", "period": 8, "replicated_pairs": 0,
+            "n_migration_events": 2, "migrated_slices": 7,
+            "migration_bytes": 1234.0}
+    out = tele.summary(per_shard=per_shard, placement=psum)
+    assert out["shard_miss_spread"] == pytest.approx(0.20)
+    assert out["shard_miss_imbalance"] == pytest.approx(0.30 / 0.20)
+    assert out["shard_access_imbalance"] == pytest.approx(100 / 75)
+    assert out["placement"] == psum
+    # single-device summaries carry neither key
+    bare = FleetTelemetry().summary()
+    assert "shard_miss_spread" not in bare and "placement" not in bare
