@@ -16,9 +16,17 @@ from repro.configs.base import get_config
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.optim import adamw as OPT
 
-RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+# REPRO_RESULTS_DIR redirects every benchmark output (CSV sinks,
+# BENCH_*.json baselines) — ``benchmarks.run --compare`` uses it to run
+# a fresh sweep into a scratch dir and diff against the persisted
+# baselines without clobbering them.
+_REPO_RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+RESULTS = os.environ.get("REPRO_RESULTS_DIR", _REPO_RESULTS)
 BENCH_DIR = os.path.join(RESULTS, "bench")
-TRAINED_DIR = os.path.join(RESULTS, "trained")
+# The trained-model cache is deterministic in (arch, steps, seed): keep
+# it anchored at the repo default so redirected runs reuse it instead of
+# re-training.
+TRAINED_DIR = os.path.join(_REPO_RESULTS, "trained")
 
 
 def train_or_load(arch: str, *, steps: int = 80, seq: int = 64,

@@ -1,6 +1,6 @@
 """Benchmark orchestrator: one function per paper table/figure.
 
-``python -m benchmarks.run [--quick] [--only NAME] [--inline]``
+``python -m benchmarks.run [--quick] [--only NAME] [--inline] [--compare]``
 
 Each benchmark runs in its own subprocess (XLA's CPU JIT keeps every
 compiled executable resident; a single process running all benches
@@ -10,19 +10,154 @@ benchmark; detailed CSVs land in results/bench/, and ``kernels_micro``
 / ``serving_load`` additionally persist cross-PR perf baselines
 (dense-dequant vs quantized-execution weight bytes, step latency) as
 ``results/BENCH_<name>.json``.
+
+``--compare`` is the regression mode: it re-runs every benchmark that
+has a persisted ``results/BENCH_*.json`` baseline into a scratch
+results dir (via ``REPRO_RESULTS_DIR``) and recursively diffs every
+numeric leaf of the fresh payload against the baseline.  Host
+wall-clock metrics (``*_us``, ``*wall*``, ``*speedup*``) are skipped —
+everything else in these payloads is produced by the deterministic cost
+model and must reproduce to the per-metric tolerance.  New keys in the
+fresh payload are reported but allowed (a PR may *add* numbers);
+missing or moved numbers fail the run with a per-leaf report.
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
+import json
 import os
 import subprocess
 import sys
+import tempfile
 import traceback
 
 BENCH_NAMES = ["table1_amat", "fig8_accuracy", "fig9_energy",
                "fig10_warmup", "ablations", "roofline", "kernels_micro",
                "serving_load", "sim_fidelity", "controller_soak"]
+
+REPO_RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# --compare leaf policy.  Skip-list: substring match on the leaf key for
+# metrics that measure *host* wall time (nondeterministic on a shared
+# CI box).  Tolerance table: substring-matched relative tolerance, first
+# match wins; the "" entry is the default for every simulated metric.
+COMPARE_SKIP = ("_us", "wall", "speedup", "steps_per_s")
+COMPARE_RTOL = (
+    ("bytes", 0.0),        # traffic counters are exact integer counts
+    ("", 1e-6),
+)
+
+_MISSING = object()
+
+
+def _leaf_rtol(key: str):
+    """None => skip this leaf; otherwise the relative tolerance."""
+    if any(s in key for s in COMPARE_SKIP):
+        return None
+    for sub, rtol in COMPARE_RTOL:
+        if sub in key:
+            return rtol
+    return COMPARE_RTOL[-1][1]
+
+
+def _diff_payload(prev, cur, path: str, diffs: list, news: list) -> None:
+    """Recursively diff ``cur`` against baseline ``prev``.
+
+    Appends ``(path, baseline, current, note)`` rows: regressions to
+    ``diffs`` (fail), additions only present in ``cur`` to ``news``
+    (allowed — benchmarks may grow new sections/metrics).
+    """
+    key = path.rsplit(".", 1)[-1]
+    if cur is _MISSING:
+        if _leaf_rtol(key) is not None or isinstance(prev, (dict, list)):
+            diffs.append((path, prev, "<missing>", "dropped from payload"))
+        return
+    if prev is _MISSING:
+        news.append((path, "<none>", cur, "new in payload"))
+        return
+    if isinstance(prev, dict) or isinstance(cur, dict):
+        if not (isinstance(prev, dict) and isinstance(cur, dict)):
+            diffs.append((path, prev, cur, "type changed"))
+            return
+        for k in sorted(set(prev) | set(cur), key=str):
+            _diff_payload(prev.get(k, _MISSING), cur.get(k, _MISSING),
+                          f"{path}.{k}", diffs, news)
+        return
+    if isinstance(prev, list) or isinstance(cur, list):
+        if not (isinstance(prev, list) and isinstance(cur, list)):
+            diffs.append((path, prev, cur, "type changed"))
+            return
+        if len(prev) != len(cur):
+            diffs.append((path, f"len={len(prev)}", f"len={len(cur)}",
+                          "length changed"))
+        for i, (p, c) in enumerate(zip(prev, cur)):
+            _diff_payload(p, c, f"{path}[{i}]", diffs, news)
+        return
+    if isinstance(prev, bool) or isinstance(prev, str) or prev is None \
+            or isinstance(cur, bool) or isinstance(cur, str) or cur is None:
+        if prev != cur:
+            diffs.append((path, prev, cur, "value changed"))
+        return
+    rtol = _leaf_rtol(key)
+    if rtol is None:
+        return                                   # host-time metric
+    a, b = float(prev), float(cur)
+    if a != b and abs(a - b) > rtol * max(abs(a), abs(b), 1e-30):
+        diffs.append((path, prev, cur, f"rtol={rtol:g}"))
+
+
+def run_compare(only: str | None) -> None:
+    """Re-run baselined benchmarks into a scratch dir and diff."""
+    baselines = {}
+    for p in sorted(glob.glob(os.path.join(REPO_RESULTS, "BENCH_*.json"))):
+        name = os.path.basename(p)[len("BENCH_"):-len(".json")]
+        if only is None or name == only:
+            baselines[name] = p
+    if not baselines:
+        sys.exit(f"--compare: no results/BENCH_*.json baseline"
+                 f"{' for ' + only if only else 's'} to diff against")
+
+    scratch = tempfile.mkdtemp(prefix="bench_compare_")
+    print(f"compare mode: {len(baselines)} baselined benchmark(s), "
+          f"fresh results -> {scratch}")
+    failed = []
+    for name, base_path in baselines.items():
+        print(f"\n--- {name}: re-running (full sweep) ---", flush=True)
+        env = {**os.environ, "REPRO_RESULTS_DIR": scratch}
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--only", name],
+            env=env, capture_output=True, text=True)
+        fresh_path = os.path.join(scratch, f"BENCH_{name}.json")
+        if r.returncode != 0 or not os.path.exists(fresh_path):
+            failed.append(name)
+            print(f"{name}: benchmark FAILED to produce a fresh payload "
+                  f"(rc={r.returncode})")
+            sys.stderr.write(r.stderr[-2000:])
+            continue
+        with open(base_path) as f:
+            prev = json.load(f)
+        with open(fresh_path) as f:
+            cur = json.load(f)
+        diffs, news = [], []
+        _diff_payload(prev, cur, name, diffs, news)
+        for path, _, cur_v, note in news:
+            print(f"  NEW  {path} = {cur_v}  ({note})")
+        if diffs:
+            failed.append(name)
+            print(f"{name}: {len(diffs)} regression(s) vs {base_path}")
+            for path, prev_v, cur_v, note in diffs:
+                print(f"  DIFF {path}: baseline={prev_v} "
+                      f"current={cur_v}  ({note})")
+        else:
+            print(f"{name}: OK — every gated leaf reproduces the "
+                  f"baseline ({len(news)} new metric(s) allowed)")
+    print()
+    if failed:
+        sys.exit(f"--compare: regressions in {failed}")
+    print(f"--compare: all {len(baselines)} baselined benchmark(s) "
+          "reproduce their persisted payloads")
 
 
 def _run_inline(name: str, quick: bool) -> None:
@@ -39,7 +174,15 @@ def main() -> None:
     ap.add_argument("--only", default=None, choices=BENCH_NAMES)
     ap.add_argument("--inline", action="store_true",
                     help="run all benches in this process (debug only)")
+    ap.add_argument("--compare", action="store_true",
+                    help="re-run baselined benchmarks into a scratch "
+                         "results dir and diff every numeric leaf "
+                         "against results/BENCH_*.json")
     args = ap.parse_args()
+
+    if args.compare:
+        run_compare(args.only)
+        return
 
     if args.only:
         print("name,us_per_call,derived")

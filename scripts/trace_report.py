@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""Summarize an exported Chrome-trace: stall/overlap/waste per channel.
+
+Usage::
+
+    python scripts/trace_report.py trace.json           # text tables
+    python scripts/trace_report.py trace.json --json    # machine-readable
+
+The input is the JSON written by ``--trace-out`` on
+``python -m repro.launch.serve`` (or ``engine.export_trace(path)``) —
+see docs/observability.md for the schema.  Per channel it reports busy
+time, bytes/ops moved, stall (idle time inside the channel's active
+window) and utilization against the global makespan; per process
+(shard) it reports serial-vs-makespan overlap savings and the
+speculative (prefetch) traffic that was in flight.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.obs.report import format_trace_report, load_trace, trace_report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="per-channel stall/overlap/waste summary of an "
+                    "exported Chrome-trace JSON")
+    ap.add_argument("trace", help="path to a --trace-out export")
+    ap.add_argument("--json", action="store_true",
+                    help="print the report as JSON instead of tables")
+    args = ap.parse_args()
+
+    rep = trace_report(load_trace(args.trace))
+    if args.json:
+        print(json.dumps(rep, indent=2, sort_keys=True))
+    else:
+        print(format_trace_report(rep))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -293,6 +293,15 @@ class SLOController:
         return math.floor(n * frac) > math.floor((n - 1) * frac)
 
     # ================= reporting ======================================
+    def low_bit_fraction(self) -> float:
+        """Fraction of tenants currently actuated below full precision
+        (level > 0) — the scalar the metrics registry samples per step
+        instead of diffing the whole ``levels`` dict."""
+        if not self.levels:
+            return 0.0
+        return sum(1 for lvl in self.levels.values() if lvl > 0) \
+            / len(self.levels)
+
     def summary(self) -> dict:
         return {
             "steps": self._step,
@@ -301,4 +310,5 @@ class SLOController:
             "admit_fracs": dict(self.admit_fracs),
             "n_actions": len(self.actions),
             "actions_tail": self.actions[-8:],
+            "low_bit_fraction": self.low_bit_fraction(),
         }

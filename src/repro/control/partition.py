@@ -257,6 +257,11 @@ class TenantPartitionedCache:
                  CacheStats(**snap).misses)
                 for label, snap in self.epochs]
 
+    def usage(self) -> dict:
+        """Occupancy + lifetime counts, same shape as
+        :meth:`SliceCache.usage` (the metrics-registry view)."""
+        return SliceCache.usage(self)
+
     def clone(self) -> "TenantPartitionedCache":
         import copy
 

@@ -157,6 +157,30 @@ class SliceCache:
                  CacheStats(**snap).misses)
                 for label, snap in self.epochs]
 
+    def usage(self) -> dict:
+        """Point-in-time occupancy plus *lifetime* access counts.
+
+        ``stats`` resets at every epoch boundary (request boundaries
+        under persistent serving), so a monotonic consumer — the
+        metrics registry (repro.obs) — must read the archived epochs
+        folded back in, not the open window alone.
+        """
+        acc = self.stats.accesses
+        miss = self.stats.misses
+        for _, snap in self.epochs:
+            st = CacheStats(**snap)
+            acc += st.accesses
+            miss += st.misses
+        return {
+            "capacity_bytes": self.capacity,
+            "used_bytes": self.used,
+            "n_slices": len(self),
+            "occupancy": self.used / self.capacity if self.capacity
+            else 0.0,
+            "accesses": acc,
+            "misses": miss,
+        }
+
     def clone(self) -> "SliceCache":
         """Deep copy of the full cache state (contents, recency order,
         stats windows, in-flight fills).  Used by the replay simulator to

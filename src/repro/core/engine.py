@@ -314,6 +314,10 @@ class PersistentEngine:
         # when attached, every prefill's and decode step's routing arrays
         # are captured so the run can be replayed offline without a model.
         self.recorder = None
+        # Optional timeline tracer (repro.obs.timeline.TimelineTracer):
+        # when attached via attach_tracer, every ledger charge emits one
+        # attributed TraceEvent (see docs/observability.md).
+        self.tracer = None
 
         # moe pattern positions in order (matches aux stacking order)
         self.moe_positions = [i for i, s in enumerate(cfg.block_pattern)
@@ -594,12 +598,17 @@ class PersistentEngine:
         """
         if active is None:
             active = np.ones(ids.shape, bool)
+        trc = self.tracer
+        if trc is not None:
+            trc.begin_prefill()
         # Layer-order streaming: for each flat moe layer (in execution
         # order), every expert *actively* selected by >=1 token is loaded
         # high-bit.
         for period in range(ids.shape[0]):
             for pidx, pos in enumerate(self.moe_positions):
                 lidx = self.layer_map[(pos, period)]
+                if trc is not None:
+                    trc.set_attr(layer=lidx)
                 a2d = active[period, pidx]                       # [T, k]
                 sel_ids = ids[period, pidx][a2d]
                 sel_gates = gates[period, pidx][a2d]
@@ -634,6 +643,10 @@ class PersistentEngine:
                         segs = [(self.cache, self._ledger_for(lidx, e))]
                     for cache_seg, led in segs:
                         for kind in ("msb", "lsb"):   # prefill is high-bit
+                            if trc is not None:
+                                trc.set_attr(layer=lidx, expert=e,
+                                             slice_kind=kind,
+                                             bits=self._slice_bits(kind))
                             key = SliceKey(lidx, e, kind)
                             nb = self.store.slice_bytes(key)
                             hit = cache_seg.access(key, nb)
@@ -649,6 +662,8 @@ class PersistentEngine:
                 # replicated expert)
                 exec_sh = None if self._n_shards() == 1 else \
                     self._selection_exec_shards(lidx, a2d, ids[period, pidx])
+                if trc is not None:
+                    trc.set_attr(layer=lidx)
                 for sid, led in enumerate(self._shard_ledgers()):
                     t_s = sel_ids.size if exec_sh is None else \
                         int(np.count_nonzero(exec_sh == sid))
@@ -768,6 +783,10 @@ class PersistentEngine:
         """
         if self.recorder is not None:
             self.recorder.on_decode(tr)
+        if self.tracer is not None:
+            # One trace step per charge call, live or replay — the step
+            # index correlates channel events with scheduler spans.
+            self.tracer.begin_step()
         # Placement re-packing runs after the recorder (so the raw trace
         # is captured) and before any charging: it consumes only
         # charge-path state (the hotness tracker + the decode-step
@@ -793,6 +812,37 @@ class PersistentEngine:
             if budgets and hasattr(self.cache, "set_budgets"):
                 self.cache.set_budgets(budgets)
         return charge
+
+    # ---------------------------------------------------- observability
+    def attach_tracer(self, tracer):
+        """Attach a :class:`repro.obs.timeline.TimelineTracer` (or
+        ``None`` to detach): every subsequent ledger charge emits one
+        attributed timeline event.  Because events hang off the shared
+        charge path, a replay of a recorded trace through
+        :class:`repro.sim.replay.ReplayEngine` emits the identical
+        stream.  Returns the tracer for chaining."""
+        self.tracer = tracer
+        led = self.ledger
+        if isinstance(led, ShardedCostLedger):
+            led.attach_tracer(tracer)
+        else:
+            led.tracer = tracer
+        return tracer
+
+    def export_trace(self, path: str) -> dict:
+        """Write the attached tracer's capture as Chrome-trace JSON
+        (loadable in Perfetto); returns the exported dict."""
+        if self.tracer is None:
+            raise ValueError(
+                "no tracer attached; call attach_tracer() before the run")
+        from repro.obs.timeline import export_chrome_trace
+        return export_chrome_trace(self.tracer, path)
+
+    def _slice_bits(self, kind: str) -> int:
+        """Nominal bit-width a slice contributes (trace attribution)."""
+        mat = self.ecfg.mat
+        return mat.low_bits if kind == "msb" \
+            else mat.high_bits - mat.low_bits
 
     # -------------------------------------------------- shard routing bits
     # All four helpers dispatch on the *ledger object*, not on the
@@ -963,8 +1013,14 @@ class PersistentEngine:
             return
         moves = self.cache.apply_placement(new_map)
         self.placement = new_map
-        for _key, nb, _frm, _to in moves:
+        trc = self.tracer
+        for key, nb, _frm, _to in moves:
+            if trc is not None:
+                trc.set_attr(layer=key.layer, expert=key.expert,
+                             slice_kind=key.kind)
             self.ledger.migrate(nb)
+        if trc is not None and moves:
+            trc.set_attr()
         self.migration_events.append({
             "step": self._decode_steps,
             "moved": len(moves),
@@ -1137,6 +1193,10 @@ class PersistentEngine:
             nb = self._slice_nbytes(key)
             if key in self.cache or nb > self._segment_capacity(key):
                 continue
+            if self.tracer is not None:
+                self.tracer.set_attr(layer=key.layer, expert=key.expert,
+                                     slice_kind=key.kind,
+                                     bits=self._slice_bits(key.kind))
             led = self._ledger_for(key.layer, key.expert)
             if timeline:
                 # Background-priority lane: speculative fills never
@@ -1175,6 +1235,10 @@ class PersistentEngine:
             nb = self._slice_nbytes(key)
             if key in self.cache or nb > self._segment_capacity(key):
                 continue
+            if self.tracer is not None:
+                self.tracer.set_attr(layer=key.layer, expert=key.expert,
+                                     slice_kind=key.kind,
+                                     bits=self._slice_bits(key.kind))
             _, end = self._ledger_for(key.layer,
                                       key.expert).prefetch_fill_at(None, nb)
             self.cache.insert(key, nb)
@@ -1250,6 +1314,10 @@ class PersistentEngine:
         """Serialized-issue slice demand + matmul for one expert on one
         cache segment.  Returns whether any of its slices missed."""
         missed = False
+        trc = self.tracer
+        if trc is not None:
+            trc.set_attr(layer=lidx, expert=e, slice_kind="msb",
+                         bits=self._slice_bits("msb"))
         key = SliceKey(lidx, e, "msb")
         nb = self._slice_nbytes(key)
         hit = cache_seg.access(key, nb)
@@ -1266,6 +1334,9 @@ class PersistentEngine:
         wants_lsb = e in lsb_wanted and not self.ecfg.fused_slices
         lsb_available = False
         if wants_lsb:
+            if trc is not None:
+                trc.set_attr(layer=lidx, expert=e, slice_kind="lsb",
+                             bits=self._slice_bits("lsb"))
             lkey = SliceKey(lidx, e, "lsb")
             lnb = self.store.slice_bytes(lkey)
             lhit = cache_seg.access(
@@ -1284,6 +1355,8 @@ class PersistentEngine:
                 if lhit or lkey in cache_seg:
                     led.dram_read(lnb)
                 lsb_available = True
+        if trc is not None:
+            trc.set_attr(layer=lidx, expert=e)
         led.matmul(
             ntok, self.cfg.d_model,
             self.expert_macs_per_token // self.cfg.d_model,
@@ -1300,6 +1373,10 @@ class PersistentEngine:
         experts run home-local and never pass one).  Returns whether any
         of its slices missed."""
         missed = False
+        trc = self.tracer
+        if trc is not None:
+            trc.set_attr(layer=lidx, expert=e, slice_kind="msb",
+                         bits=self._slice_bits("msb"))
         key = SliceKey(lidx, e, "msb")
         nb = self._slice_nbytes(key)
         hit = cache_seg.access(key, nb)
@@ -1320,6 +1397,9 @@ class PersistentEngine:
         wants_lsb = e in lsb_wanted and not self.ecfg.fused_slices
         lsb_available = False
         if wants_lsb:
+            if trc is not None:
+                trc.set_attr(layer=lidx, expert=e, slice_kind="lsb",
+                             bits=self._slice_bits("lsb"))
             lkey = SliceKey(lidx, e, "lsb")
             lnb = self.store.slice_bytes(lkey)
             lhit = cache_seg.access(
@@ -1343,6 +1423,8 @@ class PersistentEngine:
                         _, t_lsb = led.flash_stream_at(t_route, lnb)
                     t_data = max(t_data, t_lsb)
                     lsb_available = True
+        if trc is not None:
+            trc.set_attr(layer=lidx, expert=e)
         led.matmul_at(
             t_data if t_disp is None else max(t_data, t_disp),
             ntok, self.cfg.d_model,
@@ -1353,6 +1435,7 @@ class PersistentEngine:
     # -------------------------------------------- serialized (sync) replay
     def _charge_sync(self, tr: "_StepTrace") -> StepCharge:
         base = self.ledger.snapshot()
+        trc = self.tracer
         pf = self.prefetcher
         pf_req = pf is not None and pf.kind == "request"
         prev_used = None
@@ -1379,6 +1462,10 @@ class PersistentEngine:
                         nb = self._slice_nbytes(key)
                         if key not in self.cache \
                                 and nb <= self._segment_capacity(key):
+                            if trc is not None:
+                                trc.set_attr(layer=lidx, expert=int(e),
+                                             slice_kind="msb",
+                                             bits=self._slice_bits("msb"))
                             self._ledger_for(lidx, int(e)).miss_fill(
                                 nb, prefetch=True)
                             self.cache.insert(key, nb)
@@ -1390,6 +1477,8 @@ class PersistentEngine:
                 # All-to-all token dispatch to remote experts (EP only).
                 nb_a2a, _ = self._layer_a2a_demand(tr, period, pidx, lidx)
                 if nb_a2a > 0:
+                    if trc is not None:
+                        trc.set_attr(layer=lidx)
                     self.ledger.ici_transfer(nb_a2a)
                 if pf_req:
                     # Serialized fills land instantly, so a correct
@@ -1459,6 +1548,8 @@ class PersistentEngine:
 
     def _charge_resident_sync(self, tr: "_StepTrace") -> None:
         n = self._n_shards()
+        if self.tracer is not None:
+            self.tracer.set_attr(bits=8)   # shared (non-expert) weights
         for sid, led in enumerate(self._shard_ledgers()):
             share = self._resident_token_share(tr, sid)
             if n == 1:
@@ -1503,6 +1594,7 @@ class PersistentEngine:
         both its slice data and the dispatched activations.
         """
         base = self.ledger.snapshot()
+        trc = self.tracer
         t_step = self._compute_frontier()
         pf = self.prefetcher
         pf_req = pf is not None and pf.kind == "request"
@@ -1528,6 +1620,8 @@ class PersistentEngine:
                     tr, period, pidx, lidx)
                 t_disp = t_route
                 if nb_a2a > 0:
+                    if trc is not None:
+                        trc.set_attr(layer=lidx)
                     _, t_disp = self.ledger.ici_transfer_at(t_route,
                                                             nb_a2a)
 
@@ -1610,6 +1704,10 @@ class PersistentEngine:
                             if key in self.cache \
                                     or nb > self._segment_capacity(key):
                                 continue
+                            if trc is not None:
+                                trc.set_attr(layer=lidx + 1, expert=int(e),
+                                             slice_kind="msb",
+                                             bits=self._slice_bits("msb"))
                             _, end = self._ledger_for(lidx + 1, int(e)).fill_at(
                                 t_route, nb, prefetch=True)
                             self.cache.insert(key, nb)
@@ -1630,6 +1728,8 @@ class PersistentEngine:
         # them.  Replicated per shard, tokens split data-parallel; a
         # shard with no tokens homed on it runs no dense pass this step.
         n_sh = self._n_shards()
+        if trc is not None:
+            trc.set_attr(bits=8)   # shared (non-expert) weights
         for sid, led in enumerate(self._shard_ledgers()):
             share = self._resident_token_share(tr, sid)
             if n_sh == 1:

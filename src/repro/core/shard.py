@@ -403,6 +403,21 @@ class ShardedSliceCache:
             out.append((acc, miss))
         return out
 
+    def usage(self) -> dict:
+        """Shard-summed occupancy + lifetime counts, same shape as
+        :meth:`SliceCache.usage` (the metrics-registry view)."""
+        rows = [s.usage() for s in self.shards]
+        cap = sum(r["capacity_bytes"] for r in rows)
+        used = sum(r["used_bytes"] for r in rows)
+        return {
+            "capacity_bytes": cap,
+            "used_bytes": used,
+            "n_slices": sum(r["n_slices"] for r in rows),
+            "occupancy": used / cap if cap else 0.0,
+            "accesses": sum(r["accesses"] for r in rows),
+            "misses": sum(r["misses"] for r in rows),
+        }
+
     def clone(self) -> "ShardedSliceCache":
         import copy
 

@@ -157,6 +157,14 @@ class CostLedger:
     migration_bytes: float = 0.0
     n_migrations: int = 0
 
+    # optional observability sink (repro.obs.timeline.TimelineTracer):
+    # when attached, every charge emits exactly one TraceEvent after its
+    # channel span is issued.  shard_id stamps which shard's channels
+    # these are (-1 = the shared interconnect sub-ledger).  Detached on
+    # clone() — forked hypothetical timelines are untraced.
+    tracer: Optional[object] = None
+    shard_id: int = 0
+
     # ------------------------------------------------------------ timeline
     @property
     def now(self) -> float:
@@ -195,7 +203,12 @@ class CostLedger:
         if prefetch:
             self.n_prefetch_fills += 1
             self.prefetch_flash_bytes += nbytes
-        return self.flash_ch.issue(t_ready, dur)
+        span = self.flash_ch.issue(t_ready, dur)
+        if self.tracer is not None:
+            self.tracer.emit("prefetch_fill" if prefetch else "fill",
+                             "flash", self.shard_id, span[0], span[1],
+                             nbytes=nbytes)
+        return span
 
     def prefetch_fill_at(self, t_ready: Optional[float],
                          nbytes: float) -> Tuple[float, float]:
@@ -233,8 +246,12 @@ class CostLedger:
         self.dram_energy_j += sysspec.dram.transfer_energy_j(nbytes)
         self.n_prefetch_fills += 1
         self.prefetch_flash_bytes += nbytes
-        return self.flash_bg_ch.issue(
+        span = self.flash_bg_ch.issue(
             max(t_ready, self.flash_ch.busy_until), dur)
+        if self.tracer is not None:
+            self.tracer.emit("prefetch_fill", "flash_bg", self.shard_id,
+                             span[0], span[1], nbytes=nbytes)
+        return span
 
     def flash_stream_at(self, t_ready: float,
                         nbytes: float) -> Tuple[float, float]:
@@ -251,7 +268,11 @@ class CostLedger:
         dur = sysspec.dram.transfer_latency_s(nbytes)
         self.dram_latency_s += dur
         self.dram_energy_j += sysspec.dram.transfer_energy_j(nbytes)
-        return self.dram_ch.issue(t_ready, dur)
+        span = self.dram_ch.issue(t_ready, dur)
+        if self.tracer is not None:
+            self.tracer.emit("dram_read", "dram", self.shard_id,
+                             span[0], span[1], nbytes=nbytes)
+        return span
 
     def matmul_at(self, t_ready: float, tokens: int, d_in: int, d_out: int,
                   bits: int) -> Tuple[float, float]:
@@ -270,7 +291,25 @@ class CostLedger:
             sysspec.compute.energy_j_per_op * ops * (min(bits, native) / native)
         )
         self.io_stall_s += max(0.0, t_ready - self.compute_ch.busy_until)
-        return self.compute_ch.issue(t_ready, dur)
+        span = self.compute_ch.issue(t_ready, dur)
+        if self.tracer is not None:
+            self.tracer.emit("matmul", "compute", self.shard_id,
+                             span[0], span[1], ops=ops, bits=bits)
+        return span
+
+    def _ici_issue(self, t_ready: float, nbytes: float,
+                   kind: str) -> Tuple[float, float]:
+        tier = self.system.interconnect or self.system.dram
+        self.ici_bytes += nbytes
+        self.n_ici_transfers += 1
+        dur = tier.transfer_latency_s(nbytes)
+        self.ici_latency_s += dur
+        self.ici_energy_j += tier.transfer_energy_j(nbytes)
+        span = self.ici_ch.issue(t_ready, dur)
+        if self.tracer is not None:
+            self.tracer.emit(kind, "ici", self.shard_id,
+                             span[0], span[1], nbytes=nbytes)
+        return span
 
     def ici_transfer_at(self, t_ready: float,
                         nbytes: float) -> Tuple[float, float]:
@@ -278,13 +317,7 @@ class CostLedger:
         on the interconnect channel.  Uses the system's ``interconnect``
         tier; falls back to the DRAM tier's rates when the profile
         defines none (single-device profiles never issue these)."""
-        tier = self.system.interconnect or self.system.dram
-        self.ici_bytes += nbytes
-        self.n_ici_transfers += 1
-        dur = tier.transfer_latency_s(nbytes)
-        self.ici_latency_s += dur
-        self.ici_energy_j += tier.transfer_energy_j(nbytes)
-        return self.ici_ch.issue(t_ready, dur)
+        return self._ici_issue(t_ready, nbytes, "a2a")
 
     def ici_transfer(self, nbytes: float) -> None:
         """Serialized-issue interconnect transfer (blocking)."""
@@ -298,7 +331,7 @@ class CostLedger:
         cost."""
         self.migration_bytes += nbytes
         self.n_migrations += 1
-        return self.ici_transfer_at(t_ready, nbytes)
+        return self._ici_issue(t_ready, nbytes, "migrate")
 
     def migrate(self, nbytes: float) -> None:
         """Serialized-issue migration transfer (blocking)."""
@@ -402,10 +435,16 @@ class CostLedger:
 
         Lets the replay simulator fork a timeline mid-trace: the clone
         continues issuing events independently of the original, so two
-        futures of the same simulated past can be compared."""
+        futures of the same simulated past can be compared.  Any
+        attached tracer stays with the original — forked hypothetical
+        timelines must not interleave events into a real capture."""
         import copy
 
-        return copy.deepcopy(self)
+        tracer, self.tracer = self.tracer, None
+        try:
+            return copy.deepcopy(self)
+        finally:
+            self.tracer = tracer
 
     def delta_since(self, prev: Optional[dict]) -> dict:
         cur = self.snapshot()
@@ -464,11 +503,11 @@ class ShardedCostLedger:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.system = system
         self.n_shards = int(n_shards)
-        self.shards = [CostLedger(system=system)
-                       for _ in range(self.n_shards)]
+        self.shards = [CostLedger(system=system, shard_id=sid)
+                       for sid in range(self.n_shards)]
         # Dedicated sub-ledger for the shared interconnect channel; its
         # flash/dram/compute channels never see an event.
-        self.ici = CostLedger(system=system)
+        self.ici = CostLedger(system=system, shard_id=-1)
 
     # ------------------------------------------------------------ routing
     def shard_for(self, shard: int) -> CostLedger:
@@ -485,6 +524,21 @@ class ShardedCostLedger:
 
     def migrate(self, nbytes: float) -> None:
         self.ici.migrate(nbytes)
+
+    # ------------------------------------------------------ observability
+    @property
+    def tracer(self):
+        return self.shards[0].tracer
+
+    def attach_tracer(self, tracer) -> None:
+        """Point every shard ledger (and the interconnect sub-ledger) at
+        one shared event sink; shard ids stamp the per-shard channel
+        tracks, the interconnect gets shard id -1.  ``None`` detaches."""
+        for sid, led in enumerate(self.shards):
+            led.tracer = tracer
+            led.shard_id = sid
+        self.ici.tracer = tracer
+        self.ici.shard_id = -1
 
     # ----------------------------------------------------------- timeline
     @property
@@ -565,7 +619,14 @@ class ShardedCostLedger:
     def clone(self) -> "ShardedCostLedger":
         import copy
 
-        return copy.deepcopy(self)
+        tracer = self.tracer
+        self.attach_tracer(None)
+        try:
+            new = copy.deepcopy(self)
+        finally:
+            if tracer is not None:
+                self.attach_tracer(tracer)
+        return new
 
     def reset(self) -> None:
         for led in self.shards:

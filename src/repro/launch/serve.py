@@ -14,6 +14,15 @@ Trace tooling (repro.sim):
   engine knobs (``--cache-mb``, ``--miss-target``, ``--warmup``,
   ``--slice-mode``, ``--high-bits``/``--low-bits``, ``--routing``,
   ``--theta``) and print the simulated report as JSON.
+
+Observability (repro.obs, see docs/observability.md):
+
+* ``--trace-out PATH`` — export the charge-path timeline as
+  Chrome-trace JSON (per-shard channel tracks + request spans); open
+  in Perfetto.  Works on both the live and ``--replay-trace`` paths,
+  and the two exports are event-identical for the same trace.
+* ``--metrics-out PATH`` / ``--prom-out PATH`` — per-decode-step
+  metrics registry time series (JSONL) / final Prometheus text.
 """
 
 from __future__ import annotations
@@ -127,12 +136,21 @@ def run_replay(args) -> None:
     config; everything else replays as recorded — so a bare
     ``--replay-trace t.npz`` reproduces the live run exactly.
     """
-    from repro.sim import Trace, replay_trace
+    from repro.sim import Trace
+    from repro.sim.replay import ReplayEngine
 
     trace = Trace.load(args.replay_trace)
     overrides = {key: v for key, v in cli_engine_knobs(args).items()
                  if v is not None}
-    report = replay_trace(trace, **overrides)
+    eng = ReplayEngine(trace.meta, **overrides)
+    if args.trace_out:
+        from repro.obs import TimelineTracer
+
+        eng.attach_tracer(TimelineTracer())
+    eng.consume_all(trace.events)
+    report = eng.finish()
+    if args.trace_out:
+        eng.export_trace(args.trace_out)
     out = {
         "trace": args.replay_trace,
         "model": trace.meta.model,
@@ -143,6 +161,8 @@ def run_replay(args) -> None:
             {"epoch": label, "miss_rate": round(m, 6)}
             for label, m in report.epoch_miss],
     }
+    if args.trace_out:
+        out["trace_out"] = args.trace_out
     print(json.dumps(out, indent=2))
 
 
@@ -229,6 +249,18 @@ def main():
                     help="model-free: replay a recorded trace under this "
                          "command line's engine knobs and print the "
                          "simulated report (no model is built)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the run's charge-path timeline as "
+                         "Chrome-trace JSON (open in Perfetto / "
+                         "chrome://tracing); works for live serving and "
+                         "--replay-trace")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the per-decode-step metrics registry "
+                         "time series as JSONL (live serving only)")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write the final metrics registry state in "
+                         "Prometheus text exposition format (live "
+                         "serving only)")
     args = ap.parse_args()
 
     if args.replay_trace:
@@ -255,6 +287,17 @@ def main():
         from repro.sim import TraceRecorder
 
         recorder = server.attach_recorder(TraceRecorder())
+
+    tracer = None
+    if args.trace_out:
+        from repro.obs import TimelineTracer
+
+        tracer = server.attach_tracer(TimelineTracer())
+    metrics = None
+    if args.metrics_out or args.prom_out:
+        from repro.obs import MetricsRegistry
+
+        metrics = server.attach_metrics(MetricsRegistry())
 
     rng = np.random.default_rng(args.seed)
     for rid in range(args.n_requests):
@@ -312,6 +355,22 @@ def main():
         print(json.dumps({"recorded_trace": path,
                           "n_prefills": tr.n_prefills,
                           "n_decode_steps": tr.n_decode_steps}))
+
+    if tracer is not None:
+        data = server.export_trace(args.trace_out)
+        print(json.dumps({"trace_out": args.trace_out,
+                          "n_trace_events": len(tracer.events),
+                          "n_spans": len(tracer.spans),
+                          "n_json_events": len(data["traceEvents"])}))
+    if metrics is not None:
+        if args.metrics_out:
+            metrics.to_jsonl(args.metrics_out)
+            print(json.dumps({"metrics_out": args.metrics_out,
+                              "n_samples": len(metrics.series)}))
+        if args.prom_out:
+            with open(args.prom_out, "w") as f:
+                f.write(metrics.prometheus_text())
+            print(json.dumps({"prom_out": args.prom_out}))
 
 
 if __name__ == "__main__":

@@ -104,6 +104,7 @@ class ActiveSeq:
     ledger_base: Optional[dict] = None # snapshot at decode start
     wall_prefill_s: float = 0.0
     wall_decode_t0: float = 0.0
+    prefill_end_t: float = 0.0         # sim clock when prefill settled
 
 
 class ContinuousBatchingScheduler:
@@ -142,6 +143,17 @@ class ContinuousBatchingScheduler:
         for chaining.
         """
         return recorder.attach(self.engine)
+
+    def attach_metrics(self, registry):
+        """Sample a :class:`repro.obs.metrics.MetricsRegistry` per decode
+        step: registers a :class:`~repro.obs.metrics.MetricsSampler` as a
+        telemetry listener (the same mechanism the SLO controller rides),
+        folding each StepRecord plus engine-side state — cache occupancy,
+        ledger traffic, prefetch outcomes, controller actuation — into
+        one catalog.  Returns the registry for chaining."""
+        from repro.obs.metrics import MetricsSampler
+        self.telemetry.add_listener(MetricsSampler(registry, self.engine))
+        return registry
 
     # --------------------------------------------------------------- intake
     def servable(self, req: Request) -> bool:
@@ -243,6 +255,17 @@ class ContinuousBatchingScheduler:
                 request_id=req.request_id, tenant=req.tenant)
         wall = time.perf_counter() - t0
         self._advance_clock()
+        trc = getattr(self.engine, "tracer", None)
+        if trc is not None:
+            # Admission spans on the request's own track, in the same
+            # sim-clock coordinates as the channel events.
+            track = f"req{req.request_id}"
+            trc.span("queue", track, record.arrival_t, record.admit_t,
+                     request=req.request_id, tenant=req.tenant,
+                     queue_delay_s=record.admit_t - record.arrival_t)
+            trc.span("prefill", track, record.admit_t, self.sim_time,
+                     request=req.request_id, slot=slot,
+                     prompt_len=len(prompt))
 
         seq = ActiveSeq(
             slot=slot, request=req, record=record,
@@ -250,7 +273,8 @@ class ContinuousBatchingScheduler:
             last_token=int(jnp.argmax(logits, -1)[0]),
             ledger_base=self.engine.ledger.snapshot(),
             wall_prefill_s=wall,
-            wall_decode_t0=time.perf_counter())
+            wall_decode_t0=time.perf_counter(),
+            prefill_end_t=self.sim_time)
         self.batch_cache = self.engine.install_slot(
             self.batch_cache, kv_cache, slot)
         self.slots[slot] = seq
@@ -287,6 +311,7 @@ class ContinuousBatchingScheduler:
         alphas = [seq.alpha for seq in active]
         alpha = float(np.mean(alphas)) if alphas else 0.0
 
+        step_t0 = self.sim_time
         logits, self.batch_cache, charge = self.engine.decode_batch(
             jnp.asarray(tokens), self.batch_cache,
             alpha=alpha, slot_active=slot_mask,
@@ -294,6 +319,14 @@ class ContinuousBatchingScheduler:
         next_tokens = np.asarray(
             jnp.argmax(logits, axis=-1).astype(jnp.int32))
         step_latency = self._advance_clock()
+        trc = getattr(self.engine, "tracer", None)
+        if trc is not None:
+            # One span per batched decode step on the shared steps
+            # track; trc.step is the engine's step index, the id every
+            # channel event of this step carries.
+            trc.span("decode_step", "steps", step_t0, self.sim_time,
+                     step=trc.step, n_active=len(active),
+                     miss_rate=charge.miss_rate)
         self.telemetry.on_step(StepRecord(
             t=self.sim_time, n_active=len(active),
             miss_rate=charge.miss_rate, latency_s=step_latency,
@@ -325,6 +358,16 @@ class ContinuousBatchingScheduler:
 
     def _retire(self, seq: ActiveSeq) -> None:
         seq.record.finish_t = self.sim_time
+        trc = getattr(self.engine, "tracer", None)
+        if trc is not None:
+            rid = seq.request.request_id
+            track = f"req{rid}"
+            trc.span("decode", track, seq.prefill_end_t, self.sim_time,
+                     request=rid, n_tokens=len(seq.generated),
+                     ttft_s=seq.record.ttft,
+                     queue_delay_s=seq.record.queue_delay)
+            trc.span("retire", track, self.sim_time, self.sim_time,
+                     request=rid)
         # Retirement fires on the step that produced EOS, so the token
         # list never holds tokens past it — no truncation scan needed.
         toks = np.asarray(seq.generated, np.int32)

@@ -77,9 +77,44 @@ class SliceMoEServer:
         self.completions: List[Completion] = []
         self._engine: Optional[PersistentEngine] = None
         self._recorder = None
+        self._tracer = None
+        self._metrics = None
+        # The scheduler behind the most recent run() (telemetry access).
+        self.last_scheduler = None
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def attach_tracer(self, tracer):
+        """Capture the engine's charge-path timeline (persistent MoE
+        serving only, like :meth:`attach_recorder`).  The tracer wires
+        into the shared engine as soon as it exists; export with
+        ``server.export_trace(path)`` after :meth:`run`."""
+        if not (self._moe_serving() and self.persistent):
+            raise ValueError("timeline tracing requires persistent MoE "
+                             "serving (has_moe + engine_cfg + "
+                             "persistent=True)")
+        self._tracer = tracer
+        if self._engine is not None:
+            self._engine.attach_tracer(tracer)
+        return tracer
+
+    def export_trace(self, path: str) -> dict:
+        if self._engine is None or self._tracer is None:
+            raise ValueError("no traced run: call attach_tracer() "
+                             "before run()")
+        return self._engine.export_trace(path)
+
+    def attach_metrics(self, registry):
+        """Sample the metrics registry per decode step (persistent MoE
+        serving only).  The sampler wires into the scheduler each
+        :meth:`run` builds."""
+        if not (self._moe_serving() and self.persistent):
+            raise ValueError("metrics sampling requires persistent MoE "
+                             "serving (has_moe + engine_cfg + "
+                             "persistent=True)")
+        self._metrics = registry
+        return registry
 
     def attach_recorder(self, recorder):
         """Record the served traffic's routing trace (persistent MoE
@@ -112,6 +147,8 @@ class SliceMoEServer:
             self._engine = PersistentEngine(self.cfg, self.params, ecfg)
             if self._recorder is not None:
                 self._recorder.attach(self._engine)
+            if self._tracer is not None:
+                self._engine.attach_tracer(self._tracer)
         return self._engine
 
     def run(self) -> List[Completion]:
@@ -120,6 +157,9 @@ class SliceMoEServer:
             sched = ContinuousBatchingScheduler(
                 self._shared_engine(),
                 SchedulerConfig(max_batch=1, max_queue=len(self.queue) + 1))
+            if self._metrics is not None:
+                sched.attach_metrics(self._metrics)
+            self.last_scheduler = sched
             # Validate the whole queue before draining any of it: raising
             # mid-drain would strand already-dequeued requests.
             bad = [r for r in self.queue if not sched.servable(r)]

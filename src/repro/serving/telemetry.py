@@ -19,20 +19,33 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import numbers
 from typing import Dict, List, Optional
 
 
 def percentile(values: List[float], p: float) -> float:
-    """Nearest-rank percentile; p in [0, 100].  Empty input -> nan."""
-    if not values:
-        return float("nan")
+    """Nearest-rank percentile; p in [0, 100].
+
+    Well-defined on every input the serving stack can produce:
+
+    * empty input -> ``nan`` (never an exception — a summary over zero
+      completed requests is still a summary);
+    * a single sample is every percentile of itself (p=0 through 100);
+    * accepts any sized iterable, including numpy arrays (no reliance
+      on truthiness, which is ambiguous for ndarrays) and numpy
+      scalars inside (result is always a builtin ``float``);
+    * p outside [0, 100] raises ``ValueError`` even for empty input —
+      a bad percentile is a caller bug, not a data condition.
+    """
     if not 0 <= p <= 100:
         raise ValueError(f"percentile {p} out of range")
-    ordered = sorted(values)
+    ordered = sorted(float(v) for v in values)
+    if len(ordered) == 0:
+        return float("nan")
     if p == 0:
-        return float(ordered[0])
+        return ordered[0]
     rank = math.ceil(p / 100.0 * len(ordered))
-    return float(ordered[rank - 1])
+    return ordered[rank - 1]
 
 
 @dataclasses.dataclass
@@ -315,7 +328,23 @@ class FleetTelemetry:
 
 
 def format_summary(s: dict, title: str = "serving summary") -> str:
+    """Render a summary dict as an indented text block.
+
+    Handles everything :meth:`FleetTelemetry.summary` can emit: nested
+    dicts, lists of dicts (``per_shard`` rows get an indexed sub-block
+    each), numpy scalars (formatted as numbers, not
+    ``np.float32(...)`` reprs), ``nan``, and empty containers.
+    """
     lines = [f"--- {title} ---"]
+
+    def _scalar(v) -> str:
+        if isinstance(v, bool):
+            return str(v)
+        if isinstance(v, numbers.Integral):
+            return str(int(v))
+        if isinstance(v, numbers.Real):
+            return f"{float(v):.6g}"
+        return str(v)
 
     def _emit(d: dict, indent: int) -> None:
         pad = " " * indent
@@ -323,10 +352,20 @@ def format_summary(s: dict, title: str = "serving summary") -> str:
             if isinstance(v, dict):
                 lines.append(f"{pad}{k:>26}:")
                 _emit(v, indent + 2)
-            elif isinstance(v, float):
-                lines.append(f"{pad}{k:>26}: {v:.6g}")
+            elif isinstance(v, (list, tuple)) and \
+                    any(isinstance(e, dict) for e in v):
+                lines.append(f"{pad}{k:>26}:")
+                for i, e in enumerate(v):
+                    if isinstance(e, dict):
+                        lines.append(f"{pad}  {f'[{i}]':>26}:")
+                        _emit(e, indent + 4)
+                    else:
+                        lines.append(f"{pad}  {f'[{i}]':>26}: {_scalar(e)}")
+            elif isinstance(v, (list, tuple)):
+                body = ", ".join(_scalar(e) for e in v)
+                lines.append(f"{pad}{k:>26}: [{body}]")
             else:
-                lines.append(f"{pad}{k:>26}: {v}")
+                lines.append(f"{pad}{k:>26}: {_scalar(v)}")
 
     _emit(s, 2)
     return "\n".join(lines)

@@ -1,0 +1,495 @@
+"""Observability subsystem (repro.obs): timeline tracing, Chrome-trace
+export, the metrics registry, the trace report, and the telemetry
+schema/percentile regressions.
+
+Fast tests drive the tracer through model-free synthetic replays (the
+charge path is shared with the live engine, so the engine-side emit
+sites are exercised without jit); the live≡replay equivalence gate
+(real model + jit) is marked slow like the other serving integrations.
+"""
+
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.hw.energy import ShardedCostLedger
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
+                       MetricsSampler, TimelineTracer, TraceEvent,
+                       chrome_trace, events_equal, export_chrome_trace,
+                       first_divergence, format_trace_report, load_trace,
+                       trace_report)
+from repro.obs.timeline import CHANNEL_TIDS, INTERCONNECT_PID, REQUESTS_PID
+from repro.serving.telemetry import (FleetTelemetry, RequestRecord,
+                                     StepRecord, format_summary, percentile)
+from repro.sim import SyntheticSpec, zipf_trace
+from repro.sim.replay import ReplayEngine
+
+CH_ATTR = {"flash": "flash_ch", "flash_bg": "flash_bg_ch",
+           "dram": "dram_ch", "compute": "compute_ch", "ici": "ici_ch"}
+
+
+def _traced_replay(**overrides):
+    """Synthetic trace -> traced replay.  Returns (engine, tracer)."""
+    tr = zipf_trace(SyntheticSpec(), n_requests=3, prompt_len=8,
+                    decode_steps=6, zipf_a=1.2, seed=0,
+                    engine_overrides=overrides)
+    eng = ReplayEngine(tr.meta)
+    eng.attach_tracer(TimelineTracer())
+    eng.consume_all(tr.events)
+    eng.finish()
+    return eng, eng.tracer
+
+
+def _shard_ledgers(ledger):
+    if isinstance(ledger, ShardedCostLedger):
+        out = {sid: led for sid, led in enumerate(ledger.shards)}
+        out[-1] = ledger.ici
+        return out
+    return {0: ledger}
+
+
+# ==========================================================================
+# Trace capture: conservation + makespan gates
+# ==========================================================================
+CONFIGS = [
+    {},                                              # serialized, ep=1
+    {"async_io": True, "prefetch_top_m": 2},         # async + prefetch
+    {"async_io": True, "ep_shards": 2},              # expert parallel
+    {"async_io": True, "ep_shards": 2, "placement": "hotness",
+     "placement_period": 4},                         # with migration
+]
+
+
+@pytest.mark.parametrize("over", CONFIGS)
+def test_event_conservation(over):
+    """Every ledger charge appears exactly once in the capture."""
+    eng, trc = _traced_replay(**over)
+    snap = eng.ledger.snapshot()
+    kinds = {}
+    for e in trc.events:
+        kinds[e.kind] = kinds.get(e.kind, 0) + 1
+    assert kinds.get("fill", 0) + kinds.get("prefetch_fill", 0) \
+        == snap["n_flash_transfers"]
+    assert kinds.get("dram_read", 0) == snap["n_dram_transfers"]
+    assert kinds.get("a2a", 0) + kinds.get("migrate", 0) \
+        == snap["n_ici_transfers"]
+    fill_bytes = sum(e.nbytes for e in trc.events
+                     if e.kind in ("fill", "prefetch_fill"))
+    assert fill_bytes == pytest.approx(snap["flash_bytes"], rel=1e-9)
+    assert sum(e.nbytes for e in trc.events if e.kind == "dram_read") \
+        == pytest.approx(snap["dram_bytes"], rel=1e-9)
+    assert sum(e.ops for e in trc.events if e.kind == "matmul") \
+        == pytest.approx(snap["compute_ops"], rel=1e-9)
+
+
+@pytest.mark.parametrize("over", CONFIGS)
+def test_makespan_matches_ledger(over):
+    """Tracer makespan == ledger latency; every traced channel's last
+    event end == that channel's busy_until clock (rtol 1e-6 gate)."""
+    eng, trc = _traced_replay(**over)
+    assert trc.makespan() == pytest.approx(
+        eng.ledger.total_latency_s, rel=1e-6)
+    leds = _shard_ledgers(eng.ledger)
+    for (shard, channel), end in trc.channel_makespans().items():
+        ch = getattr(leds[shard], CH_ATTR[channel])
+        assert end == pytest.approx(ch.busy_until, rel=1e-6), \
+            (shard, channel)
+
+
+def test_ep2_shard_tracks_and_a2a():
+    """ep=2 capture has both shard tracks plus the interconnect, and
+    dispatch traffic lands on the ici channel of shard -1."""
+    _, trc = _traced_replay(async_io=True, ep_shards=2)
+    shards = {e.shard for e in trc.events}
+    assert shards == {-1, 0, 1}
+    a2a = [e for e in trc.events if e.kind == "a2a"]
+    assert a2a and all(e.shard == -1 and e.channel == "ici" for e in a2a)
+
+
+def test_migration_events_distinct_from_a2a():
+    eng, trc = _traced_replay(async_io=True, ep_shards=2,
+                              placement="hotness", placement_period=4)
+    mig = [e for e in trc.events if e.kind == "migrate"]
+    assert len(mig) == eng.ledger.snapshot()["n_migrations"]
+    if mig:   # migration bytes attributed to the moved slice
+        assert all(e.layer >= 0 and e.expert >= 0 and e.slice_kind
+                   for e in mig)
+
+
+def test_prefetch_lane_distinct():
+    """Speculative fills ride the background lane under async_io —
+    visually distinct from demand fills in the export."""
+    _, trc = _traced_replay(async_io=True, prefetch_top_m=2)
+    pf = [e for e in trc.events if e.kind == "prefetch_fill"]
+    demand = [e for e in trc.events if e.kind == "fill"]
+    assert pf and demand
+    assert all(e.channel == "flash_bg" for e in pf)
+    assert all(e.channel == "flash" for e in demand)
+    # the demand-channel makespan ignores the background lane
+    assert trc.makespan() == max(e.end for e in trc.events
+                                 if e.channel != "flash_bg")
+
+
+def test_attribution_stamped():
+    _, trc = _traced_replay(async_io=True)
+    slices = [e for e in trc.events
+              if e.kind in ("fill", "dram_read") and e.layer >= 0]
+    assert slices
+    assert all(e.slice_kind in ("msb", "lsb") for e in slices)
+    assert all(e.bits > 0 for e in slices)
+    decode = [e for e in trc.events if e.phase == "decode"]
+    prefill = [e for e in trc.events if e.phase == "prefill"]
+    assert decode and prefill
+    assert all(e.step >= 0 for e in decode)
+    steps = sorted({e.step for e in decode})
+    assert steps == list(range(len(steps)))   # contiguous step ids
+
+
+# ==========================================================================
+# Replay determinism (the fast half of the live≡replay gate)
+# ==========================================================================
+def test_replay_replay_equivalence():
+    _, a = _traced_replay(async_io=True, ep_shards=2)
+    _, b = _traced_replay(async_io=True, ep_shards=2)
+    assert events_equal(a.events, b.events)
+    assert first_divergence(a.events, b.events) is None
+
+
+def test_divergence_detected():
+    _, a = _traced_replay(async_io=True)
+    _, b = _traced_replay(async_io=False)
+    assert not events_equal(a.events, b.events)
+    assert first_divergence(a.events, b.events) is not None
+
+
+def test_clone_detaches_tracer():
+    """Forked hypothetical timelines must not interleave events into a
+    real capture — clone() detaches, the original stays attached."""
+    eng, trc = _traced_replay(async_io=True)
+    led = eng.ledger
+    copy = led.clone()
+    assert led.tracer is trc
+    assert copy.tracer is None
+    n0 = len(trc.events)
+    copy.dram_read(1024.0)
+    assert len(trc.events) == n0
+    fork = eng.clone()
+    assert fork.tracer is None
+    assert eng.tracer is trc
+
+
+def test_sharded_clone_detaches_tracer():
+    eng, trc = _traced_replay(async_io=True, ep_shards=2)
+    led = eng.ledger
+    copy = led.clone()
+    assert led.tracer is trc and led.ici.tracer is trc
+    assert copy.tracer is None and copy.ici.tracer is None
+
+
+# ==========================================================================
+# Chrome-trace export + report
+# ==========================================================================
+def test_chrome_export_schema(tmp_path):
+    _, trc = _traced_replay(async_io=True, ep_shards=2, prefetch_top_m=2)
+    trc.span("queue", "req0", 0.0, 1e-4, request=0)
+    path = str(tmp_path / "trace.json")
+    data = export_chrome_trace(trc, path)
+    on_disk = load_trace(path)
+    assert on_disk == data
+    evs = data["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert len(xs) == len(trc.events) + len(trc.spans)
+    pnames = {e["pid"]: e["args"]["name"] for e in meta
+              if e["name"] == "process_name"}
+    assert pnames[0] == "shard 0" and pnames[1] == "shard 1"
+    assert pnames[INTERCONNECT_PID] == "interconnect"
+    assert pnames[REQUESTS_PID] == "requests"
+    # prefetch lane on its own thread, named events, µs timestamps
+    bg = [e for e in xs if e["pid"] in (0, 1)
+          and e["tid"] == CHANNEL_TIDS["flash_bg"]]
+    assert bg and all(e["cat"] == "prefetch_fill" for e in bg)
+    assert all(e["dur"] >= 0 and e["ts"] >= 0 for e in xs)
+    span = [e for e in xs if e["pid"] == REQUESTS_PID]
+    assert len(span) == 1 and span[0]["name"] == "queue"
+
+
+def test_trace_report_totals(tmp_path):
+    eng, trc = _traced_replay(async_io=True, ep_shards=2)
+    rep = trace_report(chrome_trace(trc))
+    assert rep["makespan_us"] == pytest.approx(trc.makespan() * 1e6,
+                                               rel=1e-9)
+    assert sum(r["events"] for r in rep["channels"]) == len(trc.events)
+    snap = eng.ledger.snapshot()
+    total_bytes = sum(r["bytes"] for r in rep["channels"])
+    expect = snap["flash_bytes"] + snap["dram_bytes"] + snap["ici_bytes"]
+    assert total_bytes == pytest.approx(expect, rel=1e-6)
+    text = format_trace_report(rep)
+    assert "makespan" in text and "shard 0" in text and "shard 1" in text
+
+
+# ==========================================================================
+# Metrics registry
+# ==========================================================================
+class TestMetrics:
+    def test_counter_monotonic(self):
+        r = MetricsRegistry()
+        c = r.counter("x_total")
+        c.inc(); c.inc(2.0)
+        assert c.value == 3.0
+        with pytest.raises(ValueError):
+            c.inc(-1.0)
+        c.set_to(5.0)
+        with pytest.raises(ValueError):
+            c.set_to(4.0)
+
+    def test_family_kind_conflict(self):
+        r = MetricsRegistry()
+        r.counter("x_total")
+        with pytest.raises(TypeError):
+            r.gauge("x_total")
+
+    def test_labels_are_distinct_instruments(self):
+        r = MetricsRegistry()
+        a = r.counter("t_total", tenant="a")
+        b = r.counter("t_total", tenant="b")
+        assert a is not b
+        a.inc(3)
+        assert r.counter("t_total", tenant="a").value == 3.0
+        assert r.counter("t_total", tenant="b").value == 0.0
+
+    def test_histogram_buckets(self):
+        r = MetricsRegistry()
+        h = r.histogram("lat_seconds", buckets=(0.1, 1.0, 10.0))
+        for v in (0.05, 0.5, 5.0, 50.0, float("nan")):
+            h.observe(v)
+        assert h.count == 4 and h.counts == [1, 1, 1]   # 50 overflows
+        assert h.cumulative() == [(0.1, 1), (1.0, 2), (10.0, 3)]
+
+    def test_sample_series_and_jsonl(self, tmp_path):
+        r = MetricsRegistry()
+        c = r.counter("a_total")
+        g = r.gauge("b")
+        for i in range(3):
+            c.inc()
+            g.set(i * 0.5)
+            r.sample(t=i * 1e-3, step=i)
+        assert [row["a_total"] for row in r.series] == [1.0, 2.0, 3.0]
+        path = str(tmp_path / "m.jsonl")
+        assert r.to_jsonl(path) == 3
+        rows = [json.loads(line) for line in open(path)]
+        assert rows == r.series
+
+    def test_prometheus_text(self):
+        r = MetricsRegistry()
+        r.counter("a_total", "help a").inc(2)
+        r.gauge("g", tenant="x").set(1.5)
+        r.histogram("h_seconds", buckets=(0.1, 1.0)).observe(0.05)
+        txt = r.prometheus_text()
+        assert "# HELP a_total help a" in txt
+        assert "# TYPE a_total counter" in txt
+        assert 'g{tenant="x"} 1.5' in txt
+        assert 'h_seconds_bucket{le="+Inf"} 1' in txt
+        assert "h_seconds_count 1" in txt
+        assert txt.endswith("\n")
+
+
+def _step(t, n_active=2, miss=0.25, lat=1e-3, e=1e-3, **kw):
+    return StepRecord(t=t, n_active=n_active, miss_rate=miss,
+                      latency_s=lat, energy_j=e, **kw)
+
+
+class TestMetricsSampler:
+    def test_counters_monotonic_over_series(self):
+        r = MetricsRegistry()
+        s = MetricsSampler(r)
+        tel = FleetTelemetry()
+        tel.add_listener(s)
+        for i in range(5):
+            tel.on_step(_step(t=i * 1e-3, per_tenant={
+                "a": {"tokens": 2, "accesses": 10, "misses": i}}))
+        for key in r.series[-1]:
+            if key.endswith("_total"):
+                vals = [row.get(key, 0.0) for row in r.series]
+                assert all(b >= a for a, b in zip(vals, vals[1:])), key
+        assert r.series[-1]["decode_steps_total"] == 5.0
+        assert r.series[-1]['tenant_tokens_total{tenant="a"}'] == 10.0
+
+    def test_window_reset_fold(self):
+        """Upstream windows that reset (cache stats at request
+        boundaries) must fold with counter-reset semantics, never
+        crash or go backwards."""
+        r = MetricsRegistry()
+        s = MetricsSampler(r)
+        c = r.counter("cache_accesses_total")
+        s._fold_window(c, "k", 10.0)
+        s._fold_window(c, "k", 15.0)
+        s._fold_window(c, "k", 4.0)    # upstream reset mid-window
+        assert c.value == 19.0
+
+    def test_schema_identical_without_io_fields(self):
+        """Sync-path StepRecords (no io_stall/overlap kwargs) produce
+        the same row schema as async ones — zeros, not missing keys."""
+        ra, rs = MetricsRegistry(), MetricsRegistry()
+        ta, ts = FleetTelemetry(), FleetTelemetry()
+        ta.add_listener(MetricsSampler(ra))
+        ts.add_listener(MetricsSampler(rs))
+        ta.on_step(_step(t=1e-3, io_stall_s=5e-4, overlap_saved_s=1e-4))
+        ts.on_step(_step(t=1e-3))
+        assert set(ra.series[0]) == set(rs.series[0])
+        assert rs.series[0]["io_stall_seconds_total"] == 0.0
+        assert rs.series[0]["overlap_saved_seconds_total"] == 0.0
+
+
+# ==========================================================================
+# Telemetry satellite regressions: schema + percentile/format_summary
+# ==========================================================================
+class TestTelemetrySchema:
+    def test_step_record_defaults(self):
+        s = _step(t=0.0)
+        assert s.io_stall_s == 0.0 and s.overlap_saved_s == 0.0
+
+    def test_summary_schema_identical_sync_async(self):
+        """summary() must emit the stall/overlap keys whether or not
+        the steps carried them — zeros, not missing keys."""
+        def run(with_io):
+            tel = FleetTelemetry()
+            rec = RequestRecord(request_id=0, arrival_t=0.0, admit_t=0.0,
+                                first_token_t=1e-3, finish_t=3e-3,
+                                n_generated=3)
+            tel.on_submit(rec)
+            kw = {"io_stall_s": 4e-4, "overlap_saved_s": 1e-4} \
+                if with_io else {}
+            tel.on_step(_step(t=1e-3, **kw))
+            return tel.summary()
+        sa, ss = run(True), run(False)
+        assert set(sa) == set(ss)
+        for key in ("decode_io_stall_s", "decode_overlap_saved_s",
+                    "decode_io_stall_frac", "decode_overlap_saved_frac"):
+            assert ss[key] == 0.0
+
+    def test_empty_fleet_summary_is_well_defined(self):
+        s = FleetTelemetry().summary()
+        assert s["n_requests"] == 0 and s["n_tokens"] == 0
+        assert math.isnan(s["ttft_p50_s"])
+        assert math.isnan(s["throughput_tok_per_s"])
+        assert s["decode_io_stall_s"] == 0.0
+        # and it formats without raising
+        assert "serving summary" in format_summary(s)
+
+
+class TestPercentile:
+    def test_empty_returns_nan(self):
+        assert math.isnan(percentile([], 50))
+
+    def test_single_sample_is_every_percentile(self):
+        for p in (0, 1, 50, 95, 99, 100):
+            assert percentile([7.0], p) == 7.0
+
+    def test_nearest_rank(self):
+        vals = [1.0, 2.0, 3.0, 4.0]
+        assert percentile(vals, 0) == 1.0
+        assert percentile(vals, 25) == 1.0
+        assert percentile(vals, 50) == 2.0
+        assert percentile(vals, 100) == 4.0
+
+    def test_numpy_array_input(self):
+        """Regression: ndarray truthiness is ambiguous — len-based
+        emptiness plus float coercion must make numpy inputs safe."""
+        arr = np.array([3.0, 1.0, 2.0])
+        out = percentile(arr, 50)
+        assert out == 2.0 and type(out) is float
+        assert math.isnan(percentile(np.array([]), 95))
+        assert percentile(np.float32([5.0, 6.0]), 95) == 6.0
+
+    def test_out_of_range_raises_even_when_empty(self):
+        with pytest.raises(ValueError):
+            percentile([], 101)
+        with pytest.raises(ValueError):
+            percentile([1.0], -0.1)
+
+
+class TestFormatSummary:
+    def test_numpy_scalars_render_as_numbers(self):
+        txt = format_summary({"a": np.float32(0.25), "b": np.int64(3),
+                              "c": float("nan")})
+        assert "0.25" in txt and ": 3" in txt and "nan" in txt
+        assert "float32" not in txt
+
+    def test_list_of_dicts_renders_rows(self):
+        txt = format_summary({"per_shard": [
+            {"shard": 0, "miss_rate": 0.1},
+            {"shard": 1, "miss_rate": 0.2}]})
+        assert "[0]" in txt and "[1]" in txt and "miss_rate" in txt
+
+    def test_scalar_list_inline(self):
+        txt = format_summary({"curve": [0.1, 0.2, 0.30000001]})
+        assert "[0.1, 0.2, 0.3]" in txt
+
+    def test_empty_and_nested(self):
+        txt = format_summary({"outer": {"inner": {}}, "n": 0})
+        assert "outer" in txt and "inner" in txt
+
+
+# ==========================================================================
+# live≡replay trace equivalence (real engine + jit)
+# ==========================================================================
+@pytest.mark.slow
+@pytest.mark.parametrize("ep", [1, 2])
+def test_live_replay_trace_equivalence(ep, tmp_path):
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.core.amat import MatConfig
+    from repro.core.engine import EngineConfig, PersistentEngine
+    from repro.models.model import init_params
+    from repro.models.moe import RoutingPolicy
+    from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                         SchedulerConfig)
+    from repro.serving.workloads import (LengthDist, TenantSpec,
+                                         WorkloadConfig, generate)
+    from repro.sim import Trace, TraceRecorder
+
+    cfg = dataclasses.replace(get_config("qwen15-moe-repro"), n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = PersistentEngine(cfg, params, EngineConfig(
+        mat=MatConfig(8, 4), cache_bytes=1.0e6,
+        policy=RoutingPolicy(kind="cache_prior", slice_mode="dbsc"),
+        miss_rate_target=0.1, warmup="pcw", max_seq=64,
+        async_io=True, ep_shards=ep))
+    live_trc = engine.attach_tracer(TimelineTracer())
+    sched = ContinuousBatchingScheduler(
+        engine, SchedulerConfig(max_batch=2, max_queue=8))
+    rec = sched.attach_recorder(TraceRecorder())
+    wl = WorkloadConfig(
+        kind="closed_loop", n_requests=3, seed=0,
+        tenants=(TenantSpec(prompt_len=LengthDist("fixed", 12),
+                            output_len=LengthDist("fixed", 6)),))
+    for r in generate(wl, cfg.vocab_size):
+        sched.submit(r)
+    sched.run()
+
+    loaded = Trace.load(rec.trace().save(str(tmp_path / "live.npz")))
+    rep_eng = ReplayEngine(loaded.meta)
+    rep_trc = rep_eng.attach_tracer(TimelineTracer())
+    rep_eng.consume_all(loaded.events)
+    rep_eng.finish()
+
+    div = first_divergence(live_trc.events, rep_trc.events)
+    assert div is None, (
+        f"divergence at event {div}: "
+        f"{live_trc.events[div] if div < len(live_trc.events) else '<end>'}"
+        f" vs "
+        f"{rep_trc.events[div] if div < len(rep_trc.events) else '<end>'}")
+    assert events_equal(live_trc.events, rep_trc.events)
+    # exports are byte-comparable modulo the live-only request spans
+    live_export = chrome_trace(live_trc)
+    replay_export = chrome_trace(rep_trc)
+    live_hw = [e for e in live_export["traceEvents"]
+               if e.get("pid") != REQUESTS_PID]
+    replay_hw = [e for e in replay_export["traceEvents"]
+                 if e.get("pid") != REQUESTS_PID]
+    assert live_hw == replay_hw
