@@ -2,10 +2,9 @@
 
 from __future__ import annotations
 
-import dataclasses
 import os
 import time
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ We sweep miss-rate targets x cache budgets for four precision schemes
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax

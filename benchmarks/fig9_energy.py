@@ -19,7 +19,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import CsvSink, report, train_or_load
 from repro.core.amat import MatConfig

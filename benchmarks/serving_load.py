@@ -54,7 +54,7 @@ import numpy as np
 from benchmarks.common import CsvSink, json_record, report
 from repro.configs.base import get_config
 from repro.core.amat import MatConfig
-from repro.core.engine import EngineConfig, PersistentEngine, SliceMoEEngine
+from repro.core.engine import EngineConfig, PersistentEngine
 from repro.models.model import init_params
 from repro.models.moe import RoutingPolicy
 from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import time
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (CsvSink, eval_batches, report, synthetic_ppl,

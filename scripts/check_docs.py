@@ -5,10 +5,13 @@ Run from anywhere: ``python scripts/check_docs.py``.  Scans README.md
 and docs/*.md for
 
 1. markdown links ``[text](target)`` whose target is not an URL —
-   the target (anchor stripped) must exist relative to the file, and
+   the target (anchor stripped) must exist relative to the file,
 2. fenced ```` ```python ```` blocks containing ``>>>`` prompts —
    executed with :mod:`doctest` in a fresh namespace (examples must be
-   stdlib-only so the docs CI job needs no heavy deps).
+   stdlib-only so the docs CI job needs no heavy deps), and
+3. reachability: every ``docs/*.md`` page must be linked from README.md
+   (directly or from another reachable docs page) — a page nobody links
+   is a page nobody reads.
 
 Exits non-zero listing every broken link / failing example.  Used by
 the ``docs`` job in .github/workflows/ci.yml.
@@ -71,6 +74,26 @@ def check_doctests(path: Path) -> list[str]:
     return errors
 
 
+def check_reachability() -> list[str]:
+    """Every docs page is reachable from README.md via doc links."""
+    reachable = set()
+    frontier = [ROOT / "README.md"]
+    while frontier:
+        page = frontier.pop()
+        if page in reachable or not page.exists():
+            continue
+        reachable.add(page)
+        for target in LINK_RE.findall(page.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if rel.endswith(".md"):
+                frontier.append((page.parent / rel).resolve())
+    return [f"docs page not reachable from README.md: "
+            f"{p.relative_to(ROOT)} (link it from the docs table)"
+            for p in doc_files() if p.exists() and p not in reachable]
+
+
 def main() -> int:
     errors = []
     n_links = n_tests = 0
@@ -83,6 +106,7 @@ def main() -> int:
                        for b in FENCE_RE.findall(path.read_text()))
         errors += check_links(path)
         errors += check_doctests(path)
+    errors += check_reachability()
     if errors:
         print("\n".join(errors))
         return 1

@@ -1,0 +1,19 @@
+#!/usr/bin/env python
+"""Thin wrapper so slicelint runs without PYTHONPATH gymnastics:
+
+    python scripts/slicelint.py [args...]
+
+is exactly ``PYTHONPATH=src python -m repro.analysis [args...]`` (the
+analysis package is stdlib-only, so no jax/numpy is needed).
+"""
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,55 @@
+"""slicelint: repo-specific static analysis for the SliceMoE charge path.
+
+An AST-based rule framework plus four rules that prove, at lint time,
+the invariants the dynamic test suites (golden traces, clone-isolation,
+event conservation, knob round-trips) can only sample:
+
+``purity``
+    charge-path modules must not read wall clocks, unseeded RNG state,
+    environment variables, or iterate unordered sets / ``id()`` keys on
+    a decision path — replay fidelity requires charges to be pure
+    functions of the trace.
+``clone``
+    every class defining ``clone()`` must fork each mutable attribute
+    assigned in ``__init__``/``__post_init__``.
+``ledger``
+    every :class:`~repro.hw.energy.CostLedger` event method must pair a
+    channel charge with a byte/op accumulator and an event counter, all
+    covered by ``snapshot()``/``reset()``; call sites must use the known
+    ledger API.
+``knobs``
+    every ``EngineConfig`` field must round-trip through ``TraceMeta``
+    serialization, the ``serve.py`` CLI, and replay consumption, or be
+    explicitly allowlisted.
+
+Usage::
+
+    python -m repro.analysis src/repro                  # lint
+    python -m repro.analysis src/repro --write-baseline # freeze debt
+
+The package is stdlib-only on purpose: the CI ``lint`` job runs it
+without installing jax/numpy.
+"""
+
+from .core import (  # noqa: F401
+    Baseline,
+    Finding,
+    Rule,
+    all_rules,
+    get_rule,
+    lint_paths,
+    register,
+)
+
+# Importing the rule modules registers them with the framework.
+from . import purity, clones, ledger, knobs  # noqa: F401,E402
+
+__all__ = [
+    "Baseline",
+    "Finding",
+    "Rule",
+    "all_rules",
+    "get_rule",
+    "lint_paths",
+    "register",
+]

@@ -1,0 +1,110 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean (or all findings baselined), 1 new findings (or a
+stale baseline with ``--strict-baseline``), 2 usage error.
+
+Typical use::
+
+    python -m repro.analysis src/repro               # lint the tree
+    python -m repro.analysis src/repro --list-rules  # rule catalogue
+    python -m repro.analysis src/repro --write-baseline
+    python -m repro.analysis src/repro --rule purity --no-baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import all_rules
+from .core import Baseline, lint_paths
+
+DEFAULT_BASELINE = ".slicelint.json"
+
+
+def find_root(start: Path) -> Path:
+    """Repo root: nearest ancestor holding pyproject.toml (or .git)."""
+    for p in [start] + list(start.parents):
+        if (p / "pyproject.toml").exists() or (p / ".git").exists():
+            return p
+    return start
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="slicelint: charge-path static analysis "
+                    "(purity, clone, ledger, knobs)")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or directories to lint "
+                         "(default: src/repro)")
+    ap.add_argument("--rule", action="append", dest="rules", metavar="ID",
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help=f"baseline file (default: <root>/{DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="freeze current findings into the baseline "
+                         "file and exit 0")
+    ap.add_argument("--strict-baseline", action="store_true",
+                    help="fail when the baseline holds stale entries "
+                         "that no longer match any finding")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("--root", default=None, metavar="DIR",
+                    help="repo root for relative paths/baseline "
+                         "(default: auto-detected)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            head = (rule.doc.strip().splitlines() or [""])[0]
+            print(f"{rule.id:8s} {head}")
+        return 0
+
+    paths = [Path(p) for p in args.paths]
+    for p in paths:
+        if not p.exists():
+            print(f"error: no such path: {p}", file=sys.stderr)
+            return 2
+    root = Path(args.root).resolve() if args.root \
+        else find_root(paths[0].resolve())
+    baseline_path = Path(args.baseline) if args.baseline \
+        else root / DEFAULT_BASELINE
+
+    try:
+        findings = lint_paths(paths, root, rules=args.rules)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        bl = Baseline({f.key: f.message for f in findings})
+        bl.save(baseline_path)
+        print(f"wrote {len(findings)} finding(s) to {baseline_path}")
+        return 0
+
+    bl = Baseline() if args.no_baseline else Baseline.load(baseline_path)
+    new, baselined, stale = bl.split(findings)
+
+    for f in new:
+        print(f.render())
+    status = (f"slicelint: {len(new)} new finding(s), "
+              f"{len(baselined)} baselined, {len(stale)} stale "
+              f"baseline entr{'y' if len(stale) == 1 else 'ies'}")
+    print(status)
+    if stale:
+        for key in stale:
+            print(f"  stale: {key}  (fixed? remove it from "
+                  f"{baseline_path.name})")
+    if new:
+        return 1
+    if stale and args.strict_baseline:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,146 @@
+"""Rule ``clone``: every ``clone()`` forks every mutable attribute.
+
+The autotuner, the speculative controller probes, and the replay
+fidelity gates all rely on ``clone()`` producing a fully isolated fork:
+a single shared mutable attribute lets a probe run contaminate its
+parent and breaks live ≡ replay (the bug class PR 7's clone-isolation
+tests hunt at runtime, one instance at a time).
+
+For each class defining ``clone()`` this rule cross-references the
+mutable attributes assigned in ``__init__`` / ``__post_init__`` against
+those handled in the clone body and flags misses.
+
+A clone body "handles" everything when it deep-copies ``self``
+(``copy.deepcopy(self)``).  Otherwise an attribute ``x`` counts as
+handled when the clone body contains an attribute store ``<obj>.x = ...``,
+reads ``self.x`` (fork-from patterns like ``new.x = self.x.clone()``),
+or mentions ``"x"`` as a string literal (``setattr`` loops over literal
+name tuples, as in ``ReplayEngine.clone``).
+
+Only *known-mutable* initializers are demanded: container literals and
+comprehensions, ``list/dict/set/bytearray/deque/OrderedDict/defaultdict
+/Counter()`` calls, and numpy array constructors.  Attributes assigned
+from parameters or arbitrary expressions are out of scope (they may be
+immutable or intentionally shared).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Sequence
+
+from .core import (
+    Finding,
+    SourceFile,
+    class_method,
+    dotted_name,
+    find_classes,
+    register,
+    string_constants,
+)
+
+RULE = "clone"
+
+MUTABLE_CALLS = {
+    "list", "dict", "set", "bytearray",
+    "deque", "OrderedDict", "defaultdict", "Counter",
+}
+# numpy constructors returning fresh mutable arrays (leaf attribute name).
+NP_ARRAY_CALLS = {
+    "zeros", "ones", "full", "empty", "array", "arange", "copy",
+    "zeros_like", "ones_like", "full_like", "empty_like",
+}
+
+
+def _is_mutable_value(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        if name is None:
+            return False
+        leaf = name.rsplit(".", 1)[-1]
+        if leaf in MUTABLE_CALLS:
+            return True
+        if name.startswith(("np.", "numpy.")) and leaf in NP_ARRAY_CALLS:
+            return True
+    return False
+
+
+def _init_mutable_attrs(cls: ast.ClassDef) -> Dict[str, int]:
+    """Mutable ``self.x = ...`` assignments in __init__/__post_init__."""
+    attrs: Dict[str, int] = {}
+    for meth_name in ("__init__", "__post_init__"):
+        meth = class_method(cls, meth_name)
+        if meth is None:
+            continue
+        for node in ast.walk(meth):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = [node.target], node.value
+            else:
+                continue
+            if not _is_mutable_value(value):
+                continue
+            for t in targets:
+                if isinstance(t, ast.Attribute) and \
+                        isinstance(t.value, ast.Name) and \
+                        t.value.id == "self":
+                    attrs.setdefault(t.attr, node.lineno)
+    return attrs
+
+
+def _deepcopies_self(clone: ast.FunctionDef) -> bool:
+    for node in ast.walk(clone):
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name in ("copy.deepcopy", "deepcopy") and node.args and \
+                    isinstance(node.args[0], ast.Name) and \
+                    node.args[0].id == "self":
+                return True
+    return False
+
+
+def _handled_attrs(clone: ast.FunctionDef) -> set:
+    handled = set(string_constants(clone))
+    for node in ast.walk(clone):
+        if isinstance(node, ast.Attribute):
+            if isinstance(node.ctx, ast.Store):
+                handled.add(node.attr)
+            elif isinstance(node.value, ast.Name) and \
+                    node.value.id == "self":
+                handled.add(node.attr)
+    return handled
+
+
+def _check_class(sf: SourceFile, cls: ast.ClassDef) -> List[Finding]:
+    clone = class_method(cls, "clone")
+    if clone is None:
+        return []
+    if _deepcopies_self(clone):
+        return []
+    mutable = _init_mutable_attrs(cls)
+    if not mutable:
+        return []
+    handled = _handled_attrs(clone)
+    findings = []
+    for attr in sorted(set(mutable) - handled):
+        findings.append(Finding(
+            RULE, sf.rel, mutable[attr], f"{cls.name}.{attr}",
+            f"{cls.name}.__init__ assigns mutable attribute "
+            f"'{attr}' but {cls.name}.clone() never forks it; a "
+            "clone sharing it corrupts its parent on first mutation "
+            "(copy it in clone(), or deepcopy self)"))
+    return findings
+
+
+@register(RULE, __doc__ or "")
+def check(files: Sequence[SourceFile]) -> List[Finding]:
+    out: List[Finding] = []
+    for sf in files:
+        for cls in find_classes(sf.tree):
+            out.extend(_check_class(sf, cls))
+    return out

@@ -1,0 +1,233 @@
+"""Rule framework for slicelint: findings, registry, suppressions, baseline.
+
+Design notes
+------------
+* **Stdlib-only.**  The CI ``lint`` job runs this without jax/numpy, so
+  nothing here (or in the rule modules) may import outside the standard
+  library.  Rules inspect *source text* with :mod:`ast`; they never
+  import the code under analysis.
+* **Findings are stable.**  A finding's identity for baseline purposes
+  is ``(rule, path, ident)`` where ``ident`` is a rule-chosen stable
+  name (e.g. ``ClassName.attr`` or ``func:pattern``) — *not* the line
+  number, which churns on unrelated edits.  Line numbers are reported
+  for humans but do not participate in baseline matching.
+* **Baseline freezes debt.**  ``--write-baseline`` records the current
+  findings; later runs subtract baselined identities and fail only on
+  *new* violations.  Stale baseline entries (entries that no longer
+  match any finding) are reported so the baseline shrinks over time.
+* **Inline suppressions.**  A line containing ``# slicelint: ignore[rule]``
+  (or ``ignore[*]``) suppresses findings reported on that line.  Use
+  sparingly, with a justification comment; prefer fixing or baselining.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+SUPPRESS_RE = re.compile(r"#\s*slicelint:\s*ignore\[([\w*,\s-]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a specific site."""
+
+    rule: str           # rule id, e.g. "purity"
+    path: str           # repo-relative posix path
+    line: int           # 1-based line (informational, not identity)
+    ident: str          # stable identity within (rule, path)
+    message: str        # human explanation: what + why it matters
+
+    @property
+    def key(self) -> str:
+        """Baseline identity — deliberately line-number free."""
+        return f"{self.rule}::{self.path}::{self.ident}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """A parsed source file handed to every rule."""
+
+    path: Path          # absolute
+    rel: str            # repo-relative posix path
+    text: str
+    tree: ast.Module
+    suppressions: Dict[int, set]  # line -> set of rule ids (or {"*"})
+
+    @classmethod
+    def load(cls, path: Path, root: Path) -> "SourceFile":
+        text = path.read_text()
+        tree = ast.parse(text, filename=str(path))
+        sup: Dict[int, set] = {}
+        for i, line in enumerate(text.splitlines(), start=1):
+            m = SUPPRESS_RE.search(line)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                sup[i] = rules
+        rel = path.relative_to(root).as_posix()
+        return cls(path=path, rel=rel, text=text, tree=tree, suppressions=sup)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        rules = self.suppressions.get(line)
+        return bool(rules) and (rule in rules or "*" in rules)
+
+
+@dataclasses.dataclass
+class Rule:
+    """A registered rule: a checker over the whole file set.
+
+    Rules see *all* files at once (``check(files)``) because two of the
+    four shipped rules are cross-file (knob parity spans four modules).
+    """
+
+    id: str
+    doc: str
+    check: Callable[[Sequence[SourceFile]], List[Finding]]
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(rule_id: str, doc: str):
+    """Decorator registering ``check(files) -> [Finding]`` under ``rule_id``."""
+
+    def deco(fn: Callable[[Sequence[SourceFile]], List[Finding]]) -> Rule:
+        if rule_id in _REGISTRY:
+            raise ValueError(f"duplicate rule id: {rule_id}")
+        rule = Rule(id=rule_id, doc=doc, check=fn)
+        _REGISTRY[rule_id] = rule
+        return rule
+
+    return deco
+
+
+def all_rules() -> List[Rule]:
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+def get_rule(rule_id: str) -> Rule:
+    try:
+        return _REGISTRY[rule_id]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown rule {rule_id!r} (known: {known})") from None
+
+
+class Baseline:
+    """Committed ledger of frozen (pre-existing) findings.
+
+    File format: JSON ``{"version": 1, "findings": {key: message}}``.
+    The message is stored for human review only; matching is by key.
+    """
+
+    VERSION = 1
+
+    def __init__(self, entries: Optional[Dict[str, str]] = None) -> None:
+        self.entries: Dict[str, str] = dict(entries or {})
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        if not path.exists():
+            return cls()
+        data = json.loads(path.read_text())
+        if data.get("version") != cls.VERSION:
+            raise ValueError(
+                f"{path}: unsupported baseline version {data.get('version')!r}"
+            )
+        return cls(data.get("findings", {}))
+
+    def save(self, path: Path) -> None:
+        data = {
+            "version": self.VERSION,
+            "findings": {k: self.entries[k] for k in sorted(self.entries)},
+        }
+        path.write_text(json.dumps(data, indent=2) + "\n")
+
+    def split(self, findings: Sequence[Finding]):
+        """Partition findings into (new, baselined); also return stale keys."""
+        new: List[Finding] = []
+        baselined: List[Finding] = []
+        seen = set()
+        for f in findings:
+            seen.add(f.key)
+            (baselined if f.key in self.entries else new).append(f)
+        stale = sorted(set(self.entries) - seen)
+        return new, baselined, stale
+
+
+def collect_files(paths: Iterable[Path], root: Path) -> List[SourceFile]:
+    """Expand files/dirs into parsed SourceFiles, sorted for determinism."""
+    out: Dict[str, SourceFile] = {}
+    for p in paths:
+        p = p.resolve()
+        candidates = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for c in candidates:
+            if c.suffix != ".py":
+                continue
+            sf = SourceFile.load(c, root)
+            out[sf.rel] = sf
+    return [out[k] for k in sorted(out)]
+
+
+def lint_paths(
+    paths: Sequence[Path],
+    root: Path,
+    rules: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    """Run the selected rules over ``paths``; suppressions applied."""
+    files = collect_files(paths, root)
+    selected = [get_rule(r) for r in rules] if rules else all_rules()
+    by_rel = {f.rel: f for f in files}
+    findings: List[Finding] = []
+    for rule in selected:
+        for f in rule.check(files):
+            sf = by_rel.get(f.path)
+            if sf is not None and sf.suppressed(f.rule, f.line):
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.ident))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers used by the rule modules.
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """Best-effort dotted name of a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def find_classes(tree: ast.Module) -> List[ast.ClassDef]:
+    return [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]
+
+
+def class_method(cls: ast.ClassDef, name: str) -> Optional[ast.FunctionDef]:
+    for n in cls.body:
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and n.name == name:
+            return n
+    return None
+
+
+def string_constants(node: ast.AST) -> set:
+    """All string literals anywhere under ``node``."""
+    return {
+        n.value
+        for n in ast.walk(node)
+        if isinstance(n, ast.Constant) and isinstance(n.value, str)
+    }

@@ -1,0 +1,205 @@
+"""Rule ``knobs``: every EngineConfig knob round-trips everywhere.
+
+Replay can only reproduce a live run if every knob that shaped the run
+is (a) recorded in the trace header, (b) settable from the serving CLI,
+and (c) consumed when a trace is replayed/swept.  PR 4's original sin —
+a knob added to ``EngineConfig`` but not to ``TraceMeta`` silently
+replays at its default — is exactly the drift this rule freezes out.
+
+Cross-checked surfaces (all parsed statically, nothing imported):
+
+* **fields** — ``EngineConfig`` dataclass fields in ``core/engine.py``;
+* **meta** — keys of the ``engine={...}`` dict built by
+  ``engine_meta()`` in ``sim/trace.py`` (the trace header);
+* **cli** — keys of ``DEFAULT_KNOBS`` *and* of the dict returned by
+  ``cli_engine_knobs()`` in ``launch/serve.py`` (a key present in one
+  but not the other is its own finding);
+* **replay** — string keys read (``e[...]``, ``.get(...)``,
+  ``.setdefault(...)``) inside ``engine_config_from_meta()`` in
+  ``sim/replay.py``.  This is also the autotune sweep surface: sweep
+  overrides are validated against exactly these keys.
+
+Composite fields map through ``ALIASES`` (``mat`` serializes as
+``high_bits``/``low_bits``; ``policy`` as ``policy_kind``/``slice_mode``
+/``theta``/``fetch_lsb_on_miss``).  Fields that legitimately do not
+round-trip carry an ``ALLOWLIST`` entry with a justification.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import Finding, SourceFile, register
+
+RULE = "knobs"
+
+ENGINE_FILE = "core/engine.py"
+TRACE_FILE = "sim/trace.py"
+SERVE_FILE = "launch/serve.py"
+REPLAY_FILE = "sim/replay.py"
+
+# EngineConfig field -> the flat knob names it serializes as.
+ALIASES: Dict[str, Set[str]] = {
+    "mat": {"high_bits", "low_bits"},
+    "policy": {"policy_kind", "slice_mode", "theta", "fetch_lsb_on_miss"},
+}
+
+# Fields that deliberately do not round-trip, with the reason.
+ALLOWLIST: Dict[str, str] = {
+    # Live-model KV/sequence capacity. Not a charge-path knob: replay
+    # derives step structure from the recorded trace itself, and the
+    # serving CLI sizes sequences via --prompt-len/--max-new.
+    "max_seq": "model capacity bound, not a charge-path knob",
+}
+
+
+def _file(files: Sequence[SourceFile], suffix: str) -> Optional[SourceFile]:
+    for sf in files:
+        if sf.rel.endswith(suffix):
+            return sf
+    return None
+
+
+def _engine_fields(sf: SourceFile) -> Dict[str, int]:
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.ClassDef) and node.name == "EngineConfig":
+            return {
+                n.target.id: n.lineno
+                for n in node.body
+                if isinstance(n, ast.AnnAssign)
+                and isinstance(n.target, ast.Name)
+                and not n.target.id.startswith("_")
+            }
+    return {}
+
+
+def _meta_keys(sf: SourceFile) -> Dict[str, int]:
+    """Keys of the ``engine={...}`` dict literal inside engine_meta()."""
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "engine_meta":
+            for call in ast.walk(node):
+                if not isinstance(call, ast.Call):
+                    continue
+                for kw in call.keywords:
+                    if kw.arg == "engine" and isinstance(kw.value, ast.Dict):
+                        return {
+                            k.value: k.lineno
+                            for k in kw.value.keys
+                            if isinstance(k, ast.Constant)
+                            and isinstance(k.value, str)
+                        }
+    return {}
+
+
+def _dict_literal_keys(node: ast.AST) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for d in ast.walk(node):
+        if isinstance(d, ast.Dict):
+            for k in d.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    out.setdefault(k.value, k.lineno)
+    return out
+
+
+def _cli_surfaces(sf: SourceFile) -> Tuple[Dict[str, int], Dict[str, int]]:
+    defaults: Dict[str, int] = {}
+    knobs: Dict[str, int] = {}
+    for node in sf.tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "DEFAULT_KNOBS":
+                    defaults = _dict_literal_keys(node.value)
+        elif isinstance(node, ast.FunctionDef) and \
+                node.name == "cli_engine_knobs":
+            knobs = _dict_literal_keys(node)
+    return defaults, knobs
+
+
+def _replay_keys(sf: SourceFile) -> Dict[str, int]:
+    """String keys consumed by engine_config_from_meta()."""
+    out: Dict[str, int] = {}
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.FunctionDef)
+                and node.name == "engine_config_from_meta"):
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Subscript) and \
+                    isinstance(sub.slice, ast.Constant) and \
+                    isinstance(sub.slice.value, str):
+                out.setdefault(sub.slice.value, sub.lineno)
+            elif isinstance(sub, ast.Call) and \
+                    isinstance(sub.func, ast.Attribute) and \
+                    sub.func.attr in ("get", "setdefault", "pop") and \
+                    sub.args and isinstance(sub.args[0], ast.Constant) and \
+                    isinstance(sub.args[0].value, str):
+                out.setdefault(sub.args[0].value, sub.lineno)
+    return out
+
+
+@register(RULE, __doc__ or "")
+def check(files: Sequence[SourceFile]) -> List[Finding]:
+    engine = _file(files, ENGINE_FILE)
+    trace = _file(files, TRACE_FILE)
+    serve = _file(files, SERVE_FILE)
+    replay = _file(files, REPLAY_FILE)
+    if engine is None:
+        return []  # nothing to check outside the main tree
+    fields = _engine_fields(engine)
+    if not fields:
+        return []
+
+    findings: List[Finding] = []
+    surfaces = []
+    if trace is not None:
+        surfaces.append(("TraceMeta engine dict (sim/trace.py "
+                         "engine_meta)", _meta_keys(trace)))
+    if serve is not None:
+        defaults, knobs = _cli_surfaces(serve)
+        surfaces.append(("serve.py DEFAULT_KNOBS", defaults))
+        surfaces.append(("serve.py cli_engine_knobs", knobs))
+        # The two CLI dicts must agree with each other.
+        for k in sorted(set(defaults) ^ set(knobs)):
+            where = "DEFAULT_KNOBS" if k in defaults else "cli_engine_knobs"
+            line = defaults.get(k) or knobs.get(k)
+            findings.append(Finding(
+                RULE, serve.rel, line, f"cli-skew:{k}",
+                f"knob '{k}' appears in {where} but not its counterpart; "
+                "DEFAULT_KNOBS and cli_engine_knobs must stay in sync"))
+    if replay is not None:
+        surfaces.append(("replay/autotune consumption (sim/replay.py "
+                         "engine_config_from_meta)", _replay_keys(replay)))
+
+    # Forward: every EngineConfig field reaches every surface.
+    known_flat: Set[str] = set()
+    for field, lineno in sorted(fields.items()):
+        flat = ALIASES.get(field, {field})
+        known_flat |= flat
+        if field in ALLOWLIST:
+            continue
+        for label, keys in surfaces:
+            missing = sorted(flat - set(keys))
+            if missing:
+                findings.append(Finding(
+                    RULE, engine.rel, lineno,
+                    f"{field}:missing-from:{label.split(' ')[0]}",
+                    f"EngineConfig.{field} (serialized as "
+                    f"{', '.join(sorted(flat))}) is missing "
+                    f"{', '.join(missing)} in {label}; a run configured "
+                    "through that surface silently drops the knob — add "
+                    "it or allowlist it with a justification"))
+
+    # Reverse: no surface invents knobs EngineConfig doesn't have.
+    allow_flat = set().union(*(ALIASES.get(f, {f}) for f in ALLOWLIST)) \
+        if ALLOWLIST else set()
+    for label, keys in surfaces:
+        sf_for = {"TraceMeta": trace, "serve.py": serve}.get(
+            label.split(" ")[0], replay)
+        for k, line in sorted(keys.items()):
+            if k not in known_flat and k not in allow_flat:
+                findings.append(Finding(
+                    RULE, (sf_for or engine).rel, line, f"orphan:{label.split(' ')[0]}:{k}",
+                    f"{label} carries knob '{k}' that maps to no "
+                    "EngineConfig field — dead serialization or a "
+                    "missing ALIASES entry in repro/analysis/knobs.py"))
+    return findings

@@ -1,0 +1,231 @@
+"""Rule ``ledger``: CostLedger channel discipline, statically.
+
+``tests/test_obs.py::test_event_conservation`` checks *empirically* that
+every traced event reconciles with the ledger's counters.  This rule
+proves the structural half at lint time:
+
+* **Event methods pair their counters.**  Every :class:`CostLedger`
+  method that issues a channel span (calls ``<channel>.issue(...)``)
+  must — directly or via the methods it calls — increment at least one
+  event counter (``n_*``) and at least one traffic accumulator
+  (``*_bytes`` / ``*_ops``).  A charge without a counter is invisible
+  to event conservation and to the controller's sliding windows.
+* **Snapshot/reset cover every counter.**  Every counter/accumulator
+  field declared on ``CostLedger`` (``n_*``, ``*_bytes``, ``*_ops``,
+  ``*_energy_j``) must appear as a key in ``snapshot()`` and be zeroed
+  in ``reset()`` — otherwise ``delta_since`` windows silently miss it.
+* **Call sites use the known channel API.**  Any ``*_at`` / serialized
+  charge call on a ledger-ish receiver (name mentions ``led``/``ledger``)
+  must be a method actually defined on ``CostLedger`` or
+  ``ShardedCostLedger`` — catching drift when a charge method is renamed
+  but a call site (e.g. in an engine branch rarely exercised) is not.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set
+
+from .core import Finding, SourceFile, class_method, register, string_constants
+
+RULE = "ledger"
+
+LEDGER_FILE_SUFFIX = "hw/energy.py"
+LEDGER_CLASSES = ("CostLedger", "ShardedCostLedger")
+
+SERIALIZED_CHARGES = {
+    "miss_fill", "flash_stream", "dram_read", "matmul",
+    "ici_transfer", "migrate", "mark_prefetch_wasted",
+}
+
+
+def _is_counter(name: str) -> bool:
+    return name.startswith("n_")
+
+
+def _is_accumulator(name: str) -> bool:
+    return name.endswith(("_bytes", "_ops"))
+
+
+def _is_tracked_field(name: str) -> bool:
+    return _is_counter(name) or _is_accumulator(name) \
+        or name.endswith("_energy_j")
+
+
+def _find_class(files: Sequence[SourceFile], name: str):
+    for sf in files:
+        if sf.rel.endswith(LEDGER_FILE_SUFFIX):
+            for node in sf.tree.body:
+                if isinstance(node, ast.ClassDef) and node.name == name:
+                    return sf, node
+    return None, None
+
+
+def _method_map(cls: ast.ClassDef) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _direct_issues(meth: ast.FunctionDef) -> bool:
+    for node in ast.walk(meth):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "issue":
+            return True
+    return False
+
+
+def _direct_increments(meth: ast.FunctionDef) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(meth):
+        if isinstance(node, ast.AugAssign) and \
+                isinstance(node.target, ast.Attribute) and \
+                isinstance(node.target.value, ast.Name) and \
+                node.target.value.id == "self":
+            out.add(node.target.attr)
+    return out
+
+
+def _self_calls(meth: ast.FunctionDef, methods: Dict) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(meth):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                isinstance(node.func.value, ast.Name) and \
+                node.func.value.id == "self" and \
+                node.func.attr in methods:
+            out.add(node.func.attr)
+    return out
+
+
+def _effective_increments(name: str, methods: Dict,
+                          memo: Dict[str, Set[str]],
+                          stack: Optional[Set[str]] = None) -> Set[str]:
+    if name in memo:
+        return memo[name]
+    stack = stack or set()
+    if name in stack:
+        return set()
+    stack = stack | {name}
+    eff = set(_direct_increments(methods[name]))
+    for callee in _self_calls(methods[name], methods):
+        eff |= _effective_increments(callee, methods, memo, stack)
+    memo[name] = eff
+    return eff
+
+
+def _reset_fields(meth: ast.FunctionDef) -> Set[str]:
+    """Fields zeroed in reset(): plain self.x = targets plus any string
+    literal (setattr loops over literal field-name tuples)."""
+    out = set(string_constants(meth))
+    for node in ast.walk(meth):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Attribute) and \
+                        isinstance(t.value, ast.Name) and t.value.id == "self":
+                    out.add(t.attr)
+    return out
+
+
+def _check_definition(sf: SourceFile, cls: ast.ClassDef) -> List[Finding]:
+    findings: List[Finding] = []
+    methods = _method_map(cls)
+    memo: Dict[str, Set[str]] = {}
+
+    # 1. Every direct channel-issuing method pairs counter + accumulator.
+    for name, meth in methods.items():
+        if not _direct_issues(meth):
+            continue
+        eff = _effective_increments(name, methods, memo)
+        if not any(_is_counter(f) for f in eff):
+            findings.append(Finding(
+                RULE, sf.rel, meth.lineno, f"{cls.name}.{name}:no-counter",
+                f"{cls.name}.{name} issues a channel event but never "
+                "increments an n_* event counter; the charge is invisible "
+                "to event conservation and delta windows"))
+        if not any(_is_accumulator(f) for f in eff):
+            findings.append(Finding(
+                RULE, sf.rel, meth.lineno,
+                f"{cls.name}.{name}:no-accumulator",
+                f"{cls.name}.{name} issues a channel event but never "
+                "adds to a *_bytes/*_ops traffic accumulator"))
+
+    # 2. snapshot()/reset() cover every tracked field.
+    fields = {
+        (n.target.id, n.lineno)
+        for n in cls.body
+        if isinstance(n, ast.AnnAssign) and isinstance(n.target, ast.Name)
+        and _is_tracked_field(n.target.id)
+    }
+    snap = class_method(cls, "snapshot")
+    reset = class_method(cls, "reset")
+    snap_keys = string_constants(snap) if snap else set()
+    reset_keys = _reset_fields(reset) if reset else set()
+    for fname, lineno in sorted(fields):
+        if snap is not None and fname not in snap_keys:
+            findings.append(Finding(
+                RULE, sf.rel, lineno, f"{cls.name}.{fname}:not-in-snapshot",
+                f"{cls.name} counter field '{fname}' is missing from "
+                "snapshot(); delta_since windows will never see it"))
+        if reset is not None and fname not in reset_keys:
+            findings.append(Finding(
+                RULE, sf.rel, lineno, f"{cls.name}.{fname}:not-in-reset",
+                f"{cls.name} counter field '{fname}' is not zeroed in "
+                "reset(); it leaks across epochs"))
+    return findings
+
+
+def _ledger_api(files: Sequence[SourceFile]) -> Set[str]:
+    api: Set[str] = set()
+    for cname in LEDGER_CLASSES:
+        _, cls = _find_class(files, cname)
+        if cls is not None:
+            api |= set(_method_map(cls))
+    return api
+
+
+def _looks_ledgerish(recv: ast.AST) -> bool:
+    try:
+        text = ast.unparse(recv)
+    except Exception:  # pragma: no cover - unparse failure
+        return False
+    return "led" in text.lower()
+
+
+def _check_call_sites(files: Sequence[SourceFile],
+                      api: Set[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    charge_like = SERIALIZED_CHARGES
+    for sf in files:
+        if sf.rel.endswith(LEDGER_FILE_SUFFIX):
+            continue  # definitions, checked above
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)):
+                continue
+            meth = node.func.attr
+            if not (meth.endswith("_at") or meth in charge_like):
+                continue
+            if not _looks_ledgerish(node.func.value):
+                continue
+            if meth not in api:
+                recv = ast.unparse(node.func.value)[:40]
+                findings.append(Finding(
+                    RULE, sf.rel, node.lineno, f"call:{recv}.{meth}",
+                    f"call site {recv}.{meth}(...) does not match any "
+                    "method on CostLedger/ShardedCostLedger — unknown "
+                    "charge channel (renamed API? typo?)"))
+    return findings
+
+
+@register(RULE, __doc__ or "")
+def check(files: Sequence[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    api = _ledger_api(files)
+    for cname in LEDGER_CLASSES:
+        sf, cls = _find_class(files, cname)
+        if cls is not None:
+            findings.extend(_check_definition(sf, cls))
+    if api:  # only meaningful when the definitions are in the file set
+        findings.extend(_check_call_sites(files, api))
+    return findings

@@ -1,0 +1,234 @@
+"""Rule ``purity``: charge-path modules are pure functions of the trace.
+
+Replay fidelity (live ≡ replay, bit-identical miss counts and charge
+sequences) holds only if every decision the engine charges for is
+computed from trace-visible state.  This rule bans, inside the
+charge-path modules:
+
+* wall-clock reads (``time.time``, ``perf_counter``, ``monotonic``,
+  ``datetime.now``, ...) — a charge keyed on wall time can never replay;
+* process-global / unseeded RNG (``random.*`` module calls,
+  ``np.random.<fn>`` legacy global state, ``default_rng()`` /
+  ``random.Random()`` *without* a seed argument) — seeded generators
+  owned by a component are fine;
+* environment reads (``os.environ``, ``os.getenv``) — config must flow
+  through ``EngineConfig`` so it lands in ``TraceMeta``;
+* ``id()`` outside ``__hash__`` — identity is fresh per process, so any
+  decision keyed on it diverges between live and replay;
+* *iterating* a ``set`` (for-loop, comprehension, ``list()``/``tuple()``
+  materialization) — set order is insertion/hash dependent; membership
+  tests are fine, iterate ``sorted(...)`` instead.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Sequence
+
+from .core import Finding, SourceFile, dotted_name, register
+
+RULE = "purity"
+
+# Modules whose code runs on the charge path (matched as path suffixes).
+CHARGE_PATH_SUFFIXES = (
+    "core/engine.py",
+    "core/cache.py",
+    "core/shard.py",
+    "core/prefetch.py",
+    "core/placement.py",
+    "core/warmup.py",
+    "hw/energy.py",
+)
+CHARGE_PATH_DIR_SUFFIXES = ("control/",)
+
+WALL_CLOCK = {
+    "time.time", "time.time_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "time.process_time_ns",
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "date.today", "datetime.date.today",
+}
+
+ENV_READS = {"os.getenv", "os.environ.get"}
+
+# np.random legacy global-state functions (always hidden global state).
+NP_GLOBAL_RANDOM = {
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "uniform", "normal",
+    "seed", "standard_normal", "binomial", "poisson",
+}
+
+SET_OPS = (ast.Sub, ast.BitOr, ast.BitAnd, ast.BitXor)
+
+
+def is_charge_path(rel: str) -> bool:
+    if rel.endswith(CHARGE_PATH_SUFFIXES):
+        return True
+    parent = rel.rsplit("/", 1)[0] + "/"
+    return any(parent.endswith(d) for d in CHARGE_PATH_DIR_SUFFIXES)
+
+
+def _call_seeded(call: ast.Call) -> bool:
+    """True if the constructor call passes any seed-like argument."""
+    return bool(call.args) or bool(call.keywords)
+
+
+class _FuncScope(ast.NodeVisitor):
+    """Names bound to set-valued expressions within one function body."""
+
+    def __init__(self) -> None:
+        self.set_names: set = set()
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if _is_set_expr(node.value, self.set_names):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.set_names.add(t.id)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None and \
+                _is_set_expr(node.value, self.set_names) and \
+                isinstance(node.target, ast.Name):
+            self.set_names.add(node.target.id)
+        self.generic_visit(node)
+
+    # Do not descend into nested functions: their scopes are separate.
+    def visit_FunctionDef(self, node):  # noqa: D102
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+
+def _is_set_expr(node: ast.AST, set_names: set) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("set", "frozenset"):
+        return True
+    if isinstance(node, ast.Name) and node.id in set_names:
+        return True
+    if isinstance(node, ast.BinOp) and isinstance(node.op, SET_OPS):
+        return _is_set_expr(node.left, set_names) or \
+            _is_set_expr(node.right, set_names)
+    return False
+
+
+def _enclosing_functions(tree: ast.Module):
+    """Yield (qualname, func) for every function, including methods."""
+
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                yield qual, child
+                yield from walk(child, qual + ".")
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, f"{prefix}{child.name}.")
+
+    yield from walk(tree, "")
+
+
+def _check_file(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def emit(line: int, ident: str, message: str) -> None:
+        findings.append(Finding(RULE, sf.rel, line, ident, message))
+
+    for qual, func in _enclosing_functions(sf.tree):
+        in_hash = qual.endswith("__hash__")
+        scope = _FuncScope()
+        for stmt in func.body:
+            scope.visit(stmt)
+
+        for node in ast.walk(func):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not func:
+                continue  # handled under its own qualname
+
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name in WALL_CLOCK:
+                    emit(node.lineno, f"{qual}:wall-clock:{name}",
+                         f"{qual} reads the wall clock via {name}(); "
+                         "charges keyed on wall time cannot replay — "
+                         "derive timing from ChannelTimeline clocks")
+                elif name in ENV_READS:
+                    emit(node.lineno, f"{qual}:env:{name}",
+                         f"{qual} reads the environment via {name}(); "
+                         "config must flow through EngineConfig so it "
+                         "is captured in TraceMeta")
+                elif name and name.startswith("random.") \
+                        and name.count(".") == 1 and name != "random.Random":
+                    emit(node.lineno, f"{qual}:global-rng:{name}",
+                         f"{qual} uses process-global RNG {name}(); use "
+                         "a seeded generator owned by the component")
+                elif name == "random.Random" and not _call_seeded(node):
+                    emit(node.lineno, f"{qual}:unseeded-rng:{name}",
+                         f"{qual} constructs random.Random() without a "
+                         "seed; replay cannot reproduce its stream")
+                elif name and (name.startswith("np.random.")
+                               or name.startswith("numpy.random.")):
+                    leaf = name.rsplit(".", 1)[1]
+                    if leaf in NP_GLOBAL_RANDOM:
+                        emit(node.lineno, f"{qual}:global-rng:{name}",
+                             f"{qual} uses numpy's global RNG {name}(); "
+                             "use np.random.default_rng(seed) owned by "
+                             "the component")
+                    elif leaf in ("default_rng", "Generator",
+                                  "SeedSequence") and not _call_seeded(node):
+                        emit(node.lineno, f"{qual}:unseeded-rng:{name}",
+                             f"{qual} constructs {name}() without a seed; "
+                             "replay cannot reproduce its stream")
+                elif name == "id" and not in_hash:
+                    emit(node.lineno, f"{qual}:id-call",
+                         f"{qual} calls id(); object identity is fresh "
+                         "per process, so decisions keyed on it diverge "
+                         "between live and replay (allowed only in "
+                         "__hash__)")
+                elif name in ("list", "tuple") and node.args and \
+                        _is_set_expr(node.args[0], scope.set_names):
+                    emit(node.lineno,
+                         f"{qual}:set-order:{ast.unparse(node.args[0])}",
+                         f"{qual} materializes a set into an ordered "
+                         f"sequence ({ast.unparse(node)[:60]}); set order "
+                         "is hash-dependent — use sorted(...)")
+
+            elif isinstance(node, ast.Attribute):
+                if dotted_name(node) == "os.environ":
+                    emit(node.lineno, f"{qual}:env:os.environ",
+                         f"{qual} touches os.environ; config must flow "
+                         "through EngineConfig so it is captured in "
+                         "TraceMeta")
+
+            elif isinstance(node, ast.For):
+                if _is_set_expr(node.iter, scope.set_names):
+                    emit(node.iter.lineno,
+                         f"{qual}:set-order:{ast.unparse(node.iter)}",
+                         f"{qual} iterates a set "
+                         f"({ast.unparse(node.iter)[:60]}); iteration "
+                         "order is hash-dependent and can reorder "
+                         "charges — iterate sorted(...) instead")
+
+            elif isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+                for gen in node.generators:
+                    if _is_set_expr(gen.iter, scope.set_names):
+                        emit(gen.iter.lineno,
+                             f"{qual}:set-order:{ast.unparse(gen.iter)}",
+                             f"{qual} iterates a set in a comprehension "
+                             f"({ast.unparse(gen.iter)[:60]}); order is "
+                             "hash-dependent — iterate sorted(...)")
+
+    return findings
+
+
+@register(RULE, __doc__ or "")
+def check(files: Sequence[SourceFile]) -> List[Finding]:
+    out: List[Finding] = []
+    for sf in files:
+        if is_charge_path(sf.rel):
+            out.extend(_check_file(sf))
+    return out

@@ -50,7 +50,7 @@ from repro.core.routing import MissRateController
 from repro.core.shard import (ShardedSliceCache, expert_placement,
                               home_shard_of_token, remote_selection_mask,
                               shard_of_expert)
-from repro.core.slices import ExpertSliceStore, SliceKey, quantize_moe_params
+from repro.core.slices import SliceKey, quantize_moe_params
 from repro.core.warmup import (HotnessTracker, INIT_STATES, pcw_reshape)
 from repro.hw.energy import CostLedger, ShardedCostLedger
 from repro.hw.specs import SYSTEM_PROFILES
@@ -1490,7 +1490,7 @@ class PersistentEngine:
                         pf.observe(lidx, prev_used, flat_ids)
                         demanded = set(int(e) for e in msb_demand)
                         pf.mark_useful(len(demanded & issued))
-                        for e in issued - demanded:
+                        for e in sorted(issued - demanded):
                             pf.mark_wasted()
                             self._ledger_for(lidx, e).mark_prefetch_wasted(
                                 self._slice_nbytes(SliceKey(lidx, e, "msb")))

@@ -15,7 +15,7 @@ The store serves two consumers:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Optional
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

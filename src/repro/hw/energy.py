@@ -123,6 +123,7 @@ class CostLedger:
     compute_energy_j: float = 0.0
     n_flash_transfers: int = 0
     n_dram_transfers: int = 0
+    n_matmuls: int = 0
 
     # timeline state
     flash_ch: ChannelTimeline = dataclasses.field(
@@ -285,6 +286,7 @@ class CostLedger:
         speedup = max(1.0, native / max(bits, 1))
         dur = ops / (sysspec.compute.peak_ops_per_s * speedup)
         self.compute_ops += ops
+        self.n_matmuls += 1
         self.compute_latency_s += dur
         # Energy scales with switched bit-width on a bit-sliced PE array.
         self.compute_energy_j += (
@@ -419,6 +421,7 @@ class CostLedger:
             "total_energy_j": self.total_energy_j,
             "n_flash_transfers": self.n_flash_transfers,
             "n_dram_transfers": self.n_dram_transfers,
+            "n_matmuls": self.n_matmuls,
             "n_prefetch_fills": self.n_prefetch_fills,
             "prefetch_flash_bytes": self.prefetch_flash_bytes,
             "prefetch_wasted_energy_j": self.prefetch_wasted_energy_j,
@@ -465,6 +468,7 @@ class CostLedger:
             setattr(self, f, 0.0)
         self.n_flash_transfers = 0
         self.n_dram_transfers = 0
+        self.n_matmuls = 0
         self.n_prefetch_fills = 0
         self.n_ici_transfers = 0
         self.n_migrations = 0

@@ -31,7 +31,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, SHAPES, get_config

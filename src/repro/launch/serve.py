@@ -49,7 +49,10 @@ from repro.serving.server import Request, SliceMoEServer
 DEFAULT_KNOBS = {
     "high_bits": 8, "low_bits": 4, "cache_bytes": 4.0e6,
     "policy_kind": "cache_prior", "slice_mode": "dbsc", "theta": 0.5,
+    "fetch_lsb_on_miss": True,
     "miss_rate_target": 0.05, "warmup": "pcw", "async_io": False,
+    "lsb_keep_frac": 0.125, "system": "mobile_soc", "fused_slices": False,
+    "hotness_request_decay": 0.5,
     "ep_shards": 1, "controller": None,
     "prefetch_top_m": None, "prefetch_kind": "request",
     "prefetch_lookahead": 2, "prefetch_min_obs": 0,
@@ -88,9 +91,14 @@ def cli_engine_knobs(args) -> dict:
         "policy_kind": args.routing,
         "slice_mode": args.slice_mode,
         "theta": args.theta,
+        "fetch_lsb_on_miss": args.fetch_lsb_on_miss,
         "miss_rate_target": args.miss_target,
         "warmup": args.warmup,
         "async_io": args.async_io,
+        "lsb_keep_frac": args.lsb_keep_frac,
+        "system": args.system,
+        "fused_slices": args.fused_slices,
+        "hotness_request_decay": args.hotness_request_decay,
         "ep_shards": args.ep_shards,
         "controller": parse_controller(args.controller),
         "prefetch_top_m": args.prefetch_top_m,
@@ -112,10 +120,15 @@ def build_engine_config(args) -> EngineConfig:
         cache_bytes=k["cache_bytes"],
         policy=RoutingPolicy(kind=k["policy_kind"],
                              slice_mode=k["slice_mode"],
-                             theta=k["theta"]),
+                             theta=k["theta"],
+                             fetch_lsb_on_miss=k["fetch_lsb_on_miss"]),
         miss_rate_target=k["miss_rate_target"],
         warmup=k["warmup"],
         async_io=k["async_io"],
+        lsb_keep_frac=k["lsb_keep_frac"],
+        system=k["system"],
+        fused_slices=k["fused_slices"],
+        hotness_request_decay=k["hotness_request_decay"],
         ep_shards=k["ep_shards"],
         controller=k["controller"],
         prefetch_top_m=k["prefetch_top_m"],
@@ -187,8 +200,27 @@ def main():
     ap.add_argument("--high-bits", type=int, default=None)
     ap.add_argument("--low-bits", type=int, default=None)
     ap.add_argument("--theta", type=float, default=None)
+    ap.add_argument("--fetch-lsb-on-miss",
+                    action=argparse.BooleanOptionalAction, default=None,
+                    help="fetch the LSB slice on an LSB miss; "
+                         "--no-fetch-lsb-on-miss degrades the expert to "
+                         "MSB-only compute instead (live default: fetch)")
     ap.add_argument("--miss-target", type=float, default=None,
                     help="miss-rate constraint (live default 0.05)")
+    ap.add_argument("--lsb-keep-frac", type=float, default=None,
+                    help="fraction of experts whose LSB slice PCW warmup "
+                         "retains (live default 0.125)")
+    ap.add_argument("--system", default=None,
+                    help="hardware system profile from repro.hw.specs."
+                         "SYSTEM_PROFILES (live default 'mobile_soc')")
+    ap.add_argument("--fused-slices",
+                    action=argparse.BooleanOptionalAction, default=None,
+                    help="whole-expert caching: move MSB+LSB together "
+                         "(high-bit baseline; live default: split slices)")
+    ap.add_argument("--hotness-request-decay", type=float, default=None,
+                    help="cross-request hotness aging factor applied at "
+                         "each request boundary, 1.0 = never forget "
+                         "(live default 0.5)")
     ap.add_argument("--async-io", action=argparse.BooleanOptionalAction,
                     default=None,
                     help="asynchronous slice-I/O decode timeline "

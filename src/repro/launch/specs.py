@@ -17,12 +17,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.launch.sharding import (param_shardings, param_spec,
-                                   sanitize_spec, tree_paths)
+from repro.launch.sharding import param_spec, sanitize_spec, tree_paths
 from repro.models import model as MDL
 from repro.optim.adamw import AdamWConfig
 

@@ -8,7 +8,6 @@ decode on dense archs, AMAT-quantized expert decode as an option.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

@@ -10,7 +10,6 @@ IS the production launcher — the container just has a 1x1 mesh.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 
@@ -18,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import SHAPES, ShapeConfig, get_config
+from repro.configs.base import get_config
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch import sharding as SH
 from repro.launch.mesh import make_host_mesh, make_production_mesh

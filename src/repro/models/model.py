@@ -24,7 +24,7 @@ Public entry points:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

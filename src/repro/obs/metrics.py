@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import json
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
            "MetricsSampler", "DEFAULT_BUCKETS"]

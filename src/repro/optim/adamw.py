@@ -10,7 +10,6 @@ three more copies of the param tree).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax

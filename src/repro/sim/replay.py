@@ -41,7 +41,6 @@ from repro.core.amat import MatConfig, slice_nbytes
 from repro.core.engine import EngineConfig, PersistentEngine, _StepTrace
 from repro.core.slices import SliceKey
 from repro.core.warmup import HotnessTracker
-from repro.hw.energy import CostLedger
 from repro.hw.specs import SYSTEM_PROFILES
 from repro.models.moe import RoutingPolicy
 from repro.sim.trace import Trace, TraceMeta
@@ -453,8 +452,11 @@ class ReplayEngine(PersistentEngine):
         new.slo_controller = copy.deepcopy(self.slo_controller)
         new.recorder = None
         new.tracer = None   # ledger.clone() already detached its sink
+        # moe_positions rides along: it is never mutated today, but a
+        # shared list is one in-place edit away from cross-fork bleed.
         for f in ("_miss_curve", "_energy_curve", "_alpha_curve",
-                  "_per_tenant_rows", "migration_events"):
+                  "_per_tenant_rows", "migration_events",
+                  "moe_positions"):
             setattr(new, f, list(getattr(self, f)))
         return new
 

@@ -6,10 +6,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.amat import (MAT42, MAT63, MAT84, PAPER_CONFIGS, MatConfig,
-                             amat_quantize, dequant_high, dequant_low,
-                             dequant_mixed, lsb_slice, msb_slice,
-                             reconstruct, truncate)
+from repro.core.amat import (MAT84, PAPER_CONFIGS, MatConfig, amat_quantize,
+                             dequant_high, dequant_low, dequant_mixed,
+                             lsb_slice, msb_slice, reconstruct, truncate)
 from repro.quant.groupquant import (dequantize, quantization_error, quantize)
 
 

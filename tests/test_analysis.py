@@ -1,0 +1,498 @@
+"""slicelint (repro.analysis): rule fixtures, baseline semantics, CLI.
+
+Each rule gets a known-bad fixture (the seeded violation MUST be caught)
+and a known-good twin (the fixed form MUST pass) — the static half of
+the ISSUE-10 acceptance gate.  The regression tests at the bottom pin
+the real violations the first slicelint run surfaced in src/repro.
+"""
+
+from __future__ import annotations
+
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Baseline, lint_paths
+from repro.analysis.__main__ import main as slicelint_main
+
+
+def write_tree(root: Path, files: dict) -> None:
+    for rel, body in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(body))
+
+
+def lint(root: Path, rules=None):
+    return lint_paths([root], root, rules=rules)
+
+
+def rule_ids(findings):
+    return {f.rule for f in findings}
+
+
+# --------------------------------------------------------------- purity
+
+PURITY_BAD = {
+    "core/engine.py": """
+        import time
+        import numpy as np
+
+        def charge(issued, demand):
+            t0 = time.perf_counter()
+            rng = np.random.default_rng()
+            demanded = set(int(e) for e in demand)
+            for e in issued - demanded:
+                print(e)
+            return t0, rng
+    """,
+}
+
+PURITY_GOOD = {
+    "core/engine.py": """
+        import numpy as np
+
+        def charge(issued, demand, now, seed):
+            rng = np.random.default_rng(seed)
+            demanded = set(int(e) for e in demand)
+            if 3 in demanded:            # membership is order-free: fine
+                pass
+            for e in sorted(issued - demanded):
+                print(e)
+            return now, rng
+    """,
+}
+
+
+def test_purity_bad_fixture_fires(tmp_path):
+    write_tree(tmp_path, PURITY_BAD)
+    findings = lint(tmp_path, rules=["purity"])
+    idents = {f.ident for f in findings}
+    assert any("wall-clock" in i for i in idents), idents
+    assert any("unseeded-rng" in i for i in idents), idents
+    assert any("set-order" in i for i in idents), idents
+
+
+def test_purity_good_fixture_clean(tmp_path):
+    write_tree(tmp_path, PURITY_GOOD)
+    assert lint(tmp_path, rules=["purity"]) == []
+
+
+def test_purity_ignores_non_charge_path_modules(tmp_path):
+    # Same offending code outside the charge-path module list: no rule.
+    write_tree(tmp_path, {"launch/serve.py":
+                          PURITY_BAD["core/engine.py"]})
+    assert lint(tmp_path, rules=["purity"]) == []
+
+
+def test_purity_allows_id_in_hash_only(tmp_path):
+    write_tree(tmp_path, {"core/placement.py": """
+        class PlacementMap:
+            def __hash__(self):
+                return id(self)
+
+            def lookup(self, table):
+                return table[id(self)]
+    """})
+    findings = lint(tmp_path, rules=["purity"])
+    assert [f.ident for f in findings] == ["PlacementMap.lookup:id-call"]
+
+
+# ---------------------------------------------------------------- clone
+
+CLONE_BAD = {
+    "sim/replay.py": """
+        class Engine:
+            def __init__(self):
+                self.curve = []
+                self.pending = {}
+                self.name = "x"          # immutable: not demanded
+
+            def clone(self):
+                new = Engine()
+                new.curve = list(self.curve)
+                return new               # pending is shared!
+    """,
+}
+
+CLONE_GOOD_DEEPCOPY = {
+    "sim/replay.py": """
+        import copy
+
+        class Engine:
+            def __init__(self):
+                self.curve = []
+                self.pending = {}
+
+            def clone(self):
+                return copy.deepcopy(self)
+    """,
+}
+
+CLONE_GOOD_SETATTR_LOOP = {
+    "sim/replay.py": """
+        class Engine:
+            def __init__(self):
+                self.curve = []
+                self.pending = {}
+
+            def clone(self):
+                new = object.__new__(Engine)
+                new.__dict__.update(self.__dict__)
+                new.pending = dict(self.pending)
+                for f in ("curve",):
+                    setattr(new, f, list(getattr(self, f)))
+                return new
+    """,
+}
+
+
+def test_clone_bad_fixture_fires(tmp_path):
+    write_tree(tmp_path, CLONE_BAD)
+    findings = lint(tmp_path, rules=["clone"])
+    assert [f.ident for f in findings] == ["Engine.pending"]
+
+
+def test_clone_good_fixtures_clean(tmp_path):
+    for fixture in (CLONE_GOOD_DEEPCOPY, CLONE_GOOD_SETATTR_LOOP):
+        for p in tmp_path.rglob("*.py"):
+            p.unlink()
+        write_tree(tmp_path, fixture)
+        assert lint(tmp_path, rules=["clone"]) == []
+
+
+# --------------------------------------------------------------- ledger
+
+LEDGER_BAD = {
+    "hw/energy.py": """
+        class CostLedger:
+            flash_bytes: float = 0.0
+            n_flash_transfers: int = 0
+            n_orphan: int = 0            # missing from snapshot + reset
+
+            def fill_at(self, t, nbytes):
+                # charges the channel but pairs no counter/accumulator
+                return self.flash_ch.issue(t, nbytes)
+
+            def snapshot(self):
+                return {
+                    "flash_bytes": self.flash_bytes,
+                    "n_flash_transfers": self.n_flash_transfers,
+                }
+
+            def reset(self):
+                self.flash_bytes = 0.0
+                self.n_flash_transfers = 0
+    """,
+    "core/engine.py": """
+        def charge(led):
+            led.fill_at(0.0, 4.0)
+            led.bogus_at(0.0, 4.0)       # not a CostLedger method
+    """,
+}
+
+LEDGER_GOOD = {
+    "hw/energy.py": """
+        class CostLedger:
+            flash_bytes: float = 0.0
+            n_flash_transfers: int = 0
+
+            def fill_at(self, t, nbytes):
+                self.flash_bytes += nbytes
+                self.n_flash_transfers += 1
+                return self.flash_ch.issue(t, nbytes)
+
+            def miss_fill(self, nbytes):
+                # delegation inherits fill_at's counters: clean
+                self.fill_at(0.0, nbytes)
+
+            def snapshot(self):
+                return {
+                    "flash_bytes": self.flash_bytes,
+                    "n_flash_transfers": self.n_flash_transfers,
+                }
+
+            def reset(self):
+                self.flash_bytes = 0.0
+                self.n_flash_transfers = 0
+    """,
+    "core/engine.py": """
+        def charge(led):
+            led.fill_at(0.0, 4.0)
+            led.miss_fill(4.0)
+    """,
+}
+
+
+def test_ledger_bad_fixture_fires(tmp_path):
+    write_tree(tmp_path, LEDGER_BAD)
+    idents = {f.ident for f in lint(tmp_path, rules=["ledger"])}
+    assert "CostLedger.fill_at:no-counter" in idents
+    assert "CostLedger.fill_at:no-accumulator" in idents
+    assert "CostLedger.n_orphan:not-in-snapshot" in idents
+    assert "CostLedger.n_orphan:not-in-reset" in idents
+    assert any(i.startswith("call:led.bogus_at") for i in idents), idents
+    # the known call site is NOT flagged
+    assert not any("fill_at" in i for i in idents if i.startswith("call:"))
+
+
+def test_ledger_good_fixture_clean(tmp_path):
+    write_tree(tmp_path, LEDGER_GOOD)
+    assert lint(tmp_path, rules=["ledger"]) == []
+
+
+# ---------------------------------------------------------------- knobs
+
+KNOBS_BAD = {
+    "core/engine.py": """
+        class EngineConfig:
+            alpha: int = 1
+            beta: float = 0.5            # serialized nowhere
+    """,
+    "sim/trace.py": """
+        def engine_meta(engine):
+            return TraceMeta(engine={"alpha": engine.alpha})
+    """,
+    "launch/serve.py": """
+        DEFAULT_KNOBS = {"alpha": 1, "gamma": 2}
+
+        def cli_engine_knobs(args):
+            return {"alpha": args.alpha}
+    """,
+    "sim/replay.py": """
+        def engine_config_from_meta(meta, **overrides):
+            e = dict(meta.engine)
+            e.update(overrides)
+            return (e["alpha"],)
+    """,
+}
+
+KNOBS_GOOD = {
+    "core/engine.py": """
+        class EngineConfig:
+            alpha: int = 1
+            beta: float = 0.5
+    """,
+    "sim/trace.py": """
+        def engine_meta(engine):
+            return TraceMeta(engine={"alpha": engine.alpha,
+                                     "beta": engine.beta})
+    """,
+    "launch/serve.py": """
+        DEFAULT_KNOBS = {"alpha": 1, "beta": 0.5}
+
+        def cli_engine_knobs(args):
+            return {"alpha": args.alpha, "beta": args.beta}
+    """,
+    "sim/replay.py": """
+        def engine_config_from_meta(meta, **overrides):
+            e = dict(meta.engine)
+            e.update(overrides)
+            return (e["alpha"], e.get("beta", 0.5))
+    """,
+}
+
+
+def test_knobs_bad_fixture_fires(tmp_path):
+    write_tree(tmp_path, KNOBS_BAD)
+    idents = {f.ident for f in lint(tmp_path, rules=["knobs"])}
+    # beta reaches no surface: one finding per surface
+    assert {i for i in idents if i.startswith("beta:")} == {
+        "beta:missing-from:TraceMeta",
+        "beta:missing-from:serve.py",
+        "beta:missing-from:replay/autotune",
+    }
+    # DEFAULT_KNOBS and cli_engine_knobs disagree about gamma...
+    assert "cli-skew:gamma" in idents
+    # ...and gamma maps to no EngineConfig field at all.
+    assert "orphan:serve.py:gamma" in idents
+
+
+def test_knobs_good_fixture_clean(tmp_path):
+    write_tree(tmp_path, KNOBS_GOOD)
+    assert lint(tmp_path, rules=["knobs"]) == []
+
+
+# ------------------------------------------------- suppression + baseline
+
+def test_inline_suppression(tmp_path):
+    write_tree(tmp_path, {"core/engine.py": """
+        import time
+
+        def f():
+            return time.time()  # slicelint: ignore[purity] startup stamp
+    """})
+    assert lint(tmp_path, rules=["purity"]) == []
+    # ignore[*] works; ignore[other-rule] does not suppress
+    write_tree(tmp_path, {"core/engine.py": """
+        import time
+
+        def f():
+            return time.time()  # slicelint: ignore[clone]
+    """})
+    assert len(lint(tmp_path, rules=["purity"])) == 1
+
+
+def test_baseline_split_semantics(tmp_path):
+    write_tree(tmp_path, PURITY_BAD)
+    findings = lint(tmp_path, rules=["purity"])
+    assert findings
+    bl = Baseline({f.key: f.message for f in findings})
+
+    # everything baselined -> no new findings
+    new, baselined, stale = bl.split(findings)
+    assert new == [] and len(baselined) == len(findings) and stale == []
+
+    # removing one entry resurfaces exactly that finding as new
+    victim = findings[0]
+    del bl.entries[victim.key]
+    new, baselined, stale = bl.split(findings)
+    assert [f.key for f in new] == [victim.key]
+
+    # a stale entry (fixed violation) is reported for removal
+    bl.entries["purity::core/engine.py::gone"] = "old"
+    _, _, stale = bl.split(findings)
+    assert stale == ["purity::core/engine.py::gone"]
+
+
+def test_baseline_roundtrip_and_version_gate(tmp_path):
+    path = tmp_path / "bl.json"
+    Baseline({"k": "msg"}).save(path)
+    assert Baseline.load(path).entries == {"k": "msg"}
+    path.write_text(json.dumps({"version": 99, "findings": {}}))
+    with pytest.raises(ValueError):
+        Baseline.load(path)
+    assert Baseline.load(tmp_path / "missing.json").entries == {}
+
+
+# ------------------------------------------------------------------- CLI
+
+def cli(tmp_path, *argv):
+    return slicelint_main([str(tmp_path), "--root", str(tmp_path), *argv])
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    write_tree(tmp_path, PURITY_BAD)
+    (tmp_path / "pyproject.toml").write_text("")   # root marker
+
+    assert cli(tmp_path, "--rule", "purity") == 1  # new findings
+    out = capsys.readouterr().out
+    assert "[purity]" in out and "core/engine.py" in out
+
+    assert cli(tmp_path, "--rule", "purity", "--write-baseline") == 0
+    assert cli(tmp_path, "--rule", "purity") == 0  # all baselined
+    capsys.readouterr()
+
+    # fix the file -> baseline goes stale; --strict-baseline enforces
+    write_tree(tmp_path, PURITY_GOOD)
+    assert cli(tmp_path, "--rule", "purity") == 0
+    assert "stale" in capsys.readouterr().out
+    assert cli(tmp_path, "--rule", "purity", "--strict-baseline") == 1
+
+    assert cli(tmp_path, "--rule", "nope") == 2    # unknown rule
+    assert slicelint_main([str(tmp_path / "missing.py")]) == 2
+
+
+def test_cli_list_rules(capsys):
+    assert slicelint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("purity", "clone", "ledger", "knobs"):
+        assert rid in out
+
+
+def test_repo_tree_is_clean_against_committed_baseline():
+    """The ISSUE-10 acceptance gate, as a test: linting src/repro with
+    the committed baseline yields zero new findings."""
+    root = Path(__file__).resolve().parent.parent
+    findings = lint_paths([root / "src" / "repro"], root)
+    bl = Baseline.load(root / ".slicelint.json")
+    new, _, stale = bl.split(findings)
+    assert new == [], [f.render() for f in new]
+    assert stale == [], stale
+
+
+# ------------------------------------- regressions for the fixed findings
+
+def test_cost_ledger_counts_matmuls():
+    """[ledger] matmul_at charged compute without an event counter."""
+    from repro.hw.energy import CostLedger
+
+    led = CostLedger()
+    led.matmul(tokens=2, d_in=4, d_out=8, bits=8)
+    led.matmul_at(led.now, tokens=2, d_in=4, d_out=8, bits=4)
+    snap = led.snapshot()
+    assert snap["n_matmuls"] == 2
+    assert snap["compute_ops"] == pytest.approx(2 * 2.0 * 2 * 4 * 8)
+    led.reset()
+    assert led.n_matmuls == 0 and led.snapshot()["n_matmuls"] == 0
+
+
+def test_serve_cli_knob_parity_runtime():
+    """[knobs] serve.py dropped lsb_keep_frac / system / fused_slices /
+    hotness_request_decay / fetch_lsb_on_miss: a --replay-trace of a
+    run recorded with a non-default value silently reverted it.  The
+    CLI knob surface must now cover the trace header exactly."""
+    import dataclasses
+    from types import SimpleNamespace
+
+    from repro.core.engine import EngineConfig
+    from repro.launch.serve import (DEFAULT_KNOBS, build_engine_config,
+                                    cli_engine_knobs)
+    from repro.analysis.knobs import ALIASES, ALLOWLIST
+
+    flat = set()
+    for f in dataclasses.fields(EngineConfig):
+        if f.name not in ALLOWLIST:
+            flat |= ALIASES.get(f.name, {f.name})
+    assert set(DEFAULT_KNOBS) == flat
+
+    ns = SimpleNamespace(
+        cache_mb=None, routing=None, miss_target=None, controller=None,
+        **{k: None for k in DEFAULT_KNOBS
+           if k not in ("cache_bytes", "policy_kind", "miss_rate_target",
+                        "controller")})
+    knobs = cli_engine_knobs(ns)
+    assert set(knobs) == set(DEFAULT_KNOBS)
+
+    # all-defaults CLI builds the library-default config (knob defaults
+    # in DEFAULT_KNOBS that differ from EngineConfig defaults are the
+    # serving profile: cache size + miss target)
+    ecfg = build_engine_config(ns)
+    assert ecfg.lsb_keep_frac == EngineConfig().lsb_keep_frac
+    assert ecfg.system == EngineConfig().system
+    assert ecfg.fused_slices == EngineConfig().fused_slices
+    assert ecfg.hotness_request_decay == EngineConfig().hotness_request_decay
+    assert ecfg.policy.fetch_lsb_on_miss == \
+        EngineConfig().policy.fetch_lsb_on_miss
+
+
+def test_replay_clone_forks_moe_positions():
+    """[clone] ReplayEngine.clone shared the moe_positions list with its
+    parent; one in-place edit would have bled across forks."""
+    from repro.sim import Trace
+    from repro.sim.replay import ReplayEngine
+
+    trace = Trace.load(str(
+        Path(__file__).resolve().parent / "data" / "golden_trace.npz"))
+    eng = ReplayEngine(trace.meta)
+    fork = eng.clone()
+    assert fork.moe_positions == eng.moe_positions
+    assert fork.moe_positions is not eng.moe_positions
+
+
+def test_charge_path_set_iteration_is_sorted():
+    """[purity] the sync prefetch-judgment loop iterated a raw int set;
+    set order is an implementation detail of the hash table, so the
+    ledger's wasted-prefetch charge *sequence* (and any tracer capture
+    of it) depended on interpreter internals rather than on the trace.
+    The static rule now pins the loop to sorted() — assert the pattern
+    stays dead in the charge-path modules."""
+    from repro.analysis import lint_paths as lp
+
+    root = Path(__file__).resolve().parent.parent
+    findings = [f for f in lp([root / "src" / "repro"], root,
+                              rules=["purity"])
+                if "set-order" in f.ident]
+    assert findings == [], [f.render() for f in findings]

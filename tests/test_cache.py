@@ -1,6 +1,5 @@
 """SliceCache: LRU semantics, DBSC LSB-first eviction, capacity invariants."""
 
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

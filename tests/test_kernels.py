@@ -11,14 +11,13 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.amat import PAPER_CONFIGS, amat_quantize
 from repro.kernels.amat_matmul.kernel import amat_matmul_pallas
-from repro.kernels.amat_matmul.ops import (amat_expert_matmul,
-                                           amat_expert_matmul_qt,
+from repro.kernels.amat_matmul.ops import (amat_expert_matmul_qt,
                                            amat_expert_matmul_t,
                                            amat_matmul, amat_matmul_qt)
 from repro.kernels.amat_matmul.ref import (amat_batched_matmul_ref,
                                            amat_batched_matmul_t_ref,
                                            amat_matmul_ref)
-from repro.kernels.expert_matmul.ops import expert_matmul, expert_matmul_qt
+from repro.kernels.expert_matmul.ops import expert_matmul_qt
 from repro.kernels.expert_matmul.ref import expert_matmul_ref
 from repro.quant.groupquant import quantize
 

@@ -14,7 +14,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.amat import MAT84, amat_quantize
 from repro.models.moe import (MoECfg, RoutingPolicy, capacity, combine,
                               dispatch, dispatch_indices, moe_apply,
-                              moe_param_shapes, router_probs, topk_select)
+                              moe_param_shapes, topk_select)
 
 
 def _params(key, d, cfg: MoECfg):

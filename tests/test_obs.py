@@ -16,8 +16,7 @@ import numpy as np
 import pytest
 
 from repro.hw.energy import ShardedCostLedger
-from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
-                       MetricsSampler, TimelineTracer, TraceEvent,
+from repro.obs import (MetricsRegistry, MetricsSampler, TimelineTracer,
                        chrome_trace, events_equal, export_chrome_trace,
                        first_divergence, format_trace_report, load_trace,
                        trace_report)
@@ -74,6 +73,7 @@ def test_event_conservation(over):
     assert kinds.get("fill", 0) + kinds.get("prefetch_fill", 0) \
         == snap["n_flash_transfers"]
     assert kinds.get("dram_read", 0) == snap["n_dram_transfers"]
+    assert kinds.get("matmul", 0) == snap["n_matmuls"]
     assert kinds.get("a2a", 0) + kinds.get("migrate", 0) \
         == snap["n_ici_transfers"]
     fill_bytes = sum(e.nbytes for e in trc.events

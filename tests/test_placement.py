@@ -27,7 +27,7 @@ import pathlib
 import numpy as np
 import pytest
 
-from repro.core.cache import CacheStats, SliceCache
+from repro.core.cache import CacheStats
 from repro.core.placement import (HotnessPlacement, PlacementMap,
                                   RoundRobinPlacement,
                                   build_placement_policy,

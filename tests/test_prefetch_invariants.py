@@ -27,13 +27,11 @@ installs tests/_hypothesis_compat.py (same API, fixed-seed examples).
 """
 
 import numpy as np
-import pytest
 
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.prefetch import (ActivationPredictor, RequestPrefetcher,
-                                 TransitionPrefetcher)
+from repro.core.prefetch import RequestPrefetcher, TransitionPrefetcher
 from repro.core.slices import SliceKey
 from repro.sim import ReplayEngine, SyntheticSpec, replay_trace, zipf_trace
 

@@ -27,7 +27,6 @@ from repro.control import ControllerConfig, TenantSLO
 from repro.core.engine import _StepTrace
 from repro.core.prefetch import RequestPrefetcher
 from repro.core.shard import shard_of_expert
-from repro.core.slices import SliceKey
 from repro.sim import (ReplayEngine, SyntheticSpec, replay_trace,
                        tenant_phase_trace, zipf_trace)
 

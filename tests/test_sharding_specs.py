@@ -1,13 +1,12 @@
 """Sharding rules + spec/init consistency (the dry-run's foundation)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.base import ARCH_IDS, SHAPES, get_config
 from repro.launch.mesh import make_host_mesh
-from repro.launch.sharding import param_spec, sanitize_spec, tree_paths
+from repro.launch.sharding import param_spec, sanitize_spec
 from repro.launch.specs import batch_specs, cache_specs, param_specs
 from repro.models import model as MDL
 

@@ -6,7 +6,6 @@ For EVERY assigned architecture: instantiate the REDUCED variant
 the absence of NaNs.  Full configs are exercised only via the dry-run.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,12 +1,9 @@
 """Data pipeline / optimizer / checkpoint substrates."""
 
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import ckpt as CKPT
 from repro.data.pipeline import DataConfig, SyntheticLM

@@ -1,6 +1,5 @@
 """PCW warmup + SliceMoE engine integration (the paper's core claims)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
